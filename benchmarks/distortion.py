@@ -1,0 +1,64 @@
+"""Paper Fig. 1: distortion ratio D(f, X) = | ||f(X)||^2 / ||X||^2 - 1 |
+vs embedding size k, for small/medium/high-order inputs, TT vs CP vs
+Gaussian (small order) vs very-sparse (medium order)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (GaussianRP, VerySparseRP, random_tt, sample_cp_rp,
+                        sample_tt_rp)
+
+CASES = {
+    "small":  dict(d=15, N=3),
+    "medium": dict(d=3, N=12),
+    "high":   dict(d=3, N=25),
+}
+TT_RANKS = (2, 5, 10)
+CP_RANKS = (4, 25, 100)
+
+
+def distortion_table(case: str, ks=(16, 64, 256, 1024), trials=20,
+                     seed=0) -> list[dict]:
+    info = CASES[case]
+    dims = (info["d"],) * info["N"]
+    x = random_tt(jax.random.PRNGKey(seed), dims, 10, norm="unit")
+    xd = x.full() if case == "small" else None
+    xflat = xd.reshape(-1) if xd is not None else None
+    rows = []
+
+    def mc(project):
+        ds = []
+        for t in range(trials):
+            y = project(jax.random.PRNGKey(1000 + t))
+            ds.append(abs(float(jnp.sum(y * y)) - 1.0))
+        return float(np.mean(ds)), float(np.std(ds))
+
+    for k in ks:
+        for r in TT_RANKS:
+            m, s = mc(lambda kk: sample_tt_rp(kk, dims, k, r).project_tt(x))
+            rows.append(dict(case=case, map=f"TT({r})", k=k, mean=m, std=s))
+        for r in CP_RANKS:
+            m, s = mc(lambda kk: sample_cp_rp(kk, dims, k, r).project_tt(x))
+            rows.append(dict(case=case, map=f"CP({r})", k=k, mean=m, std=s))
+        if case == "small":
+            m, s = mc(lambda kk: GaussianRP(kk, k, xflat.size).project(xflat))
+            rows.append(dict(case=case, map="Gaussian", k=k, mean=m, std=s))
+        if case == "medium" and k <= 256:
+            xm = x.full().reshape(-1)
+            m, s = mc(lambda kk: VerySparseRP(kk, k, xm.size).project(xm))
+            rows.append(dict(case=case, map="VerySparse", k=k, mean=m, std=s))
+    return rows
+
+
+def run(fast=True):
+    from ._util import csv_row
+    ks = (16, 64, 256) if fast else (16, 64, 256, 1024)
+    trials = 10 if fast else 50
+    all_rows = []
+    for case in CASES:
+        rows = distortion_table(case, ks=ks, trials=trials)
+        all_rows += rows
+        for r in rows:
+            csv_row(f"distortion/{case}/{r['map']}/k={r['k']}", 0.0,
+                    f"mean={r['mean']:.4f};std={r['std']:.4f}")
+    return all_rows

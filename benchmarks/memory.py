@@ -1,0 +1,29 @@
+"""Paper Sec. 1/3 memory claims: operator parameter counts across orders,
+plus the MXU-aligned gradient-bucket regime used by the compressor."""
+from repro.core import theory
+
+from ._util import csv_row
+
+
+def run(fast=True):
+    rows = []
+    k = 1024
+    for (d, N, label) in [(15, 3, "small"), (3, 12, "medium"),
+                          (3, 25, "high")]:
+        dims = (d,) * N
+        for r in (2, 5, 10):
+            rows.append(csv_row(f"memory/{label}/TT({r})", 0.0,
+                                f"params={theory.params_tt_rp(k, dims, r)}"))
+        for r in (4, 25, 100):
+            rows.append(csv_row(f"memory/{label}/CP({r})", 0.0,
+                                f"params={theory.params_cp_rp(k, dims, r)}"))
+        rows.append(csv_row(f"memory/{label}/Gaussian", 0.0,
+                            f"params={theory.params_gaussian_rp(k, dims)}"))
+        rows.append(csv_row(f"memory/{label}/VerySparse", 0.0,
+                            f"params={theory.params_sparse_rp(k, dims)}"))
+    # gradient-bucket regime (1M-elem buckets, k=4096)
+    dims = (128, 128, 64)
+    rows.append(csv_row("memory/bucket1M/TT(2)", 0.0,
+                        f"params={theory.params_tt_rp(4096, dims, 2)};"
+                        f"dense={theory.params_gaussian_rp(4096, dims)}"))
+    return rows

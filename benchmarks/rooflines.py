@@ -1,0 +1,29 @@
+"""Aggregates the dry-run sweep JSONs into the roofline table used by
+EXPERIMENTS.md (§Dry-run / §Roofline)."""
+import json
+import pathlib
+
+from ._util import csv_row
+
+
+def run(fast=True, out_dir="experiments/dryrun"):
+    rows = []
+    p = pathlib.Path(out_dir)
+    if not p.exists():
+        csv_row("roofline/none", 0.0, "run launch/sweep.sh first")
+        return rows
+    for f in sorted(p.glob("*.json")):
+        cell = json.loads(f.read_text())
+        if cell.get("status") == "skip":
+            rows.append(csv_row(f"roofline/{f.stem}", 0.0, "SKIP"))
+            continue
+        r = cell["roofline"]
+        dom = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        frac = r["compute_s"] / dom if dom else 0.0
+        rows.append(csv_row(
+            f"roofline/{f.stem}", 0.0,
+            f"compute={r['compute_s']:.4f}s;memory={r['memory_s']:.4f}s;"
+            f"collective={r['collective_s']:.4f}s;"
+            f"bottleneck={r['bottleneck']};roofline_frac={frac:.3f};"
+            f"useful={r['useful_flops_frac']:.3f}"))
+    return rows

@@ -1,0 +1,33 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. `--full` uses paper-scale trial
+counts (slow on CPU); default is a faithful but reduced sweep.
+"""
+import argparse
+import sys
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma list: distortion,timing,pairwise,memory,"
+                         "variance,gradcomp,rooflines")
+    args = ap.parse_args(argv)
+    fast = not args.full
+    from . import (distortion, gradcomp, memory, pairwise, rooflines, timing,
+                   variance)
+    mods = {
+        "memory": memory, "variance": variance, "distortion": distortion,
+        "timing": timing, "pairwise": pairwise, "gradcomp": gradcomp,
+        "rooflines": rooflines,
+    }
+    wanted = args.only.split(",") if args.only else list(mods)
+    print("name,us_per_call,derived")
+    for name in wanted:
+        print(f"# --- {name} ---", flush=True)
+        mods[name].run(fast=fast)
+
+
+if __name__ == "__main__":
+    main()

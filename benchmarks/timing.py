@@ -1,0 +1,53 @@
+"""Paper Fig. 2 + App. B.2: embedding time for medium-order inputs given in
+TT or CP format, across the map family (TT/CP/sparse/dense)."""
+import jax
+
+from repro.core import (GaussianRP, VerySparseRP, random_cp, random_tt,
+                        sample_cp_rp, sample_tt_rp)
+
+from ._util import csv_row, time_call
+
+
+def run(fast=True):
+    d, N = 3, 12 if fast else 12
+    dims = (d,) * N
+    D = d ** N
+    k = 256
+    key = jax.random.PRNGKey(0)
+    x_tt = random_tt(key, dims, 10, norm="unit")
+    x_cp = random_cp(key, dims, 10, norm="unit")
+    x_dense = x_tt.full().reshape(-1)
+    tt_op = sample_tt_rp(jax.random.fold_in(key, 1), dims, k, 5)
+    cp_op = sample_cp_rp(jax.random.fold_in(key, 2), dims, k, 25)
+    sparse = VerySparseRP(jax.random.fold_in(key, 3), k, D)
+    rows = []
+
+    f = jax.jit(lambda t: tt_op.project_tt(t))
+    rows.append(csv_row("time/medium/TT(5)/input=TT", time_call(f, x_tt),
+                        f"k={k};D={D}"))
+    f = jax.jit(lambda t: cp_op.project_tt(t))
+    rows.append(csv_row("time/medium/CP(25)/input=TT", time_call(f, x_tt),
+                        f"k={k};D={D}"))
+    f = jax.jit(lambda t: tt_op.project_cp(t))
+    rows.append(csv_row("time/medium/TT(5)/input=CP", time_call(f, x_cp),
+                        f"k={k};D={D}"))
+    f = jax.jit(lambda t: cp_op.project_cp(t))
+    rows.append(csv_row("time/medium/CP(25)/input=CP", time_call(f, x_cp),
+                        f"k={k};D={D}"))
+    f = jax.jit(lambda v: sparse.project(v))
+    rows.append(csv_row("time/medium/VerySparse/input=dense",
+                        time_call(f, x_dense), f"k={k};D={D}"))
+    dense = GaussianRP(jax.random.fold_in(key, 4), k, D)
+    f = jax.jit(lambda v: dense.project(v))
+    rows.append(csv_row("time/medium/Gaussian/input=dense",
+                        time_call(f, x_dense), f"k={k};D={D}"))
+
+    # App B.2: scaling in N (input dim d^N)
+    for n in ((8, 11, 12) if fast else (8, 11, 12, 13)):
+        dims_n = (3,) * n
+        x_n = random_tt(jax.random.fold_in(key, n), dims_n, 10)
+        op_n = sample_tt_rp(jax.random.fold_in(key, 100 + n), dims_n, k, 5)
+        f = jax.jit(lambda t: op_n.project_tt(t))
+        rows.append(csv_row(f"time/scaling/TT(5)/N={n}", time_call(f, x_n),
+                            f"D={3**n}"))
+    return rows

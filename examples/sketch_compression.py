@@ -1,0 +1,55 @@
+"""Beyond-paper demo: TT-sketch gradient compression with error feedback.
+
+Compares uncompressed vs sketched+EF training on a small LM and reports the
+bytes that would cross the slow cross-pod link per step.
+
+Run: PYTHONPATH=src python examples/sketch_compression.py
+"""
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced
+from repro.core.sketch import SketchConfig
+from repro.data import DataConfig, SyntheticLM
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_host_mesh
+from repro.models import build_model
+from repro.models.config import ShapeSpec
+from repro.optim import schedule
+from repro.optim.compress import SketchCompressor
+
+cfg = reduced(get_config("llama3.2-3b"))
+model = build_model(cfg)
+mesh = make_host_mesh()
+shape = ShapeSpec("t", 64, 8, "train")
+data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=64, global_batch=8))
+lr = functools.partial(schedule.constant, peak_lr=3e-3)
+
+
+def run(compressor, steps=80):
+    with mesh:
+        b = steps_lib.build_train_step(model, mesh, shape, lr_fn=lr,
+                                       compressor=compressor)
+        state = steps_lib.init_train_state(model, jax.random.PRNGKey(0),
+                                           compressor=compressor)
+        last = {}
+        for i in range(steps):
+            state, m = b.fn(state, jax.tree.map(jnp.asarray, data.batch(i)))
+            last = m
+        return last
+
+
+base = run(None)
+scfg = SketchConfig(fmt="tt", k=128, rank=8, bucket_elems=4 * 8 * 16,
+                    dims=(4, 8, 16))  # 4x fewer bytes on the wire
+comp = SketchCompressor(scfg)
+smet = run(comp)
+print(f"uncompressed final loss : {float(base['loss']):.4f}")
+print(f"sketched+EF  final loss : {float(smet['loss']):.4f}")
+print(f"link bytes per step     : dense {int(smet['dense_bytes']):,} -> "
+      f"sketch {int(smet['sketch_bytes']):,}")
+print(f"EF residual norm        : {float(smet['residual_norm']):.3f} (bounded)")
+print(f"Thm-1 shrinkage alpha   : {scfg.shrinkage():.4f}")

@@ -1,0 +1,10 @@
+"""qwen1.5-110b [dense] — QKV bias (hf:Qwen/Qwen1.5-0.5B; hf).
+80L d_model=8192 64H (GQA kv=8) d_ff=49152 vocab=152064."""
+from repro.models.config import ArchConfig, lm_shapes
+
+CONFIG = ArchConfig(
+    name="qwen1.5-110b", family="decoder",
+    n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8, head_dim=128,
+    d_ff=49152, vocab=152064, qkv_bias=True, rope_theta=1_000_000.0,
+    shapes=lm_shapes(long_ok=False),
+)

@@ -1,0 +1,21 @@
+"""repro.core — Tensorized Random Projections (Rakhshan & Rabusseau, AISTATS 2020).
+
+Faithful implementation of the paper's two maps (Definitions 1 & 2) plus the
+baselines it compares against and the sketching infrastructure built on top.
+"""
+from .baselines import GaussianRP, VerySparseRP
+from .cp_rp import CPRP, sample_cp_rp, trp_average, trp_project
+from .formats import (CPTensor, TTTensor, auto_dims, cp_inner, dense_inner,
+                      pad_to_tensorizable, random_cp, random_tt, tensorize,
+                      tt_cp_inner, tt_inner, tt_svd)
+from .sketch import PytreeSketcher, SketchConfig, SketchMonitor
+from .tt_rp import TTRP, sample_tt_rp
+from . import theory
+
+__all__ = [
+    "CPRP", "CPTensor", "GaussianRP", "PytreeSketcher", "SketchConfig",
+    "SketchMonitor", "TTRP", "TTTensor", "VerySparseRP", "auto_dims",
+    "cp_inner", "dense_inner", "pad_to_tensorizable", "random_cp", "random_tt",
+    "sample_cp_rp", "sample_tt_rp", "tensorize", "theory", "trp_average",
+    "trp_project", "tt_cp_inner", "tt_inner", "tt_svd",
+]

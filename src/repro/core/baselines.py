@@ -1,0 +1,99 @@
+"""Dense Gaussian RP and very-sparse RP (Li, Hastie & Church 2006) baselines.
+
+Both are implemented streaming-over-column-blocks so the k x D matrix is never
+fully materialized for large D (the paper could not run them at high order for
+exactly this reason — we keep the memory honest and report it).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class GaussianRP:
+    """Classical JLT: y = A x / sqrt(k), A_ij ~ N(0, 1)."""
+
+    key: jax.Array
+    k: int
+    dim: int
+    block: int = 65536
+
+    def num_params(self) -> int:
+        return self.k * self.dim
+
+    def project(self, x: jnp.ndarray) -> jnp.ndarray:
+        assert x.shape[-1] == self.dim
+        n_blocks = -(-self.dim // self.block)
+        pad = n_blocks * self.block - self.dim
+        xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+        xb = xp.reshape(x.shape[:-1] + (n_blocks, self.block))
+
+        def body(acc, args):
+            b, xblk = args
+            a = jax.random.normal(jax.random.fold_in(self.key, b),
+                                  (self.block, self.k), dtype=x.dtype)
+            return acc + xblk @ a, None
+
+        init = jnp.zeros(x.shape[:-1] + (self.k,), x.dtype)
+        xb_m = jnp.moveaxis(xb, -2, 0)  # (n_blocks, *batch, block)
+        out, _ = jax.lax.scan(body, init, (jnp.arange(n_blocks), xb_m))
+        return out / jnp.sqrt(jnp.asarray(self.k, x.dtype))
+
+    def materialize(self) -> jnp.ndarray:
+        """Dense (k, D) matrix — small-order cases only."""
+        n_blocks = -(-self.dim // self.block)
+        blocks = [
+            jax.random.normal(jax.random.fold_in(self.key, b), (self.block, self.k))
+            for b in range(n_blocks)
+        ]
+        a = jnp.concatenate(blocks, axis=0)[: self.dim]
+        return a.T / jnp.sqrt(jnp.asarray(self.k, a.dtype))
+
+
+@dataclasses.dataclass(frozen=True)
+class VerySparseRP:
+    """Li et al. 2006: A_ij = +sqrt(s) w.p. 1/2s, 0 w.p. 1-1/s, -sqrt(s) w.p. 1/2s.
+
+    Default s = sqrt(D) ("very sparse"), giving ~k*sqrt(D) expected nonzeros.
+    E[A_ij^2] = 1, so y = A x / sqrt(k) is an expected isometry.
+    """
+
+    key: jax.Array
+    k: int
+    dim: int
+    s: float | None = None
+    block: int = 65536
+
+    @property
+    def sparsity(self) -> float:
+        return float(self.s) if self.s is not None else math.sqrt(self.dim)
+
+    def num_params(self) -> int:
+        """Expected nonzeros (index+value storage in a real implementation)."""
+        return int(self.k * self.dim / self.sparsity)
+
+    def _block_mat(self, b: int, dtype) -> jnp.ndarray:
+        s = self.sparsity
+        kk = jax.random.fold_in(self.key, b)
+        u = jax.random.uniform(kk, (self.block, self.k))
+        sign = jnp.where(u < 0.5 / s, 1.0, jnp.where(u > 1.0 - 0.5 / s, -1.0, 0.0))
+        return (sign * jnp.sqrt(s)).astype(dtype)
+
+    def project(self, x: jnp.ndarray) -> jnp.ndarray:
+        assert x.shape[-1] == self.dim
+        n_blocks = -(-self.dim // self.block)
+        pad = n_blocks * self.block - self.dim
+        xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+        xb = jnp.moveaxis(xp.reshape(x.shape[:-1] + (n_blocks, self.block)), -2, 0)
+
+        def body(acc, args):
+            b, xblk = args
+            return acc + xblk @ self._block_mat(b, x.dtype), None
+
+        init = jnp.zeros(x.shape[:-1] + (self.k,), x.dtype)
+        out, _ = jax.lax.scan(body, init, (jnp.arange(n_blocks), xb))
+        return out / jnp.sqrt(jnp.asarray(self.k, x.dtype))

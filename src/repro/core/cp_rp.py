@@ -1,0 +1,163 @@
+"""f_CP(R): CP random projection (paper Definition 2) and the TRP equivalence.
+
+(f_CP(R)(X))_i = 1/sqrt(k) * < [[A_i^1, ..., A_i^N]], X >,   i in [k]
+
+with factor entries i.i.d. N(0, (1/R)^(1/N)). Memory O(kNdR); JLT once
+k ≳ eps^-2 3^(N-1) (1+2/R) log^{2N}(m/delta) (Thm 2) — exponentially worse in N
+than f_TT(R), which the benchmarks reproduce.
+
+Sun et al. (2018)'s TRP map is f_CP(1); their variance-reduced TRP(T) is
+f_CP(R=T) up to the 1/sqrt(T) component scaling — `trp_project` implements
+the row-wise Khatri-Rao form and tests assert exact equality.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .formats import CPTensor, TTTensor, _prod
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class CPRP:
+    """A sampled CP random projection operator."""
+
+    factors: tuple[jnp.ndarray, ...]  # factors[n]: (k, d_n, R)
+
+    def tree_flatten(self):
+        return tuple(self.factors), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(factors=tuple(children))
+
+    @property
+    def k(self) -> int:
+        return int(self.factors[0].shape[0])
+
+    @property
+    def order(self) -> int:
+        return len(self.factors)
+
+    @property
+    def dims(self) -> tuple[int, ...]:
+        return tuple(int(f.shape[1]) for f in self.factors)
+
+    @property
+    def rank(self) -> int:
+        return int(self.factors[0].shape[2])
+
+    def num_params(self) -> int:
+        return sum(_prod(f.shape) for f in self.factors)
+
+    def row(self, i: int) -> CPTensor:
+        return CPTensor(tuple(f[i] for f in self.factors))
+
+    # ------------------------------------------------------------------
+    def project(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Dense input(s): (*batch, d1..dN) -> (*batch, k). O(k R d^N)."""
+        N = self.order
+        assert x.shape[-N:] == self.dims, (x.shape, self.dims)
+        scale = 1.0 / jnp.sqrt(jnp.asarray(self.k, x.dtype))
+        c = jnp.einsum("...d,kdr->...kr", x, self.factors[-1])
+        for n in range(N - 2, -1, -1):
+            c = jnp.einsum("...dkr,kdr->...kr", c, self.factors[n])
+        return c.sum(-1) * scale
+
+    def project_cp(self, x: CPTensor) -> jnp.ndarray:
+        """CP-format input: O(k N d R R~)."""
+        assert x.dims == self.dims
+        carry = jnp.ones((self.k, self.rank, x.rank), dtype=x.dtype)
+        for f, g in zip(self.factors, x.factors):
+            carry = carry * jnp.einsum("kdr,dp->krp", f, g)
+        w = x.weights if x.weights is not None else jnp.ones((x.rank,), x.dtype)
+        y = jnp.einsum("krp,p->k", carry, w)
+        return y / jnp.sqrt(jnp.asarray(self.k, y.dtype))
+
+    def project_tt(self, x: TTTensor) -> jnp.ndarray:
+        """TT-format input: carry (k, R, bond)."""
+        assert x.dims == self.dims
+        carry = jnp.ones((self.k, self.rank, 1), dtype=x.cores[0].dtype)
+        for f, xc in zip(self.factors, x.cores):
+            # carry(k,r,b) f(k,d,r) xc(b,d,e) -> (k,r,e)
+            tmp = jnp.einsum("krb,bde->krde", carry, xc)
+            carry = jnp.einsum("krde,kdr->kre", tmp, f)
+        y = carry[:, :, 0].sum(-1)
+        return y / jnp.sqrt(jnp.asarray(self.k, y.dtype))
+
+    def reconstruct(self, y: jnp.ndarray, *, chunk: int | None = None) -> jnp.ndarray:
+        """Unbiased adjoint x_hat = (1/sqrt k) sum_i y_i [[A_i^*]]."""
+        k = self.k
+        assert y.shape == (k,)
+        scale = 1.0 / jnp.sqrt(jnp.asarray(k, y.dtype))
+
+        def partial(facs, yc):
+            w = jnp.einsum("k,kdr->kdr", yc, facs[0])
+            for f in facs[1:-1]:
+                w = jnp.einsum("k...r,kdr->k...dr", w, f)
+            return jnp.einsum("k...r,kdr->...d", w, facs[-1])
+
+        if self.order == 1:
+            return jnp.einsum("k,kdr->d", y, self.factors[0]) * scale
+        if chunk is None or chunk >= k:
+            return partial(self.factors, y) * scale
+        n_chunks = -(-k // chunk)
+        pad = n_chunks * chunk - k
+        yp = jnp.pad(y, (0, pad)).reshape(n_chunks, chunk)
+        fb = [jnp.pad(f, ((0, pad), (0, 0), (0, 0))).reshape((n_chunks, chunk) + f.shape[1:])
+              for f in self.factors]
+
+        def body(carry, inp):
+            return carry + partial(inp[1:], inp[0]), None
+
+        init = jnp.zeros(self.dims, y.dtype)
+        out, _ = jax.lax.scan(body, init, tuple([yp] + fb))
+        return out * scale
+
+    def as_dense_matrix(self) -> jnp.ndarray:
+        rows = jax.vmap(lambda *fs: CPTensor(fs).full().reshape(-1))(*self.factors)
+        return rows / jnp.sqrt(jnp.asarray(self.k, rows.dtype))
+
+
+def sample_cp_rp(key, dims: Sequence[int], k: int, rank: int,
+                 dtype=jnp.float32) -> CPRP:
+    """Draw f_CP(R) factors per Definition 2: var = (1/R)^(1/N)."""
+    N = len(dims)
+    std = jnp.asarray((1.0 / rank) ** (1.0 / (2.0 * N)), dtype)
+    keys = jax.random.split(key, N)
+    factors = tuple(
+        std * jax.random.normal(keys[n], (k, dims[n], rank), dtype=dtype)
+        for n in range(N)
+    )
+    return CPRP(factors)
+
+
+# ---------------------------------------------------------------------------
+# TRP (Sun et al. 2018) — row-wise Khatri-Rao formulation, for the
+# equivalence test  f_TRP == f_CP(1)  and  f_TRP(T) == f_CP(R=T).
+# ---------------------------------------------------------------------------
+
+def trp_project(factor_mats: Sequence[jnp.ndarray], x_vec: jnp.ndarray) -> jnp.ndarray:
+    """f_TRP(X) = 1/sqrt(k) (A^1 ⊙ ... ⊙ A^N)^T vec(X).
+
+    factor_mats[n]: (d_n, k); x_vec: flat input of size prod(d_n) in C-order
+    (axis 1 varying slowest — matches CPTensor.full().reshape(-1)).
+    """
+    k = factor_mats[0].shape[1]
+    # Khatri-Rao product, column-matching Kronecker. C-order: row index
+    # i = i_1 * (d_2...d_N) + ... + i_N  -> kron in order 1..N.
+    kr = factor_mats[0]
+    for f in factor_mats[1:]:
+        kr = jnp.einsum("pk,dk->pdk", kr, f).reshape(-1, k)
+    return (kr.T @ x_vec) / jnp.sqrt(jnp.asarray(k, x_vec.dtype))
+
+
+def trp_average(projections: Sequence[jnp.ndarray]) -> jnp.ndarray:
+    """Variance-reduced TRP(T): scaled average (1/sqrt T) sum_t f^(t)(X)."""
+    T = len(projections)
+    return sum(projections) / jnp.sqrt(jnp.asarray(T, projections[0].dtype))

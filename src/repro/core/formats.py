@@ -1,0 +1,302 @@
+"""Tensor-train (TT) and CP tensor containers + the algebra the paper relies on.
+
+Conventions (match the paper, Sec. 2.2):
+  * TT core n has shape (r_{n-1}, d_n, r_n), with r_0 = r_N = 1.
+  * CP factor n has shape (d_n, R); the tensor is sum_r a_r^1 ∘ ... ∘ a_r^N.
+
+Everything here is pure JAX (jit/vmap/grad-compatible); containers are
+registered pytrees so they flow through jax transformations unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _prod(xs) -> int:
+    out = 1
+    for x in xs:
+        out *= int(x)
+    return out
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class TTTensor:
+    """Tensor-train tensor  <<G^1, ..., G^N>>  with cores (r_{n-1}, d_n, r_n)."""
+
+    cores: tuple[jnp.ndarray, ...]
+
+    # -- pytree protocol -------------------------------------------------
+    def tree_flatten(self):
+        return tuple(self.cores), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(cores=tuple(children))
+
+    # -- structure -------------------------------------------------------
+    @property
+    def order(self) -> int:
+        return len(self.cores)
+
+    @property
+    def dims(self) -> tuple[int, ...]:
+        return tuple(int(c.shape[1]) for c in self.cores)
+
+    @property
+    def ranks(self) -> tuple[int, ...]:
+        """Bond ranks (r_0, ..., r_N) including boundary 1s."""
+        return tuple(int(c.shape[0]) for c in self.cores) + (int(self.cores[-1].shape[2]),)
+
+    @property
+    def dtype(self):
+        return self.cores[0].dtype
+
+    def num_params(self) -> int:
+        return sum(_prod(c.shape) for c in self.cores)
+
+    # -- algebra -----------------------------------------------------------
+    def full(self) -> jnp.ndarray:
+        """Materialize the dense tensor (exponential memory; tests only)."""
+        out = self.cores[0]  # (1, d1, r1)
+        out = out.reshape(out.shape[1], out.shape[2])  # (d1, r1)
+        for core in self.cores[1:]:
+            r_in, d, r_out = core.shape
+            out = jnp.tensordot(out, core, axes=[[-1], [0]])  # (..., d, r_out)
+        return out.reshape(self.dims)
+
+    def norm_squared(self) -> jnp.ndarray:
+        """||T||_F^2 computed in O(N d R^4) without materializing."""
+        return tt_inner(self, self)
+
+    def scale(self, alpha) -> "TTTensor":
+        """Multiply the tensor by a scalar (applied to the first core)."""
+        return TTTensor((self.cores[0] * alpha,) + tuple(self.cores[1:]))
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class CPTensor:
+    """CP tensor  [[A^1, ..., A^N]]  with factors (d_n, R)."""
+
+    factors: tuple[jnp.ndarray, ...]
+    # Optional per-component weights (R,); None means all-ones.
+    weights: jnp.ndarray | None = None
+
+    def tree_flatten(self):
+        if self.weights is None:
+            return tuple(self.factors), ("noweights",)
+        return tuple(self.factors) + (self.weights,), ("weights",)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        if aux[0] == "weights":
+            return cls(factors=tuple(children[:-1]), weights=children[-1])
+        return cls(factors=tuple(children), weights=None)
+
+    @property
+    def order(self) -> int:
+        return len(self.factors)
+
+    @property
+    def dims(self) -> tuple[int, ...]:
+        return tuple(int(f.shape[0]) for f in self.factors)
+
+    @property
+    def rank(self) -> int:
+        return int(self.factors[0].shape[1])
+
+    @property
+    def dtype(self):
+        return self.factors[0].dtype
+
+    def num_params(self) -> int:
+        n = sum(_prod(f.shape) for f in self.factors)
+        if self.weights is not None:
+            n += _prod(self.weights.shape)
+        return n
+
+    def full(self) -> jnp.ndarray:
+        out = self.factors[0]  # (d1, R)
+        if self.weights is not None:
+            out = out * self.weights[None, :]
+        for f in self.factors[1:]:
+            # out: (prod(d..), R) -> (prod(d..)*d, R)
+            out = jnp.einsum("pr,dr->pdr", out, f).reshape(-1, out.shape[-1])
+        return out.sum(-1).reshape(self.dims)
+
+    def norm_squared(self) -> jnp.ndarray:
+        return cp_inner(self, self)
+
+    def scale(self, alpha) -> "CPTensor":
+        return CPTensor((self.factors[0] * alpha,) + tuple(self.factors[1:]), self.weights)
+
+    def to_tt(self) -> TTTensor:
+        """Exact CP -> TT conversion with bond rank == R (diagonal cores)."""
+        R = self.rank
+        cores = []
+        for n, f in enumerate(self.factors):  # f: (d, R)
+            if n == 0:
+                w = f if self.weights is None else f * self.weights[None, :]
+                cores.append(w.T[None, :, :].transpose(0, 2, 1))  # (1, d, R)
+            elif n == len(self.factors) - 1:
+                cores.append(f.T[:, :, None])  # (R, d, 1)
+            else:
+                # diag core: core[r, i, r'] = f[i, r] * delta(r, r')
+                eye = jnp.eye(R, dtype=f.dtype)
+                cores.append(jnp.einsum("dr,rs->rds", f, eye))
+        return TTTensor(tuple(cores))
+
+
+# ---------------------------------------------------------------------------
+# Random constructions
+# ---------------------------------------------------------------------------
+
+def random_tt(key, dims: Sequence[int], rank: int, *, norm: str | None = None,
+              dtype=jnp.float32) -> TTTensor:
+    """Gaussian random TT tensor with bond rank `rank`.
+
+    norm='unit' rescales so that ||T||_F = 1 (used by the paper's experiments,
+    which draw unit-norm rank-10 TT inputs).
+    """
+    N = len(dims)
+    ranks = [1] + [rank] * (N - 1) + [1]
+    keys = jax.random.split(key, N)
+    cores = tuple(
+        jax.random.normal(keys[n], (ranks[n], dims[n], ranks[n + 1]), dtype=dtype)
+        for n in range(N)
+    )
+    t = TTTensor(cores)
+    if norm == "unit":
+        nrm = jnp.sqrt(t.norm_squared())
+        t = t.scale(jnp.where(nrm > 0, 1.0 / nrm, 1.0))
+    return t
+
+
+def random_cp(key, dims: Sequence[int], rank: int, *, norm: str | None = None,
+              dtype=jnp.float32) -> CPTensor:
+    N = len(dims)
+    keys = jax.random.split(key, N)
+    factors = tuple(
+        jax.random.normal(keys[n], (dims[n], rank), dtype=dtype) for n in range(N)
+    )
+    t = CPTensor(factors)
+    if norm == "unit":
+        nrm = jnp.sqrt(t.norm_squared())
+        t = t.scale(jnp.where(nrm > 0, 1.0 / nrm, 1.0))
+    return t
+
+
+# ---------------------------------------------------------------------------
+# Inner products (never materialize the dense tensor)
+# ---------------------------------------------------------------------------
+
+def tt_inner(a: TTTensor, b: TTTensor) -> jnp.ndarray:
+    """<A, B> for TT tensors in O(N d R_a R_b (R_a + R_b))."""
+    assert a.dims == b.dims, (a.dims, b.dims)
+    # carry: (ra, rb)
+    carry = jnp.ones((1, 1), dtype=a.dtype)
+    for ca, cb in zip(a.cores, b.cores):
+        # carry[ra, rb], ca[ra, d, ra'], cb[rb, d, rb'] -> carry'[ra', rb']
+        tmp = jnp.einsum("ab,adc->bdc", carry, ca)  # (rb, d, ra')
+        carry = jnp.einsum("bdc,bde->ce", tmp, cb)  # (ra', rb')
+    return carry.reshape(())
+
+
+def cp_inner(a: CPTensor, b: CPTensor) -> jnp.ndarray:
+    """<A, B> for CP tensors in O(N d R_a R_b)."""
+    assert a.dims == b.dims
+    acc = jnp.ones((a.rank, b.rank), dtype=a.dtype)
+    for fa, fb in zip(a.factors, b.factors):
+        acc = acc * (fa.T @ fb)  # (Ra, Rb)
+    wa = a.weights if a.weights is not None else jnp.ones((a.rank,), a.dtype)
+    wb = b.weights if b.weights is not None else jnp.ones((b.rank,), b.dtype)
+    return jnp.einsum("a,ab,b->", wa, acc, wb)
+
+
+def tt_cp_inner(a: TTTensor, b: CPTensor) -> jnp.ndarray:
+    """<TT, CP> in O(N d R_tt^2 R_cp)."""
+    assert a.dims == b.dims
+    # carry: (r_tt, R_cp)
+    carry = jnp.ones((1, b.rank), dtype=a.dtype)
+    for core, fac in zip(a.cores, b.factors):
+        # carry[r, p] core[r, d, s] fac[d, p] -> (s, p)
+        carry = jnp.einsum("rp,rds,dp->sp", carry, core, fac)
+    w = b.weights if b.weights is not None else jnp.ones((b.rank,), b.dtype)
+    return jnp.einsum("sp,p->", carry, w)  # s == 1
+
+
+def dense_inner(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return jnp.vdot(a, b)
+
+
+# ---------------------------------------------------------------------------
+# TT-SVD: dense -> TT (used by benchmarks to tensorize real data)
+# ---------------------------------------------------------------------------
+
+def tt_svd(x: jnp.ndarray, max_rank: int) -> TTTensor:
+    """Deterministic TT-SVD (Oseledets 2011) with rank cap. Small inputs only."""
+    dims = x.shape
+    N = len(dims)
+    cores = []
+    r_prev = 1
+    mat = x.reshape(r_prev * dims[0], -1)
+    for n in range(N - 1):
+        u, s, vt = jnp.linalg.svd(mat, full_matrices=False)
+        r = min(max_rank, u.shape[1])
+        u, s, vt = u[:, :r], s[:r], vt[:r, :]
+        cores.append(u.reshape(r_prev, dims[n], r))
+        mat = (s[:, None] * vt)
+        r_prev = r
+        if n < N - 2:
+            mat = mat.reshape(r_prev * dims[n + 1], -1)
+    cores.append(mat.reshape(r_prev, dims[-1], 1))
+    return TTTensor(tuple(cores))
+
+
+def tensorize(vec: jnp.ndarray, dims: Sequence[int]) -> jnp.ndarray:
+    """Reshape a flat vector of size prod(dims) into an order-N tensor."""
+    assert vec.size == _prod(dims), (vec.size, dims)
+    return vec.reshape(tuple(dims))
+
+
+def auto_dims(size: int, *, max_order: int = 4, align: int = 128) -> tuple[int, ...]:
+    """Pick an MXU-friendly tensorization of a flat vector of `size` elements.
+
+    Prefers factors that are multiples of `align` (TPU lane width). Falls back
+    to a balanced integer factorization. Used by the gradient compressor to
+    tensorize flat parameter buckets.
+    """
+    if size <= align:
+        return (size,)
+    # Greedy: peel off `align`-multiples.
+    dims: list[int] = []
+    rem = size
+    while len(dims) < max_order - 1 and rem % align == 0 and rem > align:
+        dims.append(align)
+        rem //= align
+    dims.append(rem)
+    # Merge tail if it got tiny.
+    dims = sorted(dims, reverse=True)
+    return tuple(dims)
+
+
+def pad_to_tensorizable(vec: jnp.ndarray, align: int = 128,
+                        max_order: int = 4) -> tuple[jnp.ndarray, tuple[int, ...], int]:
+    """Pad a flat vector so its length factorizes into aligned modes.
+
+    Returns (padded_vec, dims, original_len).
+    """
+    n = vec.size
+    padded = int(math.ceil(n / align) * align)
+    dims = auto_dims(padded, max_order=max_order, align=align)
+    if padded != n:
+        vec = jnp.concatenate([vec, jnp.zeros((padded - n,), vec.dtype)])
+    return vec, dims, n

@@ -1,0 +1,136 @@
+"""Theorem 1/2 bounds and complexity formulas, used by tests and benchmarks.
+
+All formulas are stated exactly as in the paper; `required_k_*` expose the
+JL lower bounds with an explicit constant c (the paper's ≳ hides it).
+"""
+from __future__ import annotations
+
+import math
+
+
+# ---------------------------------------------------------------------------
+# Theorem 1 — variance bounds (the bracketed factor multiplying ||X||^4 / k)
+# ---------------------------------------------------------------------------
+
+def variance_factor_tt(N: int, R: int) -> float:
+    """Var(||f_TT(R)(X)||^2) <= factor / k * ||X||_F^4."""
+    return 3.0 * (1.0 + 2.0 / R) ** (N - 1) - 1.0
+
+
+def variance_factor_cp(N: int, R: int) -> float:
+    """Var(||f_CP(R)(X)||^2) <= factor / k * ||X||_F^4."""
+    return 3.0 ** (N - 1) * (1.0 + 2.0 / R) - 1.0
+
+
+def variance_factor_gaussian() -> float:
+    """Classical Gaussian RP: Var = 2/k ||x||^4 (the N=1 specialization)."""
+    return 2.0
+
+
+# ---------------------------------------------------------------------------
+# Theorem 2 — JL embedding-size lower bounds
+# ---------------------------------------------------------------------------
+
+def required_k_tt(eps: float, m: int, N: int, R: int, *, delta: float = 0.01,
+                  c: float = 1.0) -> int:
+    """k ≳ eps^-2 (1 + 2/R)^N log^{2N}(m / delta)."""
+    return int(math.ceil(
+        c * eps ** -2 * (1.0 + 2.0 / R) ** N * math.log(m / delta) ** (2 * N)))
+
+
+def required_k_cp(eps: float, m: int, N: int, R: int, *, delta: float = 0.01,
+                  c: float = 1.0) -> int:
+    """k ≳ eps^-2 3^{N-1} (1 + 2/R) log^{2N}(m / delta)."""
+    return int(math.ceil(
+        c * eps ** -2 * 3.0 ** (N - 1) * (1.0 + 2.0 / R)
+        * math.log(m / delta) ** (2 * N)))
+
+
+def required_k_gaussian(eps: float, m: int, *, delta: float = 0.01,
+                        c: float = 8.0) -> int:
+    """Classical JL: k = O(eps^-2 log(m/delta))."""
+    return int(math.ceil(c * eps ** -2 * math.log(m / delta)))
+
+
+def concentration_bound_tt(k: int, eps: float, N: int, R: int,
+                           *, K: float = 1.0) -> float:
+    """Theorem 5 failure-probability upper bound (C = e^2)."""
+    C = math.e ** 2
+    expo = (math.sqrt(k) * eps) ** (1.0 / N) / (
+        (3.0 * K) ** (1.0 / (2 * N)) * math.sqrt(1.0 + 2.0 / R))
+    return C * math.exp(-expo)
+
+
+# ---------------------------------------------------------------------------
+# Memory / compute complexity (Sec. 1 & 3) — exact parameter counts
+# ---------------------------------------------------------------------------
+
+def params_tt_rp(k: int, dims, R: int) -> int:
+    """k * (d_1 R + sum_middle R d R + d_N R); == O(kNdR^2)."""
+    N = len(dims)
+    if N == 1:
+        return k * dims[0]
+    total = dims[0] * R + dims[-1] * R
+    for d in dims[1:-1]:
+        total += R * d * R
+    return k * total
+
+
+def params_cp_rp(k: int, dims, R: int) -> int:
+    """k * R * sum(d_n); == O(kNdR)."""
+    return k * R * sum(dims)
+
+
+def params_gaussian_rp(k: int, dims) -> int:
+    out = k
+    for d in dims:
+        out *= d
+    return out
+
+
+def params_sparse_rp(k: int, dims, s: float | None = None) -> int:
+    D = 1
+    for d in dims:
+        D *= d
+    s = s if s is not None else math.sqrt(D)
+    return int(k * D / s)
+
+
+# FLOP estimates for the projection paths (multiply-adds x2), used by the
+# kernel-level roofline analysis.
+
+def flops_project_dense_tt(k: int, dims, R: int) -> int:
+    N = len(dims)
+    D = 1
+    for d in dims:
+        D *= d
+    if N == 1:
+        return 2 * k * D
+    fl = 2 * k * R * D  # right-most contraction
+    lead = D // dims[-1]
+    for n in range(N - 2, 0, -1):
+        lead //= dims[n]
+        fl += 2 * k * R * R * lead * dims[n]
+    fl += 2 * k * R * dims[0]
+    return fl
+
+
+def flops_project_tt_tt(k: int, dims, R: int, R_in: int) -> int:
+    """TT operator applied to TT input: O(k N d R R~ (R + R~))."""
+    fl = 0
+    for d in dims:
+        fl += 2 * k * d * R * R_in * (R + R_in)
+    return fl
+
+
+def flops_project_dense_cp(k: int, dims, R: int) -> int:
+    N = len(dims)
+    D = 1
+    for d in dims:
+        D *= d
+    fl = 2 * k * R * D
+    lead = D
+    for n in range(N - 2, -1, -1):
+        lead //= dims[n + 1]
+        fl += 2 * k * R * lead
+    return fl

@@ -1,0 +1,4 @@
+from .pipeline import DataConfig, SyntheticLM
+from .tokenizer import ByteTokenizer
+
+__all__ = ["ByteTokenizer", "DataConfig", "SyntheticLM"]

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the paper's projection hot-spots.
+
+tt_project / cp_project: dense-input (tensorized flat vector) projections.
+tt_dot: structured TT-input projection (the paper's O(kNd max(R,R~)^3) path).
+Validated in interpret mode against ref.py; BlockSpecs target TPU VMEM.
+"""
+from .ops import cp_project, tt_dot, tt_project
+from . import ref
+
+__all__ = ["cp_project", "tt_dot", "tt_project", "ref"]

@@ -1,0 +1,59 @@
+"""Pallas TPU kernel: dense-input CP random projection (order 3).
+
+y[i] = sum_r <f1[i,:,r] o f2[i,:,r] o f3[i,:,r], x>  — same grid/accumulation
+skeleton as tt_project.py (k tiled to lanes, leading mode streamed, output
+block revisited for partial sums). The CP contraction is cheaper per mode
+(rank vectors instead of rank x rank transfer matrices).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cp_project3_kernel(x_ref, f1_ref, f2_ref, f3_ref, o_ref):
+    ia = pl.program_id(1)
+    x = x_ref[...]                                    # (BA, d2, d3)
+    f3 = f3_ref[...]                                  # (TK, d3, R)
+    z = jnp.einsum("abc,kcr->kabr", x, f3, preferred_element_type=jnp.float32)
+    f2 = f2_ref[...]                                  # (TK, d2, R)
+    v = jnp.einsum("kabr,kbr->kar", z, f2, preferred_element_type=jnp.float32)
+    f1 = f1_ref[...]                                  # (TK, BA, R)
+    y = jnp.einsum("kar,kar->k", v, f1, preferred_element_type=jnp.float32)
+
+    @pl.when(ia == 0)
+    def _init():
+        o_ref[...] = y[:, None]
+
+    @pl.when(ia != 0)
+    def _acc():
+        o_ref[...] += y[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("tk", "ba", "interpret"))
+def cp_project3(x: jnp.ndarray, f1: jnp.ndarray, f2: jnp.ndarray,
+                f3: jnp.ndarray, *, tk: int = 128, ba: int = 8,
+                interpret: bool = True) -> jnp.ndarray:
+    """Raw contraction; x (d1,d2,d3); f_n (k, d_n, R). k%tk==0, d1%ba==0."""
+    d1, d2, d3 = x.shape
+    k, _, r = f1.shape
+    assert f2.shape == (k, d2, r) and f3.shape == (k, d3, r)
+    assert k % tk == 0 and d1 % ba == 0
+    grid = (k // tk, d1 // ba)
+    out = pl.pallas_call(
+        _cp_project3_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ba, d2, d3), lambda ik, ia: (ia, 0, 0)),
+            pl.BlockSpec((tk, ba, r), lambda ik, ia: (ik, ia, 0)),
+            pl.BlockSpec((tk, d2, r), lambda ik, ia: (ik, 0, 0)),
+            pl.BlockSpec((tk, d3, r), lambda ik, ia: (ik, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tk, 1), lambda ik, ia: (ik, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, 1), jnp.float32),
+        interpret=interpret,
+    )(x, f1, f2, f3)
+    return out[:, 0]

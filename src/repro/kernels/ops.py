@@ -1,0 +1,92 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handle padding (k to the lane tile, d1 to the stream block), the JLT
+1/sqrt(k) scaling, layout conversion from the repro.core operator containers,
+and graceful fallback to the jnp reference path for orders != 3.
+
+`interpret` defaults to True because this container is CPU-only; on real TPU
+hardware pass interpret=False (the BlockSpecs are written for TPU VMEM).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.cp_rp import CPRP
+from repro.core.formats import TTTensor
+from repro.core.tt_rp import TTRP
+
+from . import ref
+from .cp_project import cp_project3
+from .tt_dot import tt_dot3
+from .tt_project import tt_project3
+
+
+def _pad_axis(a: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    n = a.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths)
+
+
+def _pick_tiles(k: int, d1: int) -> tuple[int, int]:
+    tk = 128 if k >= 128 else max(8, 1 << (k - 1).bit_length())
+    ba = 8 if d1 % 8 == 0 or d1 >= 8 else d1
+    return tk, ba
+
+
+def tt_project(op: TTRP, x: jnp.ndarray, *, interpret: bool = True,
+               use_kernel: bool = True) -> jnp.ndarray:
+    """f_TT(R)(x) for a dense order-3 input via the Pallas kernel."""
+    if op.order != 3 or not use_kernel:
+        return op.project(x)
+    k = op.k
+    g1 = op.cores[0][:, 0, :, :]          # (k, d1, R)
+    g2 = op.cores[1]                      # (k, R, d2, R)
+    g3 = op.cores[2][:, :, :, 0]          # (k, R, d3)
+    tk, ba = _pick_tiles(k, x.shape[0])
+    xk = _pad_axis(x, 0, ba)
+    g1k = _pad_axis(_pad_axis(g1, 0, tk), 1, ba)
+    g2k = _pad_axis(g2, 0, tk)
+    g3k = _pad_axis(g3, 0, tk)
+    y = tt_project3(xk, g1k, g2k, g3k, tk=tk, ba=ba, interpret=interpret)
+    return y[:k] / jnp.sqrt(jnp.asarray(k, y.dtype))
+
+
+def cp_project(op: CPRP, x: jnp.ndarray, *, interpret: bool = True,
+               use_kernel: bool = True) -> jnp.ndarray:
+    """f_CP(R)(x) for a dense order-3 input via the Pallas kernel."""
+    if op.order != 3 or not use_kernel:
+        return op.project(x)
+    k = op.k
+    f1, f2, f3 = op.factors
+    tk, ba = _pick_tiles(k, x.shape[0])
+    xk = _pad_axis(x, 0, ba)
+    f1k = _pad_axis(_pad_axis(f1, 0, tk), 1, ba)
+    f2k = _pad_axis(f2, 0, tk)
+    f3k = _pad_axis(f3, 0, tk)
+    y = cp_project3(xk, f1k, f2k, f3k, tk=tk, ba=ba, interpret=interpret)
+    return y[:k] / jnp.sqrt(jnp.asarray(k, y.dtype))
+
+
+def tt_dot(op: TTRP, x: TTTensor, *, interpret: bool = True,
+           use_kernel: bool = True) -> jnp.ndarray:
+    """f_TT(R)(X) for a TT-format order-3 input via the Pallas kernel."""
+    if op.order != 3 or x.order != 3 or not use_kernel:
+        return op.project_tt(x)
+    k = op.k
+    g1 = op.cores[0][:, 0, :, :]
+    g2 = op.cores[1]
+    g3 = op.cores[2][:, :, :, 0]
+    tk, _ = _pick_tiles(k, 8)
+    g1k = _pad_axis(g1, 0, tk)
+    g2k = _pad_axis(g2, 0, tk)
+    g3k = _pad_axis(g3, 0, tk)
+    y = tt_dot3(x.cores[0], x.cores[1], x.cores[2], g1k, g2k, g3k,
+                tk=tk, interpret=interpret)
+    return y[:k] / jnp.sqrt(jnp.asarray(k, y.dtype))
+
+
+__all__ = ["tt_project", "cp_project", "tt_dot", "ref"]

@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for the Pallas kernels. Deliberately straightforward
+einsum chains — the kernels must match these to ~1e-5 in f32.
+
+Layouts match repro.core:
+  TT-RP cores:  g1 (k, d1, R), g2 (k, R, d2, R), g3 (k, R, d3)   (order-3 case)
+  CP-RP factors: f_n (k, d_n, R)
+  TT input cores: x1 (1, d1, Rx), x2 (Rx, d2, Rx), x3 (Rx, d3, 1)
+The 1/sqrt(k) JLT scaling is applied by ops.py, NOT here (kernels and refs
+compute the raw contraction so accumulation error is comparable).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def tt_project3_ref(x: jnp.ndarray, g1: jnp.ndarray, g2: jnp.ndarray,
+                    g3: jnp.ndarray) -> jnp.ndarray:
+    """y[i] = sum_{abc,rs} g1[i,a,r] g2[i,r,b,s] g3[i,s,c] x[a,b,c]."""
+    z = jnp.einsum("abc,ksc->kabs", x, g3)
+    v = jnp.einsum("kabs,krbs->kar", z, g2)
+    return jnp.einsum("kar,kar->k", v, g1)
+
+
+def cp_project3_ref(x: jnp.ndarray, f1: jnp.ndarray, f2: jnp.ndarray,
+                    f3: jnp.ndarray) -> jnp.ndarray:
+    """y[i] = sum_r <f1[i,:,r] o f2[i,:,r] o f3[i,:,r], x>."""
+    z = jnp.einsum("abc,kcr->kabr", x, f3)
+    v = jnp.einsum("kabr,kbr->kar", z, f2)
+    return jnp.einsum("kar,kar->k", v, f1)
+
+
+def tt_dot3_ref(x1: jnp.ndarray, x2: jnp.ndarray, x3: jnp.ndarray,
+                g1: jnp.ndarray, g2: jnp.ndarray, g3: jnp.ndarray) -> jnp.ndarray:
+    """Batched <TT_i, X_tt> via transfer matrices, order 3.
+
+    x1 (1,d1,Rx) x2 (Rx,d2,Rx) x3 (Rx,d3,1); g as in tt_project3_ref.
+    """
+    xa = x1[0]                     # (d1, Rx)
+    t = jnp.einsum("kdr,de->kre", g1, xa)            # (k, R, Rx)
+    tmp = jnp.einsum("kre,krds->keds", t, g2)        # (k, Rx, d2, R)
+    t = jnp.einsum("keds,edf->ksf", tmp, x2)         # (k, R, Rx)
+    xc = x3[:, :, 0]               # (Rx, d3)
+    return jnp.einsum("ksf,ksd,fd->k", t, g3, xc)

@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: batched TT-times-TT inner products (order 3).
+
+y[i] = < <<G_i^1, G_i^2, G_i^3>>, <<X^1, X^2, X^3>> > for i in [k]: the
+structured-input fast path of f_TT(R) (paper Sec. 4.1, O(k N d max(R,R~)^3)).
+
+The transfer-matrix chain is tiny per step (R x Rx carries), so the TPU win
+comes purely from batching k onto the lanes: the whole k-tile chain lives in
+VMEM and every mode step is a (TK-batched) small matmul. Grid = (k/TK,);
+all operands for a tile are loaded once.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _tt_dot3_kernel(x1_ref, x2_ref, x3_ref, g1_ref, g2_ref, g3_ref, o_ref):
+    xa = x1_ref[...][0]                               # (d1, Rx)
+    g1 = g1_ref[...]                                  # (TK, d1, R)
+    t = jnp.einsum("kdr,de->kre", g1, xa,
+                   preferred_element_type=jnp.float32)        # (TK, R, Rx)
+    g2 = g2_ref[...]                                  # (TK, R, d2, R)
+    x2 = x2_ref[...]                                  # (Rx, d2, Rx)
+    tmp = jnp.einsum("kre,krds->keds", t, g2,
+                     preferred_element_type=jnp.float32)      # (TK, Rx, d2, R)
+    t = jnp.einsum("keds,edf->ksf", tmp, x2,
+                   preferred_element_type=jnp.float32)        # (TK, R, Rx)
+    g3 = g3_ref[...]                                  # (TK, R, d3)
+    xc = x3_ref[...][:, :, 0]                         # (Rx, d3)
+    y = jnp.einsum("ksf,ksd,fd->k", t, g3, xc,
+                   preferred_element_type=jnp.float32)
+    o_ref[...] = y[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("tk", "interpret"))
+def tt_dot3(x1: jnp.ndarray, x2: jnp.ndarray, x3: jnp.ndarray,
+            g1: jnp.ndarray, g2: jnp.ndarray, g3: jnp.ndarray,
+            *, tk: int = 128, interpret: bool = True) -> jnp.ndarray:
+    """x1 (1,d1,Rx) x2 (Rx,d2,Rx) x3 (Rx,d3,1); g1 (k,d1,R) g2 (k,R,d2,R)
+    g3 (k,R,d3). Raw contraction (no 1/sqrt k). k % tk == 0."""
+    k, d1, r = g1.shape
+    rx = x1.shape[2]
+    d2, d3 = g2.shape[2], g3.shape[2]
+    assert x1.shape == (1, d1, rx) and x2.shape == (rx, d2, rx)
+    assert x3.shape == (rx, d3, 1) and k % tk == 0
+    out = pl.pallas_call(
+        _tt_dot3_kernel,
+        grid=(k // tk,),
+        in_specs=[
+            pl.BlockSpec((1, d1, rx), lambda ik: (0, 0, 0)),
+            pl.BlockSpec((rx, d2, rx), lambda ik: (0, 0, 0)),
+            pl.BlockSpec((rx, d3, 1), lambda ik: (0, 0, 0)),
+            pl.BlockSpec((tk, d1, r), lambda ik: (ik, 0, 0)),
+            pl.BlockSpec((tk, r, d2, r), lambda ik: (ik, 0, 0, 0)),
+            pl.BlockSpec((tk, r, d3), lambda ik: (ik, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tk, 1), lambda ik: (ik, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, 1), jnp.float32),
+        interpret=interpret,
+    )(x1, x2, x3, g1, g2, g3)
+    return out[:, 0]

@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: dense-input TT random projection (order 3).
+
+Computes y[i] = sum_{a,b,c,r,s} g1[i,a,r] g2[i,r,b,s] g3[i,s,c] x[a,b,c]
+for i in [k] — the hot loop of f_TT(R) applied to a flat (tensorized) vector
+such as a gradient bucket.
+
+TPU mapping
+-----------
+* grid = (k/TK, d1/BA): k tiled by TK=128 (lane width — every per-k einsum
+  becomes an MXU/VPU op with k on the minor axis), the leading input mode
+  tiled by BA so the streamed x block (BA, d2, d3) plus the per-tile cores and
+  the (TK, BA, d2, R) intermediate stay inside VMEM.
+* The output block index depends only on the k-tile, so partial sums over the
+  d1 grid axis accumulate in-place (revisited output block) — the canonical
+  Pallas matmul accumulation pattern.
+* VMEM budget at defaults (TK=128, BA=8, d2=128, d3=64, R=2), f32:
+    x block      8*128*64*4      = 256 KiB
+    z intermed.  128*8*128*2*4   = 1   MiB
+    cores        ~0.3 MiB        -> << 16 MiB VMEM.
+* All contraction shapes are multiples of (8,128) when dims are MXU-aligned
+  (the compressor picks (128,128,64) buckets for exactly this reason).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _tt_project3_kernel(x_ref, g1_ref, g2_ref, g3_ref, o_ref):
+    ia = pl.program_id(1)
+    x = x_ref[...]                                    # (BA, d2, d3)
+    g3 = g3_ref[...]                                  # (TK, R, d3)
+    # contract c: (TK, BA, d2, R)
+    z = jnp.einsum("abc,ksc->kabs", x, g3, preferred_element_type=jnp.float32)
+    g2 = g2_ref[...]                                  # (TK, R, d2, R)
+    # contract (b, s): (TK, BA, R)
+    v = jnp.einsum("kabs,krbs->kar", z, g2, preferred_element_type=jnp.float32)
+    g1 = g1_ref[...]                                  # (TK, BA, R)
+    y = jnp.einsum("kar,kar->k", v, g1, preferred_element_type=jnp.float32)
+
+    @pl.when(ia == 0)
+    def _init():
+        o_ref[...] = y[:, None]
+
+    @pl.when(ia != 0)
+    def _acc():
+        o_ref[...] += y[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("tk", "ba", "interpret"))
+def tt_project3(x: jnp.ndarray, g1: jnp.ndarray, g2: jnp.ndarray,
+                g3: jnp.ndarray, *, tk: int = 128, ba: int = 8,
+                interpret: bool = True) -> jnp.ndarray:
+    """Raw contraction (no 1/sqrt(k)); ops.py applies scaling/padding.
+
+    x (d1,d2,d3); g1 (k,d1,R); g2 (k,R,d2,R); g3 (k,R,d3). k%tk==0, d1%ba==0.
+    """
+    d1, d2, d3 = x.shape
+    k, _, r = g1.shape
+    assert g2.shape == (k, r, d2, r) and g3.shape == (k, r, d3)
+    assert k % tk == 0, (k, tk)
+    assert d1 % ba == 0, (d1, ba)
+    grid = (k // tk, d1 // ba)
+    out = pl.pallas_call(
+        _tt_project3_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ba, d2, d3), lambda ik, ia: (ia, 0, 0)),
+            pl.BlockSpec((tk, ba, r), lambda ik, ia: (ik, ia, 0)),
+            pl.BlockSpec((tk, r, d2, r), lambda ik, ia: (ik, 0, 0, 0)),
+            pl.BlockSpec((tk, r, d3), lambda ik, ia: (ik, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tk, 1), lambda ik, ia: (ik, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, 1), jnp.float32),
+        interpret=interpret,
+    )(x, g1, g2, g3)
+    return out[:, 0]

@@ -1,0 +1,45 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state; the dry-run sets XLA_FLAGS for 512 host devices
+BEFORE calling it, real launches get the actual TPU topology.
+
+Axes:
+  pod   — slow inter-pod (DCN / cross-ICI) data parallelism; the gradient
+          sketch compressor targets this axis.
+  data  — in-pod data parallel + FSDP parameter sharding.
+  model — tensor/expert/sequence parallel.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = 1
+    for s in shape:
+        need *= s
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, found {len(devices)}; the "
+            "dry-run must set XLA_FLAGS=--xla_force_host_platform_device_count"
+            "=512 before any jax import")
+    return jax.make_mesh(shape, axes, devices=devices[:need])
+
+
+def make_host_mesh(model: int = 1):
+    """Small mesh over whatever devices exist (tests / CPU examples)."""
+    n = len(jax.devices())
+    assert n % model == 0, (n, model)
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def model_size(mesh) -> int:
+    return mesh.shape["model"] if "model" in mesh.axis_names else 1

@@ -1,0 +1,7 @@
+"""Model families: decoder-only transformer (dense/MoE/VLM), Whisper-style
+enc-dec, RecurrentGemma hybrid, Mamba2 SSM — pure-JAX, scan+remat friendly."""
+from .api import Model, build_model, input_specs
+from .config import ArchConfig, MoESpec, ShapeSpec, lm_shapes
+
+__all__ = ["ArchConfig", "Model", "MoESpec", "ShapeSpec", "build_model",
+           "input_specs", "lm_shapes"]

@@ -1,0 +1,86 @@
+"""Family dispatch: one uniform surface (init / loss / decode / cache /
+input specs) over the four model families. This is what launch/ and the
+examples consume; `--arch` selects an ArchConfig, `build_model` does the rest.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import mamba2, rglru, transformer, whisper
+from .config import ArchConfig, ShapeSpec
+
+_FAMILIES = {
+    "decoder": transformer,
+    "encdec": whisper,
+    "hybrid": rglru,
+    "ssm": mamba2,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    mod: Any
+
+    # -- parameters ------------------------------------------------------
+    def init(self, key, dtype=jnp.float32):
+        return self.mod.init_params(self.cfg, key, dtype)
+
+    def param_axes(self):
+        return self.mod.param_axes(self.cfg)
+
+    def param_shapes(self):
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
+
+    # -- steps -------------------------------------------------------------
+    def loss_fn(self, params, batch, **kw):
+        return self.mod.loss_fn(self.cfg, params, batch, **kw)
+
+    def init_cache(self, batch: int, max_seq: int, dtype=jnp.bfloat16):
+        return self.mod.init_cache(self.cfg, batch, max_seq, dtype)
+
+    def decode_step(self, params, cache, token, pos, **kw):
+        return self.mod.decode_step(self.cfg, params, cache, token, pos, **kw)
+
+    def prefill(self, params, tokens, max_seq, **kw):
+        if self.cfg.family == "decoder":
+            return transformer.prefill(self.cfg, params, tokens, max_seq, **kw)
+        raise NotImplementedError(f"prefill helper for {self.cfg.family}")
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(cfg, _FAMILIES[cfg.family])
+
+
+# ---------------------------------------------------------------------------
+# ShapeDtypeStruct input specs per (arch x shape) — consumed by the dry-run.
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict[str, Any]:
+    """Stand-ins for every model input of this cell (no allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    i32, f32 = jnp.int32, jnp.float32
+    sd = jax.ShapeDtypeStruct
+    if shape.kind in ("train", "prefill"):
+        batch = {"tokens": sd((B, S), i32)}
+        if shape.kind == "train":
+            batch["labels"] = sd((B, S), i32)
+        if cfg.mrope_sections is not None:
+            batch["positions3"] = sd((3, B, S), i32)
+            batch["patches"] = sd((B, cfg.num_patches, cfg.d_model), f32)
+            batch["patch_positions"] = sd((B, cfg.num_patches), i32)
+        if cfg.family == "encdec":
+            batch["frames"] = sd((B, cfg.encoder_seq, cfg.d_model), f32)
+        return batch
+    # decode: one new token against a seq_len cache
+    model = build_model(cfg)
+    cache = jax.eval_shape(lambda: model.init_cache(B, S))
+    batch = {"token": sd((B,), i32), "pos": sd((B,), i32), "cache": cache}
+    if cfg.mrope_sections is not None:
+        batch["positions3"] = sd((3, B, 1), i32)
+    return batch

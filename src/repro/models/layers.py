@@ -1,0 +1,336 @@
+"""Shared model layers: norms, RoPE / M-RoPE, memory-efficient attention,
+MLP variants, causal depthwise conv, chunked cross-entropy.
+
+Everything is a pure function over explicit parameter arrays so that models
+compose under jit / scan / remat / shard_map without a module framework.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from . import settings
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Norms & activations
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, *, eps: float = 1e-6,
+             offset: float = 0.0) -> jnp.ndarray:
+    """RMSNorm; gemma-style uses offset=1.0 (weight stored as w-1)."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (weight.astype(jnp.float32) + offset)).astype(dtype)
+
+
+def layer_norm(x: jnp.ndarray, weight: jnp.ndarray, bias: jnp.ndarray,
+               *, eps: float = 1e-5) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def soft_cap(x: jnp.ndarray, cap: float | None) -> jnp.ndarray:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+
+def _rope_angles(positions: jnp.ndarray, head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    return positions.astype(jnp.float32)[..., None] * freqs  # (..., half)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, *,
+               theta: float = 10000.0) -> jnp.ndarray:
+    """x: (B, S, H, dh); positions: (B, S). Rotate-half (llama) convention."""
+    angles = _rope_angles(positions, x.shape[-1], theta)  # (B, S, half)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions3: jnp.ndarray, *,
+                sections: Sequence[int] = (16, 24, 24),
+                theta: float = 10000.0) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE.
+
+    x: (B, S, H, dh); positions3: (3, B, S) temporal/height/width ids.
+    Frequency slots are partitioned into `sections` (sum == dh//2); slot j in
+    section c rotates by positions3[c].
+    """
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    sec_ids = jnp.concatenate([
+        jnp.full((s,), i, dtype=jnp.int32) for i, s in enumerate(sections)])
+    pos = positions3[sec_ids]                       # (half, B, S)
+    pos = jnp.moveaxis(pos, 0, -1)                  # (B, S, half)
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    angles = pos.astype(jnp.float32) * freqs        # (B, S, half)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention — GQA + causal/window masking + optional logit softcap.
+# Dense path for short sequences, scan-flash (online softmax over KV chunks,
+# outer scan over Q chunks) for long ones: peak memory O(Cq*Ck) per head.
+# ---------------------------------------------------------------------------
+
+def _mask(pq: jnp.ndarray, pk: jnp.ndarray, *, causal: bool,
+          window) -> jnp.ndarray:
+    """pq: (..., Sq), pk: (..., Sk) -> bool (..., Sq, Sk). window may be a
+    traced scalar (per-layer local/global alternation under scan)."""
+    diff = pq[..., :, None] - pk[..., None, :]
+    m = jnp.ones(diff.shape, dtype=bool)
+    if causal:
+        m &= diff >= 0
+    if window is not None:
+        m &= diff < window
+    return m
+
+
+def _constrain_heads(x, head_axis: int):
+    """Pin batch->data axes and heads->model on attention operands so the
+    expanded-GQA score intermediates shard instead of replicating (the mesh
+    comes from trace-time settings; no-op outside pjit)."""
+    mesh = settings.get().mesh
+    if mesh is None or not settings.get().constrain_attn_heads:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec
+    names = mesh.axis_names
+    manual = settings.get().manual_axes
+    dp = tuple(a for a in names if a in ("pod", "data") and a not in manual)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    ms = mesh.shape["model"] if "model" in names else 1
+    entries = [None] * x.ndim
+    if x.shape[0] % dp_size == 0:
+        entries[0] = dp
+    if x.shape[head_axis] % ms == 0:
+        entries[head_axis] = "model"
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, PartitionSpec(*entries)))
+
+
+def _attend_dense(q, k, v, pq, pk, *, causal, window, softcap, scale):
+    """q: (B,Sq,Hkv,G,dh); k,v: (B,Sk,Hkv,dh); pq/pk: (B,S*)."""
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    s = soft_cap(s, softcap)
+    m = _mask(pq, pk, causal=causal, window=window)  # (B, Sq, Sk)
+    s = jnp.where(m[:, None, None, :, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out
+
+
+def _attend_flash(q, k, v, pq, pk, *, causal, window, softcap, scale,
+                  chunk_q: int, chunk_k: int):
+    """Same contract as _attend_dense; O(chunk_q*chunk_k) score memory.
+
+    KV heads are expanded to the full query-head count first: GQA's grouped
+    (Hkv, G) layout leaves both head dims smaller than the tensor-parallel
+    degree (e.g. 8 < 16), which forces XLA to replicate every score/softmax
+    intermediate. Expanded, the head axis is Hq and shards cleanly; the extra
+    KV activation bytes are negligible next to replicated score blocks.
+    """
+    B, Sq, Hkv, G, dh = q.shape
+    if G > 1 and settings.get().gqa_expand:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+        q = q.reshape(B, Sq, Hkv * G, 1, dh)
+        B, Sq, Hkv, G, dh = q.shape
+    k = _constrain_heads(k, 2)
+    v = _constrain_heads(v, 2)
+    q = _constrain_heads(q, 2)
+    Sk = k.shape[1]
+    nq, nk = Sq // chunk_q, Sk // chunk_k
+    assert Sq % chunk_q == 0 and Sk % chunk_k == 0, (Sq, chunk_q, Sk, chunk_k)
+    unroll = settings.scan_unroll()
+
+    qc = jnp.moveaxis(q.reshape(B, nq, chunk_q, Hkv, G, dh), 1, 0)
+    pqc = jnp.moveaxis(pq.reshape(B, nq, chunk_q), 1, 0)
+    kc = jnp.moveaxis(k.reshape(B, nk, chunk_k, Hkv, dh), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, nk, chunk_k, Hkv, dh), 1, 0)
+    pkc = jnp.moveaxis(pk.reshape(B, nk, chunk_k), 1, 0)
+
+    def q_block(qi, pqi):
+        def body(carry, xs):
+            m_run, l_run, acc = carry
+            ki, vi, pki = xs
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qi.astype(jnp.float32),
+                           ki.astype(jnp.float32)) * scale
+            s = soft_cap(s, softcap)
+            msk = _mask(pqi, pki, causal=causal, window=window)
+            s = jnp.where(msk[:, None, None, :, :], s, NEG_INF)
+            m_new = jnp.maximum(m_run, s.max(axis=-1))
+            p = jnp.where(msk[:, None, None, :, :], jnp.exp(s - m_new[..., None]), 0.0)
+            corr = jnp.exp(m_run - m_new)
+            l_new = l_run * corr + p.sum(axis=-1)
+            if settings.get().flash_p_bf16:
+                pv = jnp.einsum("bhgqk,bkhd->bhgqd",
+                                p.astype(jnp.bfloat16), vi,
+                                preferred_element_type=jnp.float32)
+            else:
+                pv = jnp.einsum("bhgqk,bkhd->bhgqd", p,
+                                vi.astype(jnp.float32))
+            acc = acc * corr[..., None] + pv
+            return (m_new, l_new, acc), None
+
+        init = (jnp.full((B, Hkv, G, chunk_q), NEG_INF, jnp.float32),
+                jnp.zeros((B, Hkv, G, chunk_q), jnp.float32),
+                jnp.zeros((B, Hkv, G, chunk_q, dh), jnp.float32))
+        (m_f, l_f, acc), _ = jax.lax.scan(body, init, (kc, vc, pkc),
+                                          unroll=unroll)
+        out = acc / jnp.maximum(l_f, 1e-30)[..., None]   # (B,Hkv,G,Cq,dh)
+        return jnp.moveaxis(out, 3, 1)                    # (B,Cq,Hkv,G,dh)
+
+    # remat: the backward pass recomputes each q-block's kv scan instead of
+    # storing O(Sq*Sk) score intermediates (flash-attention memory profile).
+    q_block = jax.checkpoint(q_block,
+                             policy=jax.checkpoint_policies.nothing_saveable)
+    _, out_blocks = jax.lax.scan(lambda c, xs: (c, q_block(*xs)), 0,
+                                 (qc, pqc), unroll=unroll)
+    out = jnp.moveaxis(out_blocks, 0, 1).reshape(B, Sq, Hkv, G, dh)
+    return out
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+              positions_q: jnp.ndarray, positions_k: jnp.ndarray, *,
+              causal: bool = True, window=None, softcap: float | None = None,
+              chunk_q: int | None = None, chunk_k: int | None = None,
+              dense_below: int | None = None) -> jnp.ndarray:
+    """GQA attention. q: (B, Sq, Hq, dh); k, v: (B, Sk, Hkv, dh).
+
+    Returns (B, Sq, Hq, dh) in q.dtype. `window` may be a traced scalar.
+    Chunking defaults come from models.settings (trace-time config).
+    """
+    cfg = settings.get()
+    chunk_q = chunk_q if chunk_q is not None else cfg.attn_chunk_q
+    chunk_k = chunk_k if chunk_k is not None else cfg.attn_chunk_k
+    dense_below = dense_below if dense_below is not None else cfg.dense_below
+    B, Sq, Hq, dh = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, dh)
+    scale = 1.0 / math.sqrt(dh)
+    Sk = k.shape[1]
+    if Sq * Sk <= dense_below or Sq % min(chunk_q, Sq) != 0:
+        out = _attend_dense(qg, k, v, positions_q, positions_k, causal=causal,
+                            window=window, softcap=softcap, scale=scale)
+    else:
+        cq = min(chunk_q, Sq)
+        ck = min(chunk_k, Sk)
+        while Sk % ck:
+            ck //= 2
+        out = _attend_flash(qg, k, v, positions_q, positions_k, causal=causal,
+                            window=window, softcap=softcap, scale=scale,
+                            chunk_q=cq, chunk_k=ck)
+    return out.reshape(B, Sq, Hq, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def swiglu(x, w_gate, w_up, w_down):
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+def geglu(x, w_gate, w_up, w_down):
+    h = jax.nn.gelu(x @ w_gate, approximate=True) * (x @ w_up)
+    return h @ w_down
+
+
+def gelu_mlp(x, w_in, b_in, w_out, b_out):
+    return jax.nn.gelu(x @ w_in + b_in, approximate=True) @ w_out + b_out
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv (mamba2 / rglru / whisper-frontend building block)
+# ---------------------------------------------------------------------------
+
+def causal_depthwise_conv1d(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, S, C); w: (W, C). Left-pads so output[t] sees x[t-W+1..t]."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp, w[:, None, :],  # (W, 1, C) -> spatial, in/feature-group, out
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1])
+    return out
+
+
+def conv1d_update(x_t: jnp.ndarray, conv_state: jnp.ndarray,
+                  w: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Single-token causal conv. x_t: (B, C); conv_state: (B, W-1, C)."""
+    W = w.shape[0]
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B,W,C)
+    out = jnp.einsum("bwc,wc->bc", window, w)
+    return out, window[:, -(W - 1):, :] if W > 1 else conv_state
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def chunked_ce_loss(h: jnp.ndarray, unembed: jnp.ndarray, labels: jnp.ndarray,
+                    *, chunk: int | None = None, softcap: float | None = None,
+                    mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Cross-entropy without materializing (B, S, V) logits.
+
+    h: (B, S, D) final hidden states; unembed: (D, V); labels: (B, S).
+    """
+    B, S, D = h.shape
+    chunk = min(chunk if chunk is not None else settings.get().ce_chunk, S)
+    while S % chunk:
+        chunk //= 2
+    n = S // chunk
+    hc = jnp.moveaxis(h.reshape(B, n, chunk, D), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(B, n, chunk), 1, 0)
+    if mask is None:
+        mask = jnp.ones((B, S), dtype=jnp.float32)
+    mc = jnp.moveaxis(mask.reshape(B, n, chunk), 1, 0)
+
+    def body(carry, xs):
+        tot, cnt = carry
+        hi, li, mi = xs
+        logits = (hi.astype(jnp.float32) @ unembed.astype(jnp.float32))
+        logits = soft_cap(logits, softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, li[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mi
+        return (tot + nll.sum(), cnt + mi.sum()), None
+
+    # remat: recompute each (chunk, V) logits block in the backward pass.
+    body = jax.checkpoint(body,
+                          policy=jax.checkpoint_policies.nothing_saveable)
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())),
+                                 (hc, lc, mc), unroll=settings.scan_unroll())
+    return tot / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,282 @@
+"""Mamba-2 (SSD — state-space duality, Dao & Gu 2024), attention-free.
+
+Block: in_proj -> (z, xBC, dt); causal depthwise conv on xBC; SSD over heads
+with scalar-per-head decay A; D skip; gated RMSNorm; out_proj.
+
+Training/prefill uses the chunked dual form: quadratic attention-like math
+inside chunks of length Q, linear recurrence across chunks (lax.scan).
+Decode is a single recurrence step on the (B, H, hd, ds) state — O(1) per
+token, which is why this arch runs long_500k.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as nn
+from . import settings
+from .config import ArchConfig
+
+
+def _dims(cfg: ArchConfig):
+    D = cfg.d_model
+    d_in = cfg.ssm_expand * D
+    H = d_in // cfg.ssm_head_dim
+    ds = cfg.ssm_state
+    G = cfg.ssm_groups
+    conv_ch = d_in + 2 * G * ds
+    return D, d_in, H, ds, G, conv_ch
+
+
+def _spec(cfg: ArchConfig) -> dict[str, tuple]:
+    D, d_in, H, ds, G, conv_ch = _dims(cfg)
+    L, V, W = cfg.n_layers, cfg.vocab, cfg.conv_width
+    proj_out = 2 * d_in + 2 * G * ds + H
+    s: dict[str, Any] = {"embed": ((V, D), ("vocab_fsdp", "embed_tp"), "embed")}
+    lyr = {
+        "norm": ((L, D), ("layers", None), "norm"),
+        "in_proj": ((L, D, proj_out), ("layers", "embed", "mlp"), "fanin"),
+        "conv_w": ((L, W, conv_ch), ("layers", None, "mlp"), "fanin"),
+        "conv_b": ((L, conv_ch), ("layers", "mlp"), "zeros"),
+        "a_log": ((L, H), ("layers", None), "a_log"),
+        "d_skip": ((L, H), ("layers", None), "ones"),
+        "dt_bias": ((L, H), ("layers", None), "dt_bias"),
+        "norm_gate": ((L, d_in), ("layers", "mlp"), "norm"),
+        "out_proj": ((L, d_in, D), ("layers", "mlp", "embed"), "fanin"),
+    }
+    s.update({f"layers/{k}": v for k, v in lyr.items()})
+    s["final_norm"] = ((D,), (None,), "norm")
+    return s
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.float32) -> dict:
+    from .transformer import _assign
+    params: dict[str, Any] = {}
+    for i, (path, (shape, _, kind)) in enumerate(sorted(_spec(cfg).items())):
+        k = jax.random.fold_in(key, i)
+        if kind in ("norm", "ones"):
+            leaf = jnp.ones(shape, dtype)
+        elif kind == "zeros":
+            leaf = jnp.zeros(shape, dtype)
+        elif kind == "embed":
+            leaf = jax.random.normal(k, shape, dtype) * 0.02
+        elif kind == "a_log":
+            leaf = jnp.log(jax.random.uniform(k, shape, dtype, 1.0, 16.0))
+        elif kind == "dt_bias":
+            # softplus^-1 of dt in [1e-3, 0.1]
+            dt = jnp.exp(jax.random.uniform(k, shape, dtype) *
+                         (jnp.log(0.1) - jnp.log(1e-3)) + jnp.log(1e-3))
+            leaf = dt + jnp.log(-jnp.expm1(-dt))
+        else:
+            leaf = jax.random.normal(k, shape, dtype) / (shape[-2] ** 0.5)
+        _assign(params, path, leaf)
+    return params
+
+
+def param_axes(cfg: ArchConfig) -> dict:
+    from .transformer import _assign
+    axes: dict[str, Any] = {}
+    for path, (_, ax, _) in sorted(_spec(cfg).items()):
+        _assign(axes, path, ax)
+    return axes
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., Q) -> (..., Q, Q) with out[i, j] = sum_{j < t <= i} x[t]
+    for i >= j, -inf otherwise."""
+    Q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, a: jnp.ndarray,
+                bmat: jnp.ndarray, cmat: jnp.ndarray, *, chunk: int,
+                h0: jnp.ndarray | None = None):
+    """Chunked SSD.
+
+    x: (B, S, H, P); dt: (B, S, H); a: (H,) negative decay rates;
+    bmat/cmat: (B, S, G, N) with heads split evenly across G groups.
+    Returns (y (B, S, H, P) f32, h_last (B, H, P, N) f32).
+    """
+    Bsz, S, H, P = x.shape
+    G, N = bmat.shape[2], bmat.shape[3]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    rep = H // G
+    x = x.astype(jnp.float32)
+    dt = dt.astype(jnp.float32)
+    bh = jnp.repeat(bmat.astype(jnp.float32), rep, axis=2)   # (B, S, H, N)
+    ch = jnp.repeat(cmat.astype(jnp.float32), rep, axis=2)
+    da = dt * a.astype(jnp.float32)                          # (B, S, H)
+
+    xc = x.reshape(Bsz, nc, chunk, H, P)
+    dtc = dt.reshape(Bsz, nc, chunk, H)
+    dac = da.reshape(Bsz, nc, chunk, H)
+    bc = bh.reshape(Bsz, nc, chunk, H, N)
+    cc = ch.reshape(Bsz, nc, chunk, H, N)
+
+    cum = jnp.cumsum(dac, axis=2)                            # (B, nc, Q, H)
+    # intra-chunk (dual quadratic form)
+    seg = _segsum(jnp.moveaxis(dac, 3, 2))                   # (B, nc, H, Q, Q)
+    ldecay = jnp.exp(seg)
+    scores = jnp.einsum("bcihn,bcjhn->bchij", cc, bc)
+    m = scores * ldecay * jnp.moveaxis(dtc, 3, 2)[:, :, :, None, :]
+    y_intra = jnp.einsum("bchij,bcjhp->bcihp", m, xc)
+
+    # end-of-chunk states
+    decay_out = jnp.exp(cum[:, :, -1:, :] - cum)             # (B, nc, Q, H)
+    states = jnp.einsum("bcqh,bcqhn,bcqhp->bchpn",
+                        decay_out * dtc, bc, xc)             # (B, nc, H, P, N)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                  # (B, nc, H)
+
+    def body(h, xs):
+        st, dec = xs                                          # (B,H,P,N),(B,H)
+        h_new = h * dec[:, :, None, None] + st
+        return h_new, h
+
+    init = (jnp.zeros((Bsz, H, P, N), jnp.float32) if h0 is None
+            else h0.astype(jnp.float32))
+    h_last, prev = jax.lax.scan(
+        body, init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+        unroll=settings.scan_unroll())
+    prev = jnp.moveaxis(prev, 0, 1)                          # (B, nc, H, P, N)
+
+    y_inter = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", cc, prev, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)
+    return y, h_last
+
+
+def ssd_step(x_t, dt_t, a, b_t, c_t, h):
+    """One-token SSD update. x_t: (B,H,P); dt_t: (B,H); b_t/c_t: (B,G,N);
+    h: (B,H,P,N). Returns (y (B,H,P), h_new)."""
+    H = x_t.shape[1]
+    G = b_t.shape[1]
+    rep = H // G
+    bh = jnp.repeat(b_t.astype(jnp.float32), rep, axis=1)    # (B,H,N)
+    chh = jnp.repeat(c_t.astype(jnp.float32), rep, axis=1)
+    da = jnp.exp(dt_t.astype(jnp.float32) * a.astype(jnp.float32))  # (B,H)
+    h_new = (h * da[:, :, None, None]
+             + jnp.einsum("bh,bhn,bhp->bhpn", dt_t.astype(jnp.float32), bh,
+                          x_t.astype(jnp.float32)))
+    y = jnp.einsum("bhn,bhpn->bhp", chh, h_new)
+    return y, h_new
+
+
+# ---------------------------------------------------------------------------
+# Blocks / model
+# ---------------------------------------------------------------------------
+
+def _split_proj(cfg, zxbcdt):
+    D, d_in, H, ds, G, conv_ch = _dims(cfg)
+    z, xbc, dt = jnp.split(zxbcdt, [d_in, d_in + conv_ch], axis=-1)
+    return z, xbc, dt
+
+
+def _block_seq(cfg, lp_raw, lp, h, *, chunk):
+    Bsz, S, D = h.shape
+    _, d_in, H, ds, G, conv_ch = _dims(cfg)
+    P = cfg.ssm_head_dim
+    hn = nn.rms_norm(h, lp_raw["norm"])
+    z, xbc, dt_raw = _split_proj(cfg, hn @ lp["in_proj"])
+    xbc = jax.nn.silu(nn.causal_depthwise_conv1d(xbc, lp["conv_w"]) + lp["conv_b"])
+    xs, bmat, cmat = jnp.split(xbc, [d_in, d_in + G * ds], axis=-1)
+    xs = xs.reshape(Bsz, S, H, P)
+    bmat = bmat.reshape(Bsz, S, G, ds)
+    cmat = cmat.reshape(Bsz, S, G, ds)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + lp_raw["dt_bias"])
+    a = -jnp.exp(lp_raw["a_log"].astype(jnp.float32))
+    y, _ = ssd_chunked(xs, dt, a, bmat, cmat, chunk=chunk)
+    y = y + lp_raw["d_skip"].astype(jnp.float32)[:, None] * xs.astype(jnp.float32)
+    y = y.reshape(Bsz, S, d_in)
+    y = nn.rms_norm((y * jax.nn.silu(z.astype(jnp.float32))).astype(h.dtype),
+                    lp_raw["norm_gate"])
+    return h + y @ lp["out_proj"]
+
+
+def forward_hidden(cfg: ArchConfig, params: dict, tokens: jnp.ndarray, *,
+                   compute_dtype=jnp.bfloat16, remat: str = "nothing",
+                   constrain=None, **_unused) -> jnp.ndarray:
+    Bsz, S = tokens.shape
+    h = params["embed"][tokens].astype(compute_dtype)
+    chunk = min(cfg.ssm_chunk, S)
+    while S % chunk:
+        chunk //= 2
+
+    def layer(h, lp_raw):
+        lp = jax.tree.map(lambda a: a.astype(compute_dtype), lp_raw)
+        h = _block_seq(cfg, lp_raw, lp, h, chunk=chunk)
+        if constrain is not None:
+            h = constrain(h)
+        return h, None
+
+    if remat != "none":
+        layer = jax.checkpoint(layer, policy=jax.checkpoint_policies.nothing_saveable)
+    h, _ = jax.lax.scan(layer, h, params["layers"],
+                        unroll=settings.scan_unroll())
+    return nn.rms_norm(h, params["final_norm"])
+
+
+def loss_fn(cfg: ArchConfig, params: dict, batch: dict, *,
+            compute_dtype=jnp.bfloat16, remat: str = "nothing",
+            constrain=None, **_unused) -> jnp.ndarray:
+    h = forward_hidden(cfg, params, batch["tokens"],
+                       compute_dtype=compute_dtype, remat=remat,
+                       constrain=constrain)
+    return nn.chunked_ce_loss(h, params["embed"].T, batch["labels"])
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> dict:
+    D, d_in, H, ds, G, conv_ch = _dims(cfg)
+    L, W, P = cfg.n_layers, cfg.conv_width, cfg.ssm_head_dim
+    return {
+        "ssm": jnp.zeros((L, batch, H, P, ds), jnp.float32),
+        "conv": jnp.zeros((L, batch, W - 1, conv_ch), dtype),
+    }
+
+
+def decode_step(cfg: ArchConfig, params: dict, cache: dict,
+                token: jnp.ndarray, pos: jnp.ndarray, *,
+                compute_dtype=jnp.bfloat16, **_unused):
+    del pos  # state carries all history; position is implicit
+    Bsz = token.shape[0]
+    D, d_in, H, ds, G, conv_ch = _dims(cfg)
+    P = cfg.ssm_head_dim
+    h = params["embed"][token].astype(compute_dtype)  # (B, D)
+
+    def layer(carry, xs):
+        h = carry
+        lp_raw, ssm_st, conv_st = xs
+        lp = jax.tree.map(lambda a: a.astype(compute_dtype), lp_raw)
+        hn = nn.rms_norm(h, lp_raw["norm"])
+        z, xbc, dt_raw = _split_proj(cfg, hn @ lp["in_proj"])
+        xbc, conv_new = nn.conv1d_update(xbc, conv_st, lp["conv_w"])
+        xbc = jax.nn.silu(xbc + lp["conv_b"])
+        xs_t, b_t, c_t = jnp.split(xbc, [d_in, d_in + G * ds], axis=-1)
+        xs_t = xs_t.reshape(Bsz, H, P)
+        b_t = b_t.reshape(Bsz, G, ds)
+        c_t = c_t.reshape(Bsz, G, ds)
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + lp_raw["dt_bias"])
+        a = -jnp.exp(lp_raw["a_log"].astype(jnp.float32))
+        y, ssm_new = ssd_step(xs_t, dt, a, b_t, c_t, ssm_st)
+        y = y + lp_raw["d_skip"].astype(jnp.float32)[:, None] * xs_t.astype(jnp.float32)
+        y = y.reshape(Bsz, d_in)
+        y = nn.rms_norm((y * jax.nn.silu(z.astype(jnp.float32))).astype(h.dtype),
+                        lp_raw["norm_gate"])
+        return h + y @ lp["out_proj"], (ssm_new, conv_new.astype(conv_st.dtype))
+
+    h, (ssm_new, conv_new) = jax.lax.scan(
+        layer, h, (params["layers"], cache["ssm"], cache["conv"]),
+        unroll=settings.scan_unroll())
+    h = nn.rms_norm(h, params["final_norm"])
+    logits = h.astype(jnp.float32) @ params["embed"].T.astype(jnp.float32)
+    return logits, {"ssm": ssm_new, "conv": conv_new}

@@ -1,0 +1,341 @@
+"""RecurrentGemma / Griffin hybrid: RG-LRU recurrent blocks + local MQA
+attention in a (rec, rec, attn) pattern.
+
+RG-LRU (Real-Gated Linear Recurrent Unit, De et al. 2024):
+    r_t = sigmoid(W_a x_t + b_a)          recurrence gate
+    i_t = sigmoid(W_i x_t + b_i)          input gate
+    log a_t = -c * softplus(Lambda) * r_t          (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill uses jax.lax.associative_scan over the sequence (the
+recurrence is linear); decode is a single-step update — O(1) state, which is
+why this arch runs the long_500k shape.
+
+Layer stack: L = 3*G + T layers; the repeated (rec, rec, attn) triple is
+scanned over G groups; the T tail layers (rec) are unrolled.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as nn
+from . import settings
+from .config import ArchConfig
+
+RGLRU_C = 8.0
+
+
+# ---------------------------------------------------------------------------
+# Parameter spec
+# ---------------------------------------------------------------------------
+
+def _rec_spec(cfg: ArchConfig, lead: tuple[int, ...]):
+    D, dr, W = cfg.d_model, cfg.rnn_width, cfg.conv_width
+    return {
+        "norm1": (lead + (D,), ("layers", None), "norm"),
+        "norm2": (lead + (D,), ("layers", None), "norm"),
+        "w_x": (lead + (D, dr), ("layers", "embed", "mlp"), "fanin"),
+        "w_y": (lead + (D, dr), ("layers", "embed", "mlp"), "fanin"),
+        "conv_w": (lead + (W, dr), ("layers", None, "mlp"), "fanin"),
+        "conv_b": (lead + (dr,), ("layers", "mlp"), "zeros"),
+        "w_a": (lead + (dr, dr), ("layers", "mlp", "mlp2"), "fanin"),
+        "b_a": (lead + (dr,), ("layers", "mlp"), "zeros"),
+        "w_i": (lead + (dr, dr), ("layers", "mlp", "mlp2"), "fanin"),
+        "b_i": (lead + (dr,), ("layers", "mlp"), "zeros"),
+        "lam": (lead + (dr,), ("layers", "mlp"), "lambda"),
+        "w_out": (lead + (dr, D), ("layers", "mlp", "embed"), "fanin"),
+        # MLP half of the residual block
+        "w_gate": (lead + (D, cfg.d_ff), ("layers", "embed", "mlp"), "fanin"),
+        "w_up": (lead + (D, cfg.d_ff), ("layers", "embed", "mlp"), "fanin"),
+        "w_down": (lead + (cfg.d_ff, D), ("layers", "mlp", "embed"), "fanin"),
+    }
+
+
+def _attn_spec(cfg: ArchConfig, lead: tuple[int, ...]):
+    D, hd = cfg.d_model, cfg.hd
+    Hq, Hkv = cfg.n_heads, cfg.n_kv_heads
+    return {
+        "norm1": (lead + (D,), ("layers", None), "norm"),
+        "norm2": (lead + (D,), ("layers", None), "norm"),
+        "wq": (lead + (D, Hq * hd), ("layers", "embed", "heads"), "fanin"),
+        "wk": (lead + (D, Hkv * hd), ("layers", "embed", "heads"), "fanin"),
+        "wv": (lead + (D, Hkv * hd), ("layers", "embed", "heads"), "fanin"),
+        "wo": (lead + (Hq * hd, D), ("layers", "heads", "embed"), "fanin"),
+        "w_gate": (lead + (D, cfg.d_ff), ("layers", "embed", "mlp"), "fanin"),
+        "w_up": (lead + (D, cfg.d_ff), ("layers", "embed", "mlp"), "fanin"),
+        "w_down": (lead + (cfg.d_ff, D), ("layers", "mlp", "embed"), "fanin"),
+    }
+
+
+def _layout(cfg: ArchConfig) -> tuple[int, int]:
+    pat = cfg.block_pattern or ("rec", "rec", "attn")
+    assert pat == ("rec", "rec", "attn"), pat
+    groups = cfg.n_layers // 3
+    tail = cfg.n_layers - 3 * groups
+    return groups, tail
+
+
+def _spec(cfg: ArchConfig) -> dict[str, tuple]:
+    G, T = _layout(cfg)
+    D, V = cfg.d_model, cfg.vocab
+    s: dict[str, Any] = {"embed": ((V, D), ("vocab_fsdp", "embed_tp"), "embed")}
+    for name, sub in (("rec_a", _rec_spec(cfg, (G,))),
+                      ("rec_b", _rec_spec(cfg, (G,))),
+                      ("attn", _attn_spec(cfg, (G,)))):
+        for k, v in sub.items():
+            s[f"groups/{name}/{k}"] = v
+    for t in range(T):
+        for k, v in _rec_spec(cfg, ()).items():
+            s[f"tail_{t}/{k}"] = (v[0], v[1][1:], v[2])
+    s["final_norm"] = ((D,), (None,), "norm")
+    return s
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.float32) -> dict:
+    from .transformer import _assign
+    params: dict[str, Any] = {}
+    for i, (path, (shape, _, kind)) in enumerate(sorted(_spec(cfg).items())):
+        k = jax.random.fold_in(key, i)
+        if kind == "norm":
+            leaf = jnp.ones(shape, dtype)
+        elif kind == "zeros":
+            leaf = jnp.zeros(shape, dtype)
+        elif kind == "embed":
+            leaf = jax.random.normal(k, shape, dtype) * 0.02
+        elif kind == "lambda":
+            # init so that a = exp(-c*softplus(lam)) in a healthy decay range
+            u = jax.random.uniform(k, shape, dtype, 0.9, 0.999)
+            leaf = jnp.log(jnp.expm1(-jnp.log(u) / RGLRU_C))
+        else:
+            leaf = jax.random.normal(k, shape, dtype) / (shape[-2] ** 0.5)
+        _assign(params, path, leaf)
+    return params
+
+
+def param_axes(cfg: ArchConfig) -> dict:
+    from .transformer import _assign
+    axes: dict[str, Any] = {}
+    for path, (_, ax, _) in sorted(_spec(cfg).items()):
+        _assign(axes, path, ax)
+    return axes
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU core
+# ---------------------------------------------------------------------------
+
+def rglru_scan(x: jnp.ndarray, r: jnp.ndarray, i: jnp.ndarray,
+               lam: jnp.ndarray, h0: jnp.ndarray | None = None):
+    """x, r, i: (B, S, dr). Returns (y (B,S,dr), h_last (B,dr)); f32 math."""
+    x, r, i = (t.astype(jnp.float32) for t in (x, r, i))
+    log_a = -RGLRU_C * jax.nn.softplus(lam.astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * x)
+    if h0 is not None:
+        # fold the initial state in as a virtual step 0
+        a = jnp.concatenate([jnp.zeros_like(a[:, :1]), a], axis=1)
+        gated = jnp.concatenate([h0.astype(jnp.float32)[:, None, :], gated], axis=1)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    av, bv = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    y = bv if h0 is None else bv[:, 1:]
+    return y, y[:, -1, :]
+
+
+def rglru_step(x_t, r_t, i_t, lam, h):
+    """Single decode step; all (B, dr); h (B, dr) f32."""
+    log_a = -RGLRU_C * jax.nn.softplus(lam.astype(jnp.float32)) * r_t.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    h_new = a * h + jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (
+        i_t.astype(jnp.float32) * x_t.astype(jnp.float32))
+    return h_new, h_new
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _rec_block_seq(cfg, lp_raw, lp, h):
+    """Recurrent temporal block + MLP residual, full sequence."""
+    B, S, D = h.shape
+    hn = nn.rms_norm(h, lp_raw["norm1"])
+    gx = hn @ lp["w_x"]                                   # (B, S, dr)
+    gy = jax.nn.gelu(hn @ lp["w_y"], approximate=True)
+    gx = nn.causal_depthwise_conv1d(gx, lp["conv_w"]) + lp["conv_b"]
+    r = jax.nn.sigmoid(gx @ lp["w_a"] + lp["b_a"])
+    i = jax.nn.sigmoid(gx @ lp["w_i"] + lp["b_i"])
+    y, _ = rglru_scan(gx, r, i, lp_raw["lam"])
+    out = (y.astype(h.dtype) * gy) @ lp["w_out"]
+    h = h + out
+    hn2 = nn.rms_norm(h, lp_raw["norm2"])
+    return h + nn.geglu(hn2, lp["w_gate"], lp["w_up"], lp["w_down"])
+
+
+def _attn_block_seq(cfg, lp_raw, lp, h, positions, window):
+    B, S, D = h.shape
+    hn = nn.rms_norm(h, lp_raw["norm1"])
+    q = (hn @ lp["wq"]).reshape(B, S, cfg.n_heads, cfg.hd)
+    k = (hn @ lp["wk"]).reshape(B, S, cfg.n_kv_heads, cfg.hd)
+    v = (hn @ lp["wv"]).reshape(B, S, cfg.n_kv_heads, cfg.hd)
+    q = nn.apply_rope(q, positions, theta=cfg.rope_theta)
+    k = nn.apply_rope(k, positions, theta=cfg.rope_theta)
+    attn = nn.attention(q, k, v, positions, positions, causal=True,
+                        window=window)
+    h = h + attn.reshape(B, S, -1) @ lp["wo"]
+    hn2 = nn.rms_norm(h, lp_raw["norm2"])
+    return h + nn.geglu(hn2, lp["w_gate"], lp["w_up"], lp["w_down"])
+
+
+def forward_hidden(cfg: ArchConfig, params: dict, tokens: jnp.ndarray, *,
+                   compute_dtype=jnp.bfloat16, remat: str = "nothing",
+                   constrain=None, **_unused) -> jnp.ndarray:
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    h = params["embed"][tokens].astype(compute_dtype)
+    h = h * jnp.asarray(cfg.d_model ** 0.5, compute_dtype)
+    window = cfg.window_for_layer  # local attn windows from pattern
+    win = jnp.asarray(cfg.window_pattern[-1] or (1 << 30), jnp.int32)
+
+    def group(h, gp_raw):
+        gp = jax.tree.map(lambda a: a.astype(compute_dtype), gp_raw)
+        h = _rec_block_seq(cfg, gp_raw["rec_a"], gp["rec_a"], h)
+        h = _rec_block_seq(cfg, gp_raw["rec_b"], gp["rec_b"], h)
+        h = _attn_block_seq(cfg, gp_raw["attn"], gp["attn"], h, positions, win)
+        if constrain is not None:
+            h = constrain(h)
+        return h, None
+
+    if remat != "none":
+        group = jax.checkpoint(group, policy=jax.checkpoint_policies.nothing_saveable)
+    h, _ = jax.lax.scan(group, h, params["groups"],
+                        unroll=settings.scan_unroll())
+    G, T = _layout(cfg)
+    for t in range(T):
+        lp_raw = params[f"tail_{t}"]
+        lp = jax.tree.map(lambda a: a.astype(compute_dtype), lp_raw)
+        h = _rec_block_seq(cfg, lp_raw, lp, h)
+    return nn.rms_norm(h, params["final_norm"])
+
+
+def loss_fn(cfg: ArchConfig, params: dict, batch: dict, *,
+            compute_dtype=jnp.bfloat16, remat: str = "nothing",
+            constrain=None, **_unused) -> jnp.ndarray:
+    h = forward_hidden(cfg, params, batch["tokens"],
+                       compute_dtype=compute_dtype, remat=remat,
+                       constrain=constrain)
+    return nn.chunked_ce_loss(h, params["embed"].T, batch["labels"])
+
+
+# ---------------------------------------------------------------------------
+# Decode — O(1) recurrent state + ring-buffer local-attention cache
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> dict:
+    G, T = _layout(cfg)
+    dr, W = cfg.rnn_width, cfg.conv_width
+    win = min(max_seq, int(cfg.window_pattern[-1] or max_seq))
+    def rec_state(n):
+        return {
+            "h": jnp.zeros((n, batch, dr), jnp.float32),
+            "conv": jnp.zeros((n, batch, W - 1, dr), dtype),
+        }
+    return {
+        "rec_a": rec_state(G), "rec_b": rec_state(G),
+        "attn": {
+            "k": jnp.zeros((G, batch, cfg.n_kv_heads, win, cfg.hd), dtype),
+            "v": jnp.zeros((G, batch, cfg.n_kv_heads, win, cfg.hd), dtype),
+            # empty slots get a huge position so the causal mask excludes them
+            "pos": jnp.full((G, batch, win), 1 << 30, jnp.int32),
+        },
+        "tail": rec_state(T),
+    }
+
+
+def _rec_block_step(cfg, lp_raw, lp, h, state):
+    """h: (B, D) single token; state: {'h','conv'}."""
+    hn = nn.rms_norm(h, lp_raw["norm1"])
+    gx = hn @ lp["w_x"]
+    gy = jax.nn.gelu(hn @ lp["w_y"], approximate=True)
+    gx, conv_new = nn.conv1d_update(gx, state["conv"], lp["conv_w"])
+    gx = gx + lp["conv_b"]
+    r = jax.nn.sigmoid(gx @ lp["w_a"] + lp["b_a"])
+    i = jax.nn.sigmoid(gx @ lp["w_i"] + lp["b_i"])
+    y, h_new = rglru_step(gx, r, i, lp_raw["lam"], state["h"])
+    out = (y.astype(h.dtype) * gy) @ lp["w_out"]
+    h = h + out
+    hn2 = nn.rms_norm(h, lp_raw["norm2"])
+    h = h + nn.geglu(hn2, lp["w_gate"], lp["w_up"], lp["w_down"])
+    return h, {"h": h_new, "conv": conv_new}
+
+
+def _attn_block_step(cfg, lp_raw, lp, h, state, pos, win_size):
+    B = h.shape[0]
+    hn = nn.rms_norm(h, lp_raw["norm1"])
+    q = (hn @ lp["wq"]).reshape(B, 1, cfg.n_heads, cfg.hd)
+    k = (hn @ lp["wk"]).reshape(B, 1, cfg.n_kv_heads, cfg.hd)
+    v = (hn @ lp["wv"]).reshape(B, 1, cfg.n_kv_heads, cfg.hd)
+    pos_q = pos[:, None]
+    q = nn.apply_rope(q, pos_q, theta=cfg.rope_theta)
+    k = nn.apply_rope(k, pos_q, theta=cfg.rope_theta)
+    slot = pos % win_size
+    kc = jax.vmap(lambda c, u, p: jax.lax.dynamic_update_slice(c, u, (0, p, 0)))(
+        state["k"], jnp.swapaxes(k, 1, 2).astype(state["k"].dtype), slot)
+    vc = jax.vmap(lambda c, u, p: jax.lax.dynamic_update_slice(c, u, (0, p, 0)))(
+        state["v"], jnp.swapaxes(v, 1, 2).astype(state["v"].dtype), slot)
+    pos_buf = jax.vmap(lambda c, u, p: jax.lax.dynamic_update_slice(c, u, (p,)))(
+        state["pos"], pos[:, None], slot)
+    win = jnp.asarray(cfg.window_pattern[-1] or (1 << 30), jnp.int32)
+    attn = nn.attention(q, jnp.swapaxes(kc, 1, 2), jnp.swapaxes(vc, 1, 2),
+                        pos_q, pos_buf, causal=True, window=win,
+                        dense_below=1 << 62)
+    h = h + attn.reshape(B, -1) @ lp["wo"]
+    hn2 = nn.rms_norm(h, lp_raw["norm2"])
+    h = h + nn.geglu(hn2, lp["w_gate"], lp["w_up"], lp["w_down"])
+    return h, {"k": kc, "v": vc, "pos": pos_buf}
+
+
+def decode_step(cfg: ArchConfig, params: dict, cache: dict,
+                token: jnp.ndarray, pos: jnp.ndarray, *,
+                compute_dtype=jnp.bfloat16, **_unused):
+    B = token.shape[0]
+    h = params["embed"][token].astype(compute_dtype)
+    h = h * jnp.asarray(cfg.d_model ** 0.5, compute_dtype)
+    win_size = cache["attn"]["k"].shape[3]
+
+    def group(carry, xs):
+        h = carry
+        gp_raw, st_a, st_b, st_attn = xs
+        gp = jax.tree.map(lambda a: a.astype(compute_dtype), gp_raw)
+        h, st_a = _rec_block_step(cfg, gp_raw["rec_a"], gp["rec_a"], h, st_a)
+        h, st_b = _rec_block_step(cfg, gp_raw["rec_b"], gp["rec_b"], h, st_b)
+        h, st_attn = _attn_block_step(cfg, gp_raw["attn"], gp["attn"], h,
+                                      st_attn, pos, win_size)
+        return h, (st_a, st_b, st_attn)
+
+    h, (st_a, st_b, st_attn) = jax.lax.scan(
+        group, h, (params["groups"], cache["rec_a"], cache["rec_b"],
+                   cache["attn"]), unroll=settings.scan_unroll())
+    G, T = _layout(cfg)
+    tail_state = dict(cache["tail"])
+    for t in range(T):
+        lp_raw = params[f"tail_{t}"]
+        lp = jax.tree.map(lambda a: a.astype(compute_dtype), lp_raw)
+        st = {"h": cache["tail"]["h"][t], "conv": cache["tail"]["conv"][t]}
+        h, st_new = _rec_block_step(cfg, lp_raw, lp, h, st)
+        tail_state = {
+            "h": tail_state["h"].at[t].set(st_new["h"]),
+            "conv": tail_state["conv"].at[t].set(st_new["conv"]),
+        }
+    h = nn.rms_norm(h, params["final_norm"])
+    logits = h.astype(jnp.float32) @ params["embed"].T.astype(jnp.float32)
+    new_cache = {"rec_a": st_a, "rec_b": st_b, "attn": st_attn,
+                 "tail": tail_state}
+    return logits, new_cache

@@ -1,0 +1,360 @@
+"""Decoder-only transformer family: llama/deepseek/qwen (dense, GQA,
+optional QKV bias), gemma2 (local-global alternation, softcaps, post-norms),
+mixtral/arctic (MoE, optional dense-residual hybrid), qwen2-vl (M-RoPE +
+patch-embedding stub).
+
+Parameters are a flat dict with per-layer tensors stacked on a leading L axis
+so the layer stack runs under lax.scan (+ remat). `param_axes` mirrors the
+param tree with logical sharding axes consumed by launch/sharding.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as nn
+from . import settings
+from .config import ArchConfig, GLOBAL_WINDOW
+from .moe import moe_capacity, moe_ffn
+
+
+# ---------------------------------------------------------------------------
+# Parameter specification
+# ---------------------------------------------------------------------------
+
+def _spec(cfg: ArchConfig) -> dict[str, tuple[tuple[int, ...], tuple, str]]:
+    """path -> (shape, logical_axes, init_kind)."""
+    D, hd = cfg.d_model, cfg.hd
+    Hq, Hkv, F, V, L = cfg.n_heads, cfg.n_kv_heads, cfg.d_ff, cfg.vocab, cfg.n_layers
+    s: dict[str, tuple] = {}
+    s["embed"] = ((V, D), ("vocab_fsdp", "embed_tp"), "embed")
+    lyr = {
+        "norm1": ((L, D), ("layers", None), "norm"),
+        "norm2": ((L, D), ("layers", None), "norm"),
+        "wq": ((L, D, Hq * hd), ("layers", "embed", "heads"), "fanin"),
+        "wk": ((L, D, Hkv * hd), ("layers", "embed", "heads"), "fanin"),
+        "wv": ((L, D, Hkv * hd), ("layers", "embed", "heads"), "fanin"),
+        "wo": ((L, Hq * hd, D), ("layers", "heads", "embed"), "fanin"),
+    }
+    if cfg.qkv_bias:
+        lyr["bq"] = ((L, Hq * hd), ("layers", "heads"), "zeros")
+        lyr["bk"] = ((L, Hkv * hd), ("layers", "heads"), "zeros")
+        lyr["bv"] = ((L, Hkv * hd), ("layers", "heads"), "zeros")
+    if cfg.post_norm:
+        lyr["norm1_post"] = ((L, D), ("layers", None), "norm")
+        lyr["norm2_post"] = ((L, D), ("layers", None), "norm")
+    if cfg.moe is not None:
+        e = cfg.moe
+        lyr["router"] = ((L, D, e.num_experts), ("layers", "embed", None), "fanin")
+        lyr["we_gate"] = ((L, e.num_experts, D, e.d_ff_expert),
+                          ("layers", "experts", "embed", "expert_mlp"), "fanin")
+        lyr["we_up"] = ((L, e.num_experts, D, e.d_ff_expert),
+                        ("layers", "experts", "embed", "expert_mlp"), "fanin")
+        lyr["we_down"] = ((L, e.num_experts, e.d_ff_expert, D),
+                          ("layers", "experts", "expert_mlp", "embed"), "fanin")
+        if e.dense_residual_ff:
+            Fd = e.dense_residual_ff
+            lyr["w_gate"] = ((L, D, Fd), ("layers", "embed", "mlp"), "fanin")
+            lyr["w_up"] = ((L, D, Fd), ("layers", "embed", "mlp"), "fanin")
+            lyr["w_down"] = ((L, Fd, D), ("layers", "mlp", "embed"), "fanin")
+    else:
+        lyr["w_gate"] = ((L, D, F), ("layers", "embed", "mlp"), "fanin")
+        lyr["w_up"] = ((L, D, F), ("layers", "embed", "mlp"), "fanin")
+        lyr["w_down"] = ((L, F, D), ("layers", "mlp", "embed"), "fanin")
+    s.update({f"layers/{k}": v for k, v in lyr.items()})
+    s["final_norm"] = ((D,), (None,), "norm")
+    if not cfg.tie_embeddings:
+        s["unembed"] = ((D, V), ("embed", "vocab"), "fanin")
+    return s
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.float32) -> dict:
+    params: dict[str, Any] = {}
+    spec = _spec(cfg)
+    for i, (path, (shape, _, kind)) in enumerate(sorted(spec.items())):
+        k = jax.random.fold_in(key, i)
+        if kind == "norm":
+            leaf = jnp.zeros(shape, dtype) if cfg.norm_offset else jnp.ones(shape, dtype)
+        elif kind == "zeros":
+            leaf = jnp.zeros(shape, dtype)
+        elif kind == "embed":
+            leaf = jax.random.normal(k, shape, dtype) * 0.02
+        else:  # fanin
+            std = 1.0 / (shape[-2] ** 0.5)
+            leaf = jax.random.normal(k, shape, dtype) * std
+        _assign(params, path, leaf)
+    return params
+
+
+def param_axes(cfg: ArchConfig) -> dict:
+    axes: dict[str, Any] = {}
+    for path, (_, ax, _) in sorted(_spec(cfg).items()):
+        _assign(axes, path, ax)
+    return axes
+
+
+def _assign(tree: dict, path: str, leaf) -> None:
+    parts = path.split("/")
+    for p in parts[:-1]:
+        tree = tree.setdefault(p, {})
+    tree[parts[-1]] = leaf
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _rope(cfg: ArchConfig, x, positions, positions3):
+    if cfg.mrope_sections is not None:
+        return nn.apply_mrope(x, positions3, sections=cfg.mrope_sections,
+                              theta=cfg.rope_theta)
+    return nn.apply_rope(x, positions, theta=cfg.rope_theta)
+
+
+def _ffn(cfg: ArchConfig, lp: dict, h_norm: jnp.ndarray, *,
+         moe_groups: int, full_capacity: bool = False) -> jnp.ndarray:
+    """FFN (dense / MoE / arctic hybrid) on (B, S, D). `full_capacity`
+    disables token dropping (decode: a dropped token would corrupt the
+    stream; T is tiny there so the buffer cost is negligible)."""
+    B, S, D = h_norm.shape
+    if cfg.moe is None:
+        if cfg.mlp == "geglu":
+            return nn.geglu(h_norm, lp["w_gate"], lp["w_up"], lp["w_down"])
+        return nn.swiglu(h_norm, lp["w_gate"], lp["w_up"], lp["w_down"])
+    flat = h_norm.reshape(B * S, D)
+    cap = (B * S // max(moe_groups, 1)) if full_capacity else None
+    out = moe_ffn(flat, lp["router"], lp["we_gate"], lp["we_up"],
+                  lp["we_down"], cfg.moe, groups=moe_groups,
+                  capacity=cap).reshape(B, S, D)
+    if cfg.moe.dense_residual_ff:
+        out = out + nn.swiglu(h_norm, lp["w_gate"], lp["w_up"], lp["w_down"])
+    return out
+
+
+def _qkv(cfg: ArchConfig, lp: dict, x: jnp.ndarray):
+    B, S, _ = x.shape
+    Hq, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = x @ lp["wq"]
+    k = x @ lp["wk"]
+    v = x @ lp["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+    return (q.reshape(B, S, Hq, hd), k.reshape(B, S, Hkv, hd),
+            v.reshape(B, S, Hkv, hd))
+
+
+def forward_hidden(cfg: ArchConfig, params: dict, tokens: jnp.ndarray, *,
+                   positions: jnp.ndarray | None = None,
+                   positions3: jnp.ndarray | None = None,
+                   patches: jnp.ndarray | None = None,
+                   patch_positions: jnp.ndarray | None = None,
+                   compute_dtype=jnp.bfloat16,
+                   remat: str = "nothing", moe_groups: int = 1,
+                   constrain=None) -> jnp.ndarray:
+    """Full-sequence forward to final hidden states (B, S, D).
+
+    `constrain` (optional) re-asserts the residual-stream sharding each layer
+    (sequence parallelism under pjit)."""
+    B, S = tokens.shape
+    D = cfg.d_model
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    h = params["embed"][tokens].astype(compute_dtype)
+    if cfg.embed_scale:
+        h = h * jnp.asarray(D ** 0.5, compute_dtype)
+    if patches is not None:
+        # VLM stub: precomputed patch embeddings replace placeholder tokens.
+        h = jax.vmap(lambda hh, pp, ii: hh.at[ii].set(pp))(
+            h, patches.astype(compute_dtype), patch_positions)
+
+    windows = jnp.asarray(cfg.window_array(), dtype=jnp.int32)
+
+    def layer(h, xs):
+        lp_raw, window = xs
+        lp = jax.tree.map(lambda a: a.astype(compute_dtype), lp_raw)
+        hn = nn.rms_norm(h, lp_raw["norm1"], offset=cfg.norm_offset)
+        q, k, v = _qkv(cfg, lp, hn)
+        q = _rope(cfg, q, positions, positions3)
+        k = _rope(cfg, k, positions, positions3)
+        attn = nn.attention(q, k, v, positions, positions,
+                            causal=True, window=window,
+                            softcap=cfg.attn_softcap)
+        attn = attn.reshape(B, S, cfg.n_heads * cfg.hd) @ lp["wo"]
+        if settings.get().sp_block_outputs and constrain is not None:
+            attn = constrain(attn)  # partial sums lower to reduce-scatter
+        if cfg.post_norm:
+            attn = nn.rms_norm(attn, lp_raw["norm1_post"], offset=cfg.norm_offset)
+        h = h + attn
+        hn2 = nn.rms_norm(h, lp_raw["norm2"], offset=cfg.norm_offset)
+        ff = _ffn(cfg, lp, hn2, moe_groups=moe_groups)
+        if settings.get().sp_block_outputs and constrain is not None:
+            ff = constrain(ff)
+        if cfg.post_norm:
+            ff = nn.rms_norm(ff, lp_raw["norm2_post"], offset=cfg.norm_offset)
+        h = h + ff
+        if constrain is not None:
+            h = constrain(h)
+        return h, None
+
+    if remat == "nothing":
+        layer = jax.checkpoint(layer, policy=jax.checkpoint_policies.nothing_saveable)
+    elif remat == "dots":
+        layer = jax.checkpoint(
+            layer, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+
+    h, _ = jax.lax.scan(layer, h, (params["layers"], windows),
+                        unroll=settings.scan_unroll())
+    return nn.rms_norm(h, params["final_norm"], offset=cfg.norm_offset)
+
+
+def loss_fn(cfg: ArchConfig, params: dict, batch: dict, *,
+            compute_dtype=jnp.bfloat16, remat: str = "nothing",
+            moe_groups: int = 1, constrain=None) -> jnp.ndarray:
+    h = forward_hidden(cfg, params, batch["tokens"],
+                       positions3=batch.get("positions3"),
+                       patches=batch.get("patches"),
+                       patch_positions=batch.get("patch_positions"),
+                       compute_dtype=compute_dtype, remat=remat,
+                       moe_groups=moe_groups, constrain=constrain)
+    unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    return nn.chunked_ce_loss(h, unembed, batch["labels"],
+                              softcap=cfg.final_softcap,
+                              mask=batch.get("loss_mask"))
+
+
+# ---------------------------------------------------------------------------
+# Decode (single-token serve step with KV cache)
+# ---------------------------------------------------------------------------
+
+def cache_len(cfg: ArchConfig, max_seq: int) -> int:
+    """Ring-buffer length: bounded by the largest attention window when every
+    layer is windowed (e.g. mixtral SWA -> 4096 slots even at 512k context)."""
+    widest = max(cfg.window_for_layer(i) for i in range(cfg.n_layers))
+    return min(max_seq, widest)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> dict:
+    L, Hkv, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+    C = cache_len(cfg, max_seq)
+    return {
+        "k": jnp.zeros((L, batch, Hkv, C, hd), dtype),
+        "v": jnp.zeros((L, batch, Hkv, C, hd), dtype),
+        # absolute position per slot; huge sentinel = empty (causally masked)
+        "pos": jnp.full((L, batch, C), 1 << 30, jnp.int32),
+    }
+
+
+def decode_step(cfg: ArchConfig, params: dict, cache: dict,
+                token: jnp.ndarray, pos: jnp.ndarray, *,
+                positions3: jnp.ndarray | None = None,
+                compute_dtype=jnp.bfloat16, moe_groups: int = 1):
+    """token: (B,) int32; pos: (B,) int32 (cache write index per sequence).
+
+    Returns (logits (B, V) f32, new_cache).
+    """
+    B = token.shape[0]
+    D, Hq, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    C = cache["k"].shape[3]
+    h = params["embed"][token].astype(compute_dtype)[:, None, :]  # (B, 1, D)
+    if cfg.embed_scale:
+        h = h * jnp.asarray(D ** 0.5, compute_dtype)
+    pos_q = pos[:, None]                                  # (B, 1)
+    slot = pos % C                                        # ring-buffer slot
+    windows = jnp.asarray(cfg.window_array(), dtype=jnp.int32)
+
+    def layer(h, xs):
+        lp_raw, window, kc, vc, pc = xs
+        lp = jax.tree.map(lambda a: a.astype(compute_dtype), lp_raw)
+        hn = nn.rms_norm(h, lp_raw["norm1"], offset=cfg.norm_offset)
+        q, k, v = _qkv(cfg, lp, hn)                       # (B, 1, H*, hd)
+        q = _rope(cfg, q, pos_q, positions3)
+        k = _rope(cfg, k, pos_q, positions3)
+        kc = jax.vmap(
+            lambda c, u, p: jax.lax.dynamic_update_slice(c, u, (0, p, 0))
+        )(kc, jnp.swapaxes(k, 1, 2).astype(kc.dtype), slot)
+        vc = jax.vmap(
+            lambda c, u, p: jax.lax.dynamic_update_slice(c, u, (0, p, 0))
+        )(vc, jnp.swapaxes(v, 1, 2).astype(vc.dtype), slot)
+        pc = jax.vmap(lambda c, u, p: jax.lax.dynamic_update_slice(c, u, (p,))
+                      )(pc, pos[:, None], slot)
+        attn = nn.attention(q, jnp.swapaxes(kc, 1, 2), jnp.swapaxes(vc, 1, 2),
+                            pos_q, pc, causal=True, window=window,
+                            softcap=cfg.attn_softcap,
+                            dense_below=1 << 62)
+        attn = attn.reshape(B, 1, Hq * hd) @ lp["wo"]
+        if cfg.post_norm:
+            attn = nn.rms_norm(attn, lp_raw["norm1_post"], offset=cfg.norm_offset)
+        h = h + attn
+        hn2 = nn.rms_norm(h, lp_raw["norm2"], offset=cfg.norm_offset)
+        ff = _ffn(cfg, lp, hn2, moe_groups=moe_groups, full_capacity=True)
+        if cfg.post_norm:
+            ff = nn.rms_norm(ff, lp_raw["norm2_post"], offset=cfg.norm_offset)
+        return h + ff, (kc, vc, pc)
+
+    h, (k_new, v_new, p_new) = jax.lax.scan(
+        layer, h, (params["layers"], windows, cache["k"], cache["v"],
+                   cache["pos"]), unroll=settings.scan_unroll())
+    h = nn.rms_norm(h, params["final_norm"], offset=cfg.norm_offset)
+    unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = h[:, 0, :].astype(jnp.float32) @ unembed.astype(jnp.float32)
+    logits = nn.soft_cap(logits, cfg.final_softcap)
+    return logits, {"k": k_new, "v": v_new, "pos": p_new}
+
+
+def prefill(cfg: ArchConfig, params: dict, tokens: jnp.ndarray, max_seq: int,
+            *, positions3=None, compute_dtype=jnp.bfloat16,
+            moe_groups: int = 1):
+    """Run the prompt, return (last-token logits, filled cache).
+
+    Simple full-forward prefill that also returns the per-layer K/V.
+    """
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    h = params["embed"][tokens].astype(compute_dtype)
+    if cfg.embed_scale:
+        h = h * jnp.asarray(cfg.d_model ** 0.5, compute_dtype)
+    windows = jnp.asarray(cfg.window_array(), dtype=jnp.int32)
+
+    def layer(h, xs):
+        lp_raw, window = xs
+        lp = jax.tree.map(lambda a: a.astype(compute_dtype), lp_raw)
+        hn = nn.rms_norm(h, lp_raw["norm1"], offset=cfg.norm_offset)
+        q, k, v = _qkv(cfg, lp, hn)
+        q = _rope(cfg, q, positions, positions3)
+        k = _rope(cfg, k, positions, positions3)
+        attn = nn.attention(q, k, v, positions, positions, causal=True,
+                            window=window, softcap=cfg.attn_softcap)
+        attn = attn.reshape(B, S, cfg.n_heads * cfg.hd) @ lp["wo"]
+        if cfg.post_norm:
+            attn = nn.rms_norm(attn, lp_raw["norm1_post"], offset=cfg.norm_offset)
+        h = h + attn
+        hn2 = nn.rms_norm(h, lp_raw["norm2"], offset=cfg.norm_offset)
+        ff = _ffn(cfg, lp, hn2, moe_groups=moe_groups)
+        if cfg.post_norm:
+            ff = nn.rms_norm(ff, lp_raw["norm2_post"], offset=cfg.norm_offset)
+        C = cache_len(cfg, max_seq)
+        assert S <= C, "prefill prompt longer than cache"
+        kpad = jnp.zeros((B, cfg.n_kv_heads, C, cfg.hd), compute_dtype)
+        kpad = jax.lax.dynamic_update_slice(
+            kpad, jnp.swapaxes(k, 1, 2).astype(compute_dtype), (0, 0, 0, 0))
+        vpad = jnp.zeros((B, cfg.n_kv_heads, C, cfg.hd), compute_dtype)
+        vpad = jax.lax.dynamic_update_slice(
+            vpad, jnp.swapaxes(v, 1, 2).astype(compute_dtype), (0, 0, 0, 0))
+        return h + ff, (kpad, vpad)
+
+    h, (kc, vc) = jax.lax.scan(layer, h, (params["layers"], windows),
+                               unroll=settings.scan_unroll())
+    h = nn.rms_norm(h, params["final_norm"], offset=cfg.norm_offset)
+    unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = h[:, -1, :].astype(jnp.float32) @ unembed.astype(jnp.float32)
+    logits = nn.soft_cap(logits, cfg.final_softcap)
+    C = cache_len(cfg, max_seq)
+    pos_buf = jnp.broadcast_to(
+        jnp.where(jnp.arange(C) < S, jnp.arange(C), 1 << 30),
+        (cfg.n_layers, B, C)).astype(jnp.int32)
+    return logits, {"k": kc, "v": vc, "pos": pos_buf}

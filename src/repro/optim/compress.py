@@ -1,0 +1,125 @@
+"""Tensorized-RP gradient compression with error feedback.
+
+The paper's map f_TT(R) / f_CP(R) gives an oblivious linear sketch whose
+adjoint is an unbiased reconstruction (E[vec(S_i)vec(S_i)^T] = I). That makes
+it a drop-in gradient compressor for the SLOW cross-pod axis:
+
+  worker w:  p_w = g_w + e_w                 (error feedback)
+             y_w = Sketch_t(p_w)             (k floats per 1M-float bucket)
+  network:   y   = mean_w y_w                (all-reduce of sketches ONLY)
+  worker w:  g_hat  = Unsketch_t(y)          (shared PRNG -> same operator)
+             e_w'   = p_w - Unsketch_t(y_w)  (local residual)
+
+All workers regenerate the operator from fold_in(key, step) — the operator
+itself (O(kNdR^2) floats) never crosses the network; the paper's memory bound
+is exactly why the whole operator fits in VMEM/cache. Topology: params are
+FSDP-sharded *within* a pod and replicated *across* pods (DiLoCo-style
+DDP-of-FSDP), so the pod axis syncs via this compressed all-reduce.
+
+Fidelity/convergence are exercised in tests/benchmarks (CPU, small meshes);
+the dry-run lowers the same code on the production mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sketch import PytreeSketcher, SketchConfig
+
+
+def parse_compress_flag(flag: str) -> SketchConfig:
+    """'tt:k=4096,rank=2[,dims=128x128x64]' -> SketchConfig."""
+    fmt, _, rest = flag.partition(":")
+    kw: dict[str, Any] = {"fmt": fmt}
+    if rest:
+        for part in rest.split(","):
+            key, _, val = part.partition("=")
+            if key == "dims":
+                dims = tuple(int(x) for x in val.split("x"))
+                kw["dims"] = dims
+                kw["bucket_elems"] = 1
+                for d in dims:
+                    kw["bucket_elems"] *= d
+            elif key in ("k", "rank"):
+                kw[key] = int(val)
+    return SketchConfig(**kw)
+
+
+@dataclasses.dataclass
+class SketchCompressor:
+    cfg: SketchConfig
+    pod_axis: str | None = None     # lax axis name inside shard_map
+    base_key: int = 0x5EED
+
+    def _sketcher(self, tree) -> PytreeSketcher:
+        return PytreeSketcher(self.cfg, tree)
+
+    def init_state(self, params) -> dict:
+        return {"residual": jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def _key(self, step):
+        key = jax.random.PRNGKey(self.base_key)
+        if self.cfg.fresh_per_step:
+            key = jax.random.fold_in(key, step)
+        return key
+
+    def compress(self, grads, state, *, step) -> tuple[Any, dict, dict]:
+        """Single-worker roundtrip estimator (no comm): sketch -> unsketch
+        with error feedback. Used on meshes without a pod axis."""
+        sk = self._sketcher(grads)
+        key = self._key(step)
+        p = jax.tree.map(lambda g, e: g.astype(jnp.float32) + e,
+                         grads, state["residual"])
+        alpha = self.cfg.shrinkage()
+        y = sk.sketch(p, key)                           # (buckets, k)
+        g_hat = jax.tree.map(lambda x: alpha * x, sk.unsketch(y, key))
+        new_residual = jax.tree.map(lambda pp, gh: pp - gh.astype(jnp.float32),
+                                    p, g_hat)
+        g_out = jax.tree.map(lambda gh, g: gh.astype(g.dtype), g_hat, grads)
+        return g_out, {"residual": new_residual}, self._metrics(sk, new_residual)
+
+    def compress_per_pod(self, grads_pp, state, *, step):
+        """Cross-pod compressed all-reduce, pure-pjit formulation.
+
+        grads_pp / state['residual']: every leaf has a leading npod dim
+        (produced by jax.vmap(..., spmd_axis_name='pod') so the dim is
+        sharded over the pod mesh axis). The ONLY cross-pod communication is
+        the mean over that dim of the (buckets, k) sketches.
+        Returns (synced grads WITHOUT pod dim, new_state, metrics).
+        """
+        example = jax.tree.map(lambda g: jax.ShapeDtypeStruct(g.shape[1:],
+                                                              g.dtype),
+                               grads_pp)
+        sk = self._sketcher(example)
+        key = self._key(step)
+        p = jax.tree.map(lambda g, e: g.astype(jnp.float32) + e,
+                         grads_pp, state["residual"])
+        alpha = self.cfg.shrinkage()
+        y_pp = jax.vmap(lambda t: sk.sketch(t, key))(p)   # (npod, buckets, k)
+        y_mean = jnp.mean(y_pp, axis=0)                   # <- the all-reduce
+        g_hat = jax.tree.map(lambda x: alpha * x,
+                             sk.unsketch(y_mean, key))    # synced estimate
+        g_hat_local = jax.tree.map(
+            lambda x: alpha * x,
+            jax.vmap(lambda yy: sk.unsketch(yy, key))(y_pp))
+        new_residual = jax.tree.map(lambda pp, gh: pp - gh.astype(jnp.float32),
+                                    p, g_hat_local)
+        g_out = jax.tree.map(lambda gh, g: gh.astype(g.dtype),
+                             g_hat, example)
+        return g_out, {"residual": new_residual}, self._metrics(sk, new_residual)
+
+    def _metrics(self, sk: PytreeSketcher, residual) -> dict:
+        return {
+            "sketch_bytes": jnp.asarray(sk.sketch_bytes(), jnp.float32),
+            "dense_bytes": jnp.asarray(sk.dense_bytes(), jnp.float32),
+            "residual_norm": jnp.sqrt(sum(
+                jnp.sum(jnp.square(r)) for r in jax.tree.leaves(residual))),
+        }
+
+    def compression_ratio(self, params) -> float:
+        return self._sketcher(params).compression_ratio()

@@ -1,0 +1,20 @@
+"""LR schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_with_warmup(step, *, peak_lr: float, warmup_steps: int,
+                       total_steps: int, final_frac: float = 0.1):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = peak_lr * step / max(1, warmup_steps)
+    prog = jnp.clip((step - warmup_steps) / max(1, total_steps - warmup_steps),
+                    0.0, 1.0)
+    cos = final_frac * peak_lr + (1 - final_frac) * peak_lr * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup_steps, warm, cos)
+
+
+def constant(step, *, peak_lr: float, **_):
+    del step
+    return peak_lr

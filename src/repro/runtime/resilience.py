@@ -1,0 +1,130 @@
+"""Fault-tolerance runtime: watchdog (straggler detection), signal-triggered
+checkpointing, and a crash-restart harness with fault injection for tests.
+
+At 1000+ node scale the failure model is: slow chips (stragglers), killed
+hosts (preemption), and hard crashes. The mitigations here:
+  * Watchdog — EMA + z-score over step wall-times; flags stragglers and
+    (optionally) invokes a callback (real deployments: trigger re-shard or
+    hot-spare swap; here: structured log events consumed by tests).
+  * GracefulShutdown — SIGTERM/SIGINT => finish the current step, checkpoint,
+    exit 0 (preemption-safe).
+  * run_with_restarts — supervises a training function, restarting it from
+    the latest checkpoint after crashes, up to a budget. The training fn gets
+    a FaultInjector so tests can deterministically kill a step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Callable
+
+
+@dataclasses.dataclass
+class WatchdogEvent:
+    step: int
+    dt: float
+    ema: float
+    zscore: float
+
+
+class Watchdog:
+    def __init__(self, *, warmup: int = 5, z_thresh: float = 4.0,
+                 on_straggler: Callable[[WatchdogEvent], None] | None = None):
+        self.warmup = warmup
+        self.z_thresh = z_thresh
+        self.on_straggler = on_straggler
+        self.ema = None
+        self.var = 0.0
+        self.n = 0
+        self.events: list[WatchdogEvent] = []
+        self._last = None
+
+    def start_step(self) -> None:
+        self._last = time.monotonic()
+
+    def end_step(self, step: int) -> WatchdogEvent | None:
+        assert self._last is not None, "start_step not called"
+        dt = time.monotonic() - self._last
+        self.n += 1
+        if self.ema is None:
+            self.ema = dt
+            return None
+        alpha = 0.1
+        dev = dt - self.ema
+        self.var = (1 - alpha) * (self.var + alpha * dev * dev)
+        self.ema += alpha * dev
+        sd = max(self.var ** 0.5, 1e-9)
+        z = dev / sd
+        if self.n > self.warmup and z > self.z_thresh:
+            ev = WatchdogEvent(step=step, dt=dt, ema=self.ema, zscore=z)
+            self.events.append(ev)
+            if self.on_straggler:
+                self.on_straggler(ev)
+            return ev
+        return None
+
+
+class GracefulShutdown:
+    """Context manager: converts SIGTERM/SIGINT into a `requested` flag the
+    training loop checks once per step."""
+
+    def __init__(self, signals=(signal.SIGTERM, signal.SIGINT)):
+        self.signals = signals
+        self.requested = False
+        self._old = {}
+
+    def _handler(self, signum, frame):
+        del frame
+        self.requested = True
+
+    def __enter__(self):
+        for s in self.signals:
+            self._old[s] = signal.signal(s, self._handler)
+        return self
+
+    def __exit__(self, *exc):
+        for s, h in self._old.items():
+            signal.signal(s, h)
+        return False
+
+
+class FaultInjector:
+    """Deterministic fault injection for restart tests."""
+
+    def __init__(self, crash_at_steps: set[int] | None = None):
+        self.crash_at_steps = set(crash_at_steps or ())
+        self.fired: set[int] = set()
+
+    def maybe_crash(self, step: int) -> None:
+        if step in self.crash_at_steps and step not in self.fired:
+            self.fired.add(step)
+            raise RuntimeError(f"injected fault at step {step}")
+
+
+@dataclasses.dataclass
+class RestartReport:
+    restarts: int
+    completed: bool
+    final_step: int
+    history: list
+
+
+def run_with_restarts(train_fn: Callable[..., int], *, max_restarts: int = 3,
+                      injector: FaultInjector | None = None) -> RestartReport:
+    """train_fn(injector) -> final step; must checkpoint internally and
+    resume from its own latest checkpoint when re-invoked."""
+    injector = injector or FaultInjector()
+    history = []
+    restarts = 0
+    while True:
+        try:
+            final = train_fn(injector)
+            return RestartReport(restarts=restarts, completed=True,
+                                 final_step=final, history=history)
+        except Exception as e:  # noqa: BLE001 — supervisor boundary
+            history.append(repr(e))
+            restarts += 1
+            if restarts > max_restarts:
+                return RestartReport(restarts=restarts, completed=False,
+                                     final_step=-1, history=history)

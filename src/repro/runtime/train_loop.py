@@ -1,0 +1,90 @@
+"""Fault-tolerant training loop: deterministic data fast-forward, async
+checkpoints, watchdog, SIGTERM-safe shutdown, optional sketch telemetry.
+
+Used by launch/train.py (CLI) and examples/; tests drive it with fault
+injection to verify crash-restart recovers bit-identical state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import checkpointer
+from repro.data import DataConfig, SyntheticLM
+
+from .resilience import FaultInjector, GracefulShutdown, Watchdog
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int = 100
+    ckpt_dir: str | None = None
+    ckpt_every: int = 50
+    log_every: int = 10
+    keep_ckpts: int = 3
+    async_ckpt: bool = True
+
+
+def run(step_fn: Callable, state: Any, data: SyntheticLM, cfg: LoopConfig, *,
+        injector: FaultInjector | None = None,
+        log: Callable[[str], None] = print,
+        on_metrics: Callable[[int, dict], None] | None = None) -> tuple[Any, int]:
+    """Runs step_fn(state, batch)->(state, metrics) until total_steps.
+
+    Resumes from the latest checkpoint in cfg.ckpt_dir if one exists; the
+    data stream fast-forwards to the restored step (pure function of step).
+    Returns (final_state, final_step).
+    """
+    start = 0
+    if cfg.ckpt_dir:
+        latest = checkpointer.latest_step(cfg.ckpt_dir)
+        if latest is not None:
+            state, start = checkpointer.restore(cfg.ckpt_dir, state)
+            log(f"[resume] restored step {start} from {cfg.ckpt_dir}")
+    ck = (checkpointer.AsyncCheckpointer(cfg.ckpt_dir, keep=cfg.keep_ckpts)
+          if (cfg.ckpt_dir and cfg.async_ckpt) else None)
+    wd = Watchdog()
+    t_start = time.time()
+    step = start
+    with GracefulShutdown() as shutdown:
+        for step in range(start, cfg.total_steps):
+            if injector is not None:
+                injector.maybe_crash(step)
+            batch = jax.tree.map(jnp.asarray, data.batch(step))
+            wd.start_step()
+            state, metrics = step_fn(state, batch)
+            jax.block_until_ready(metrics["loss"])
+            ev = wd.end_step(step)
+            if ev is not None:
+                log(f"[straggler] step {step}: {ev.dt:.3f}s "
+                    f"(ema {ev.ema:.3f}s, z={ev.zscore:.1f})")
+            if on_metrics is not None:
+                on_metrics(step, metrics)
+            if step % cfg.log_every == 0 or step == cfg.total_steps - 1:
+                scal = {k: float(v) for k, v in metrics.items()
+                        if hasattr(v, "shape") and v.shape == ()}
+                log(f"step {step:6d} " + " ".join(
+                    f"{k}={v:.5g}" for k, v in sorted(scal.items())))
+            want_ckpt = cfg.ckpt_dir and (
+                (step + 1) % cfg.ckpt_every == 0
+                or step == cfg.total_steps - 1 or shutdown.requested)
+            if want_ckpt:
+                if ck is not None:
+                    ck.save(step + 1, state)
+                else:
+                    checkpointer.save(cfg.ckpt_dir, step + 1, state,
+                                      keep=cfg.keep_ckpts)
+            if shutdown.requested:
+                log(f"[shutdown] SIGTERM honored at step {step}")
+                break
+    if ck is not None:
+        ck.wait()
+    dt = time.time() - t_start
+    log(f"[done] steps {start}..{step} in {dt:.1f}s "
+        f"({len(wd.events)} straggler events)")
+    return state, step + 1

@@ -1,0 +1,31 @@
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_subprocess(code: str, devices: int = 8, timeout: int = 900):
+    """Run a python snippet in a fresh process with N fake XLA devices.
+
+    Used by tests that need a multi-device mesh (the main process keeps the
+    default single CPU device so ordinary tests stay fast).
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    res = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    if res.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed (rc={res.returncode})\n--- stdout ---\n"
+            f"{res.stdout[-4000:]}\n--- stderr ---\n{res.stderr[-4000:]}")
+    return res.stdout
+
+
+@pytest.fixture
+def subproc():
+    return run_subprocess

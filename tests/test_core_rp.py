@@ -1,0 +1,149 @@
+"""Unit tests for the paper's core: TT/CP formats and the two RP maps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CPRP, CPTensor, GaussianRP, TTTensor, VerySparseRP,
+                        cp_inner, random_cp, random_tt, sample_cp_rp,
+                        sample_tt_rp, tensorize, tt_cp_inner, tt_inner,
+                        tt_svd, trp_average, trp_project)
+
+KEY = jax.random.PRNGKey(0)
+DIMS = (4, 5, 6)
+
+
+def test_tt_norm_matches_dense():
+    t = random_tt(KEY, DIMS, 3, norm="unit")
+    np.testing.assert_allclose(float(t.norm_squared()),
+                               float(jnp.sum(t.full() ** 2)), rtol=1e-5)
+    np.testing.assert_allclose(float(t.norm_squared()), 1.0, rtol=1e-5)
+
+
+def test_cp_norm_and_cross_inner():
+    t = random_tt(KEY, DIMS, 3)
+    c = random_cp(jax.random.PRNGKey(1), DIMS, 3)
+    np.testing.assert_allclose(float(c.norm_squared()),
+                               float(jnp.sum(c.full() ** 2)), rtol=1e-5)
+    np.testing.assert_allclose(float(tt_cp_inner(t, c)),
+                               float(jnp.vdot(t.full(), c.full())),
+                               rtol=1e-4)
+
+
+def test_cp_to_tt_exact():
+    c = random_cp(KEY, DIMS, 4)
+    np.testing.assert_allclose(np.asarray(c.to_tt().full()),
+                               np.asarray(c.full()), rtol=1e-4, atol=1e-6)
+
+
+def test_tt_svd_roundtrip():
+    x = jax.random.normal(KEY, DIMS)
+    t = tt_svd(x, max_rank=30)  # full rank => exact
+    np.testing.assert_allclose(np.asarray(t.full()), np.asarray(x),
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("rank", [1, 2, 5])
+def test_ttrp_matches_dense_matrix(rank):
+    op = sample_tt_rp(jax.random.PRNGKey(2), DIMS, 64, rank)
+    x = jax.random.normal(jax.random.PRNGKey(3), DIMS)
+    a = op.as_dense_matrix()
+    np.testing.assert_allclose(np.asarray(op.project(x)),
+                               np.asarray(a @ x.reshape(-1)),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_ttrp_structured_inputs_agree():
+    op = sample_tt_rp(jax.random.PRNGKey(2), DIMS, 64, 2)
+    t = random_tt(KEY, DIMS, 4)
+    c = random_cp(jax.random.PRNGKey(1), DIMS, 3)
+    np.testing.assert_allclose(np.asarray(op.project_tt(t)),
+                               np.asarray(op.project(t.full())),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(op.project_cp(c)),
+                               np.asarray(op.project(c.full())),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_ttrp_reconstruct_is_adjoint():
+    op = sample_tt_rp(jax.random.PRNGKey(2), DIMS, 64, 2)
+    x = jax.random.normal(jax.random.PRNGKey(3), DIMS)
+    y = op.project(x)
+    a = op.as_dense_matrix()
+    np.testing.assert_allclose(np.asarray(op.reconstruct(y)).reshape(-1),
+                               np.asarray(a.T @ y), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(op.reconstruct(y, chunk=7)),
+                               np.asarray(op.reconstruct(y)),
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("rank", [1, 3])
+def test_cprp_matches_dense_matrix(rank):
+    op = sample_cp_rp(jax.random.PRNGKey(4), DIMS, 64, rank)
+    x = jax.random.normal(jax.random.PRNGKey(3), DIMS)
+    a = op.as_dense_matrix()
+    np.testing.assert_allclose(np.asarray(op.project(x)),
+                               np.asarray(a @ x.reshape(-1)),
+                               rtol=1e-4, atol=1e-5)
+    y = op.project(x)
+    np.testing.assert_allclose(np.asarray(op.reconstruct(y)).reshape(-1),
+                               np.asarray(a.T @ y), rtol=1e-4, atol=1e-5)
+
+
+def test_cprp_structured_inputs_agree():
+    op = sample_cp_rp(jax.random.PRNGKey(4), DIMS, 64, 3)
+    t = random_tt(KEY, DIMS, 4)
+    c = random_cp(jax.random.PRNGKey(1), DIMS, 3)
+    np.testing.assert_allclose(np.asarray(op.project_cp(c)),
+                               np.asarray(op.project(c.full())),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(op.project_tt(t)),
+                               np.asarray(op.project(t.full())),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_trp_equals_cp1():
+    """Sun et al.'s TRP is exactly f_CP(1) (paper Sec. 3)."""
+    n = len(DIMS)
+    k = 32
+    fm = [jax.random.normal(jax.random.fold_in(KEY, i), (DIMS[i], k))
+          for i in range(n)]
+    x = jax.random.normal(jax.random.PRNGKey(3), DIMS)
+    y_trp = trp_project(fm, x.reshape(-1))
+    op = CPRP(tuple(f.T[:, :, None] for f in fm))
+    np.testing.assert_allclose(np.asarray(op.project(x)), np.asarray(y_trp),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_trp_T_equals_cp_R():
+    """TRP(T) (scaled average of T TRPs) == f_CP(R=T) (paper Sec. 3)."""
+    n, k, T = len(DIMS), 16, 3
+    x = jax.random.normal(jax.random.PRNGKey(3), DIMS)
+    fms = [[jax.random.normal(jax.random.fold_in(KEY, 10 * t + i),
+                              (DIMS[i], k)) for i in range(n)]
+           for t in range(T)]
+    y = trp_average([trp_project(fm, x.reshape(-1)) for fm in fms])
+    scale = (1.0 / T) ** (1.0 / (2 * n))
+    factors = tuple(
+        scale * jnp.stack([fms[t][i].T for t in range(T)], axis=-1)
+        for i in range(n))  # (k, d, T)
+    op = CPRP(factors)
+    np.testing.assert_allclose(np.asarray(op.project(x)), np.asarray(y),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_gaussian_rp_streaming_matches_materialized():
+    g = GaussianRP(jax.random.PRNGKey(6), 64, 120, block=32)
+    x = jax.random.normal(KEY, (120,))
+    np.testing.assert_allclose(np.asarray(g.project(x)),
+                               np.asarray(g.materialize() @ x),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_sparse_rp_expected_isometry():
+    x = jax.random.normal(KEY, (120,))
+    x = x / jnp.linalg.norm(x)
+    vals = [float(jnp.sum(VerySparseRP(jax.random.PRNGKey(i), 256, 120,
+                                       block=40).project(x) ** 2))
+            for i in range(50)]
+    assert abs(np.mean(vals) - 1.0) < 0.15, np.mean(vals)

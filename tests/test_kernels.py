@@ -1,0 +1,83 @@
+"""Pallas kernels vs pure-jnp oracle (ref.py), interpret=True on CPU.
+
+Sweeps shapes (aligned and ragged), k values (padding path) and ranks.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import TTTensor, random_tt, sample_cp_rp, sample_tt_rp
+from repro.kernels import cp_project, ref, tt_dot, tt_project
+
+SHAPES = [
+    (16, 32, 24),      # ragged-ish
+    (8, 128, 64),      # lane-aligned tail
+    (32, 16, 16),
+]
+KS = [64, 128, 200]
+
+
+@pytest.mark.parametrize("dims", SHAPES)
+@pytest.mark.parametrize("k", KS)
+@pytest.mark.parametrize("rank", [1, 3])
+def test_tt_project_kernel(dims, k, rank):
+    op = sample_tt_rp(jax.random.PRNGKey(0), dims, k, rank)
+    x = jax.random.normal(jax.random.PRNGKey(1), dims)
+    got = tt_project(op, x)
+    g1 = op.cores[0][:, 0, :, :]
+    g2 = op.cores[1]
+    g3 = op.cores[2][:, :, :, 0]
+    want = ref.tt_project3_ref(x, g1, g2, g3) / jnp.sqrt(float(k))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(op.project(x)),
+                               rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("dims", SHAPES)
+@pytest.mark.parametrize("k", KS)
+@pytest.mark.parametrize("rank", [1, 4])
+def test_cp_project_kernel(dims, k, rank):
+    op = sample_cp_rp(jax.random.PRNGKey(0), dims, k, rank)
+    x = jax.random.normal(jax.random.PRNGKey(1), dims)
+    got = cp_project(op, x)
+    want = ref.cp_project3_ref(x, *op.factors) / jnp.sqrt(float(k))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("dims", SHAPES)
+@pytest.mark.parametrize("k", [64, 200])
+@pytest.mark.parametrize("rx", [1, 4])
+def test_tt_dot_kernel(dims, k, rx):
+    op = sample_tt_rp(jax.random.PRNGKey(0), dims, k, 2)
+    x = random_tt(jax.random.PRNGKey(2), dims, rx)
+    got = tt_dot(op, x)
+    g1 = op.cores[0][:, 0, :, :]
+    g2 = op.cores[1]
+    g3 = op.cores[2][:, :, :, 0]
+    want = ref.tt_dot3_ref(*x.cores, g1, g2, g3) / jnp.sqrt(float(k))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(op.project_tt(x)),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_kernel_fallback_non_order3():
+    """Orders != 3 fall back to the core einsum path."""
+    dims = (4, 5, 6, 7)
+    op = sample_tt_rp(jax.random.PRNGKey(0), dims, 32, 2)
+    x = jax.random.normal(jax.random.PRNGKey(1), dims)
+    np.testing.assert_allclose(np.asarray(tt_project(op, x)),
+                               np.asarray(op.project(x)), rtol=1e-5)
+
+
+def test_kernel_bf16_inputs():
+    dims = (8, 32, 16)
+    op = sample_tt_rp(jax.random.PRNGKey(0), dims, 128, 2)
+    x = jax.random.normal(jax.random.PRNGKey(1), dims)
+    got16 = tt_project(op, x.astype(jnp.bfloat16))
+    want = op.project(x)
+    np.testing.assert_allclose(np.asarray(got16, dtype=np.float32),
+                               np.asarray(want), rtol=0.05, atol=0.05)

@@ -1,0 +1,101 @@
+"""AdamW vs analytic reference, schedules, slot-server serving, and the
+roofline depth-extrapolation arithmetic."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import AdamWConfig, adamw, schedule
+
+
+def test_adamw_matches_reference():
+    cfg = AdamWConfig(b1=0.9, b2=0.99, eps=1e-8, weight_decay=0.01,
+                      clip_norm=None)
+    p = {"w": jnp.array([1.0, -2.0, 3.0])}
+    g = {"w": jnp.array([0.1, 0.2, -0.3])}
+    st = adamw.init_state(p, cfg)
+    lr = 0.1
+    p1, st1, _ = adamw.update(p, g, st, lr, cfg)
+    # analytic single step: m = (1-b1)g; v = (1-b2)g^2; bias-corrected step
+    m_hat = np.asarray(g["w"]) * (1 - cfg.b1) / (1 - cfg.b1)
+    v_hat = np.asarray(g["w"]) ** 2 * (1 - cfg.b2) / (1 - cfg.b2)
+    want = (np.asarray(p["w"])
+            - lr * (m_hat / (np.sqrt(v_hat) + cfg.eps)
+                    + cfg.weight_decay * np.asarray(p["w"])))
+    np.testing.assert_allclose(np.asarray(p1["w"]), want, rtol=1e-5)
+    assert int(st1["count"]) == 1
+
+
+def test_adamw_clipping():
+    cfg = AdamWConfig(clip_norm=1.0, weight_decay=0.0)
+    g = {"w": jnp.full((4,), 10.0)}
+    clipped, norm = adamw.clip_by_global_norm(g, 1.0)
+    assert abs(float(adamw.global_norm(clipped)) - 1.0) < 1e-5
+    assert float(norm) > 19
+
+
+def test_cosine_schedule_shape():
+    f = lambda s: float(schedule.cosine_with_warmup(
+        jnp.asarray(s, jnp.float32), peak_lr=1.0, warmup_steps=10,
+        total_steps=100))
+    assert f(0) == 0.0
+    assert abs(f(10) - 1.0) < 0.11
+    assert f(55) < f(11)
+    assert f(100) >= 0.1 - 1e-6  # final_frac floor
+
+
+def test_slot_server_serves_all_requests():
+    import numpy as np
+    from repro.configs import get_config, reduced
+    from repro.launch.serve import Request, SlotServer
+    from repro.models import build_model
+
+    cfg = reduced(get_config("llama3.2-3b"))
+    model = build_model(cfg)
+    rng = np.random.default_rng(0)
+    reqs = [Request(i, rng.integers(1, cfg.vocab, size=(4,)))
+            for i in range(5)]
+    srv = SlotServer(model, slots=2, max_seq=32, eos=None, max_gen=6)
+    done = srv.run(reqs)
+    assert len(done) == 5
+    assert all(len(r.generated) == 6 for r in done)
+    # slots were reused (5 requests through 2 slots)
+    assert all(r.done for r in done)
+
+
+def test_roofline_extrapolation_linear():
+    """cost(n) = a + b*n recovered exactly from two probes."""
+    from repro.launch import roofline as rl
+
+    class Fake:
+        def __init__(self, flops, byts, hlo):
+            self._f, self._b, self._h = flops, byts, hlo
+
+        def cost_analysis(self):
+            return {"flops": self._f, "bytes accessed": self._b}
+
+        def as_text(self):
+            return self._h
+
+    hlo1 = ('  %ar = f32[256]{0} all-reduce(%x), '
+            'replica_groups=[16,16]<=[256], to_apply=%a\n')
+    c1 = Fake(100.0, 1000.0, hlo1)          # n=1: a + b
+    c2 = Fake(150.0, 1600.0, hlo1 * 2)      # n=2: a + 2b
+    import dataclasses as dc
+    from repro.models.config import ShapeSpec
+    from repro.configs import get_config
+    cfg = get_config("llama3.2-3b")
+    shape = cfg.shape("train_4k")
+    roof = rl.analyze_extrapolated(
+        c1, c2, 1.0, 2.0, 10.0, arch="x", shape=shape, mesh_name="m",
+        n_devices=256, cfg=cfg, memory={})
+    assert abs(roof.hlo_flops_per_device - (50 + 50 * 10)) < 1e-6
+    assert abs(roof.hlo_bytes_per_device - (400 + 600 * 10)) < 1e-6
+    ar = roof.collective["per_type"]["all-reduce"]
+    assert abs(ar["count"] - 10.0) < 1e-6
+
+
+def test_collective_parser_group_sizes():
+    from repro.launch.roofline import _group_size
+    assert _group_size("replica_groups=[32,16]<=[512]") == 16
+    assert _group_size("replica_groups={{0,1,2,3},{4,5,6,7}}") == 4
+    assert _group_size("no groups here") == 1

@@ -1,0 +1,88 @@
+"""Hypothesis property tests on the sketching invariants."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import (auto_dims, pad_to_tensorizable, sample_cp_rp,
+                        sample_tt_rp)
+
+dims_strategy = st.lists(st.integers(2, 6), min_size=1, max_size=4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(dims=dims_strategy, rank=st.integers(1, 4),
+       k=st.sampled_from([8, 16, 33]), seed=st.integers(0, 2 ** 20),
+       fmt=st.sampled_from(["tt", "cp"]))
+def test_linearity(dims, rank, k, seed, fmt):
+    """f(a*x + b*y) == a*f(x) + b*f(y) — the maps are linear operators."""
+    dims = tuple(dims)
+    sampler = sample_tt_rp if fmt == "tt" else sample_cp_rp
+    op = sampler(jax.random.PRNGKey(seed), dims, k, rank)
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed + 1))
+    x = jax.random.normal(kx, dims)
+    y = jax.random.normal(ky, dims)
+    lhs = op.project(2.5 * x - 0.75 * y)
+    rhs = 2.5 * op.project(x) - 0.75 * op.project(y)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                               rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(dims=dims_strategy, rank=st.integers(1, 3), seed=st.integers(0, 999))
+def test_reconstruct_unbiased_over_operators(dims, rank, seed):
+    """mean over operators of A^T A x approaches x (unbiased adjoint).
+    Tolerance scales with the Thm-1 roundtrip std / sqrt(n_ops)."""
+    from repro.core import theory
+    dims = tuple(dims)
+    n_ops, k = 200, 32
+    x = jax.random.normal(jax.random.PRNGKey(seed), dims)
+    keys = jax.random.split(jax.random.PRNGKey(seed + 1), n_ops)
+
+    def one(kk):
+        op = sample_tt_rp(kk, dims, k, rank)
+        return op.reconstruct(op.project(x))
+
+    recs = jax.lax.map(one, keys)
+    err = jnp.linalg.norm(recs.mean(0) - x) / jnp.linalg.norm(x)
+    D = 1
+    for d in dims:
+        D *= d
+    c = theory.variance_factor_tt(len(dims), rank)
+    tol = 4.0 * (c * D / k / n_ops) ** 0.5 + 0.05
+    assert float(err) < tol, (float(err), tol)
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(1, 10 ** 7))
+def test_pad_to_tensorizable_invariants(n):
+    vec = jnp.zeros((n,))
+    padded, dims, orig = pad_to_tensorizable(vec)
+    assert orig == n
+    prod = 1
+    for d in dims:
+        prod *= d
+    assert prod == padded.size >= n
+    assert padded.size - n < 128
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 999), fmt=st.sampled_from(["tt", "cp"]))
+def test_jl_pairwise_distances(seed, fmt):
+    """JL property: pairwise distances preserved in aggregate for modest k."""
+    from repro.core import sample_cp_rp, sample_tt_rp
+    dims, k, m = (4, 4, 4), 256, 6
+    sampler = sample_tt_rp if fmt == "tt" else sample_cp_rp
+    op = sampler(jax.random.PRNGKey(seed), dims, k, 4)
+    pts = jax.random.normal(jax.random.PRNGKey(seed + 1), (m,) + dims)
+    proj = jax.vmap(op.project)(pts)
+    ratios = []
+    for i in range(m):
+        for j in range(i + 1, m):
+            du = float(jnp.sum((pts[i] - pts[j]) ** 2))
+            dv = float(jnp.sum((proj[i] - proj[j]) ** 2))
+            ratios.append(dv / du)
+    # median ratio near 1 (individual pairs can deviate)
+    assert 0.5 < float(np.median(ratios)) < 1.6, np.median(ratios)

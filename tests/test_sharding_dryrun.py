@@ -1,0 +1,56 @@
+"""Mini dry-run on an 8-device fake mesh: every family lowers+compiles a
+train step AND a serve step with the production sharding rules; the roofline
+extraction pipeline produces coherent numbers."""
+import json
+
+import pytest
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-3b", "mixtral-8x22b",
+                                  "mamba2-1.3b", "recurrentgemma-2b",
+                                  "whisper-medium", "qwen2-vl-2b"])
+def test_mini_dryrun_train_and_serve(subproc, arch):
+    out = subproc(f"""
+import jax
+from repro.configs import get_config, reduced
+from repro.launch import steps, roofline as rl
+from repro.models import build_model
+from repro.models.config import ShapeSpec
+import dataclasses
+
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+cfg = dataclasses.replace(reduced(get_config("{arch}")),
+                          d_model=64, vocab=256)
+model = build_model(cfg)
+with mesh:
+    bt = steps.build_train_step(model, mesh, ShapeSpec("t", 32, 8, "train"))
+    ct = bt.fn.lower(*bt.args).compile()
+    assert ct.cost_analysis() is not None
+    bs = steps.build_serve_step(model, mesh, ShapeSpec("d", 64, 8, "decode"))
+    cs = bs.fn.lower(*bs.args).compile()
+coll = rl.parse_collectives(ct.as_text())
+assert coll["link_bytes_per_device"] >= 0
+print("MINIDRY_OK", "{arch}", int(coll["link_bytes_per_device"]))
+""", devices=8, timeout=1200)
+    assert "MINIDRY_OK" in out
+
+
+def test_collective_parser_units():
+    from repro.launch.roofline import parse_collectives
+    hlo = '''
+  %ag = bf16[32,128]{1,0} all-gather(%x), replica_groups=[4,4]<=[16], dimensions={0}
+  %ar = f32[64]{0} all-reduce(%y), replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%add
+  %rs = f32[16,8]{1,0} reduce-scatter(%z), replica_groups=[2,8]<=[16], dimensions={0}
+  %cp = u32[4]{0} collective-permute(%w), source_target_pairs={{0,1}}
+'''
+    out = parse_collectives(hlo)
+    ag = out["per_type"]["all-gather"]
+    assert ag["count"] == 1 and ag["bytes"] == 32 * 128 * 2
+    assert abs(ag["traffic"] - 32 * 128 * 2 * 3 / 4) < 1e-6
+    ar = out["per_type"]["all-reduce"]
+    assert ar["bytes"] == 64 * 4
+    assert abs(ar["traffic"] - 2 * 256 * 3 / 4) < 1e-6
+    rs = out["per_type"]["reduce-scatter"]
+    assert abs(rs["traffic"] - 16 * 8 * 4 * 7) < 1e-6
+    cp = out["per_type"]["collective-permute"]
+    assert cp["traffic"] == 16
