@@ -5,8 +5,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (GaussianRP, VerySparseRP, random_tt, sample_cp_rp,
-                        sample_tt_rp)
+from repro import rp
+from repro.core import random_tt
 
 CASES = {
     "small":  dict(d=15, N=3),
@@ -33,19 +33,23 @@ def distortion_table(case: str, ks=(16, 64, 256, 1024), trials=20,
             ds.append(abs(float(jnp.sum(y * y)) - 1.0))
         return float(np.mean(ds)), float(np.std(ds))
 
+    def proj(family, k, r, inp):
+        spec = rp.ProjectorSpec(family=family, k=k, dims=dims, rank=r)
+        return lambda kk: rp.project(rp.make_projector(spec, kk), inp)
+
     for k in ks:
         for r in TT_RANKS:
-            m, s = mc(lambda kk: sample_tt_rp(kk, dims, k, r).project_tt(x))
+            m, s = mc(proj("tt", k, r, x))
             rows.append(dict(case=case, map=f"TT({r})", k=k, mean=m, std=s))
         for r in CP_RANKS:
-            m, s = mc(lambda kk: sample_cp_rp(kk, dims, k, r).project_tt(x))
+            m, s = mc(proj("cp", k, r, x))
             rows.append(dict(case=case, map=f"CP({r})", k=k, mean=m, std=s))
         if case == "small":
-            m, s = mc(lambda kk: GaussianRP(kk, k, xflat.size).project(xflat))
+            m, s = mc(proj("gaussian", k, 1, xflat))
             rows.append(dict(case=case, map="Gaussian", k=k, mean=m, std=s))
         if case == "medium" and k <= 256:
             xm = x.full().reshape(-1)
-            m, s = mc(lambda kk: VerySparseRP(kk, k, xm.size).project(xm))
+            m, s = mc(proj("sparse", k, 1, xm))
             rows.append(dict(case=case, map="VerySparse", k=k, mean=m, std=s))
     return rows
 

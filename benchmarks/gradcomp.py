@@ -45,7 +45,7 @@ def run(fast=True):
     rows.append(csv_row("gradcomp/baseline", 0.0,
                         f"final_loss={float(base['loss']):.4f}"))
     for k, tag in ((2048, "0.25x"), (512, "1x"), (128, "4x"), (32, "16x")):
-        scfg = SketchConfig(fmt="tt", k=k, rank=8, bucket_elems=512,
+        scfg = SketchConfig(family="tt", k=k, rank=8, bucket_elems=512,
                             dims=(4, 8, 16))
         m = train(SketchCompressor(scfg))
         ratio = float(m["dense_bytes"]) / float(m["sketch_bytes"])

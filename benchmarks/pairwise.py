@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import GaussianRP, sample_cp_rp, sample_tt_rp
+from repro import rp
 
 from ._util import csv_row
 
@@ -39,14 +39,19 @@ def run(fast=True):
     tens = data.reshape((n,) + DIMS)
     pairs = list(itertools.combinations(range(n), 2))
     rows = []
+    def vproj(family, k, rank, inp):
+        spec = rp.ProjectorSpec(family=family, k=k, dims=DIMS, rank=rank)
+
+        def f(kk):
+            op = rp.make_projector(spec, kk)
+            return jax.vmap(lambda t: rp.project(op, t))(inp)
+        return f
+
     for k in ks:
         for name, proj in [
-            ("TT(3)", lambda kk: jax.vmap(
-                sample_tt_rp(kk, DIMS, k, 3).project)(tens)),
-            ("CP(5)", lambda kk: jax.vmap(
-                sample_cp_rp(kk, DIMS, k, 5).project)(tens)),
-            ("Gaussian", lambda kk: GaussianRP(kk, k, data.shape[1])
-             .project(data)),
+            ("TT(3)", vproj("tt", k, 3, tens)),
+            ("CP(5)", vproj("cp", k, 5, tens)),
+            ("Gaussian", vproj("gaussian", k, 1, data)),
         ]:
             ratios = []
             for t in range(trials):

@@ -10,19 +10,26 @@ import sys
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="one tiny config per registered rp family (CI)")
     ap.add_argument("--only", default=None,
                     help="comma list: distortion,timing,pairwise,memory,"
-                         "variance,gradcomp,rooflines")
+                         "variance,gradcomp,rooflines,smoke")
     args = ap.parse_args(argv)
     fast = not args.full
-    from . import (distortion, gradcomp, memory, pairwise, rooflines, timing,
-                   variance)
+    from . import (distortion, gradcomp, memory, pairwise, rooflines, smoke,
+                   timing, variance)
     mods = {
         "memory": memory, "variance": variance, "distortion": distortion,
         "timing": timing, "pairwise": pairwise, "gradcomp": gradcomp,
-        "rooflines": rooflines,
+        "rooflines": rooflines, "smoke": smoke,
     }
-    wanted = args.only.split(",") if args.only else list(mods)
+    if args.smoke:
+        wanted = ["smoke"]
+    elif args.only:
+        wanted = args.only.split(",")
+    else:
+        wanted = [m for m in mods if m != "smoke"]
     print("name,us_per_call,derived")
     for name in wanted:
         print(f"# --- {name} ---", flush=True)

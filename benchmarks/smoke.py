@@ -1,0 +1,38 @@
+"""Registry smoke: one tiny config per registered repro.rp family.
+
+Keeps every family constructible and benchable — `run.py --smoke` is wired
+into CI so a family that breaks its factory, dense/flat dispatch, or adjoint
+fails fast, including externally registered ones.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro import rp
+
+from ._util import csv_row, time_call
+
+DIMS = (4, 8, 8)
+K = 64
+
+
+def run(fast=True):
+    del fast
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(jax.random.fold_in(key, 1), DIMS)
+    rows = []
+    for family in rp.list_families():
+        spec = rp.ProjectorSpec(family=family, k=K, dims=DIMS, rank=2)
+        op = rp.make_projector(spec, key)
+        f = jax.jit(lambda t, op=op: rp.project(op, t))
+        us = time_call(f, x)
+        y = f(x)
+        x_hat = rp.reconstruct(op, y)
+        flat_ok = bool(jnp.allclose(rp.project(op, x.reshape(-1)), y,
+                                    rtol=1e-4, atol=1e-5))
+        rows.append(csv_row(
+            f"smoke/{family}", us,
+            f"k={K};dims={'x'.join(map(str, DIMS))};"
+            f"params={op.num_params()};recon_elems={x_hat.size};"
+            f"flat_matches_dense={flat_ok}"))
+        assert flat_ok, family
+    return rows

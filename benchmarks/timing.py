@@ -2,8 +2,8 @@
 TT or CP format, across the map family (TT/CP/sparse/dense)."""
 import jax
 
-from repro.core import (GaussianRP, VerySparseRP, random_cp, random_tt,
-                        sample_cp_rp, sample_tt_rp)
+from repro import rp
+from repro.core import random_cp, random_tt
 
 from ._util import csv_row, time_call
 
@@ -17,37 +17,35 @@ def run(fast=True):
     x_tt = random_tt(key, dims, 10, norm="unit")
     x_cp = random_cp(key, dims, 10, norm="unit")
     x_dense = x_tt.full().reshape(-1)
-    tt_op = sample_tt_rp(jax.random.fold_in(key, 1), dims, k, 5)
-    cp_op = sample_cp_rp(jax.random.fold_in(key, 2), dims, k, 25)
-    sparse = VerySparseRP(jax.random.fold_in(key, 3), k, D)
+
+    def op(family, fold, rank=1):
+        spec = rp.ProjectorSpec(family=family, k=k, dims=dims, rank=rank)
+        return rp.make_projector(spec, jax.random.fold_in(key, fold))
+
+    tt_op = op("tt", 1, 5)
+    cp_op = op("cp", 2, 25)
     rows = []
 
-    f = jax.jit(lambda t: tt_op.project_tt(t))
-    rows.append(csv_row("time/medium/TT(5)/input=TT", time_call(f, x_tt),
-                        f"k={k};D={D}"))
-    f = jax.jit(lambda t: cp_op.project_tt(t))
-    rows.append(csv_row("time/medium/CP(25)/input=TT", time_call(f, x_tt),
-                        f"k={k};D={D}"))
-    f = jax.jit(lambda t: tt_op.project_cp(t))
-    rows.append(csv_row("time/medium/TT(5)/input=CP", time_call(f, x_cp),
-                        f"k={k};D={D}"))
-    f = jax.jit(lambda t: cp_op.project_cp(t))
-    rows.append(csv_row("time/medium/CP(25)/input=CP", time_call(f, x_cp),
-                        f"k={k};D={D}"))
-    f = jax.jit(lambda v: sparse.project(v))
-    rows.append(csv_row("time/medium/VerySparse/input=dense",
-                        time_call(f, x_dense), f"k={k};D={D}"))
-    dense = GaussianRP(jax.random.fold_in(key, 4), k, D)
-    f = jax.jit(lambda v: dense.project(v))
-    rows.append(csv_row("time/medium/Gaussian/input=dense",
-                        time_call(f, x_dense), f"k={k};D={D}"))
+    for name, o, inp, tag in [
+        ("TT(5)", tt_op, x_tt, "input=TT"),
+        ("CP(25)", cp_op, x_tt, "input=TT"),
+        ("TT(5)", tt_op, x_cp, "input=CP"),
+        ("CP(25)", cp_op, x_cp, "input=CP"),
+        ("VerySparse", op("sparse", 3), x_dense, "input=dense"),
+        ("Gaussian", op("gaussian", 4), x_dense, "input=dense"),
+    ]:
+        f = jax.jit(lambda t, o=o: rp.project(o, t))
+        rows.append(csv_row(f"time/medium/{name}/{tag}", time_call(f, inp),
+                            f"k={k};D={D}"))
 
     # App B.2: scaling in N (input dim d^N)
     for n in ((8, 11, 12) if fast else (8, 11, 12, 13)):
         dims_n = (3,) * n
         x_n = random_tt(jax.random.fold_in(key, n), dims_n, 10)
-        op_n = sample_tt_rp(jax.random.fold_in(key, 100 + n), dims_n, k, 5)
-        f = jax.jit(lambda t: op_n.project_tt(t))
+        op_n = rp.make_projector(
+            rp.ProjectorSpec(family="tt", k=k, dims=dims_n, rank=5),
+            jax.random.fold_in(key, 100 + n))
+        f = jax.jit(lambda t: rp.project(op_n, t))
         rows.append(csv_row(f"time/scaling/TT(5)/N={n}", time_call(f, x_n),
                             f"D={3**n}"))
     return rows

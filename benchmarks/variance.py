@@ -4,7 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import random_tt, sample_cp_rp, sample_tt_rp, theory
+from repro import rp
+from repro.core import random_tt, theory
 
 from ._util import csv_row
 
@@ -13,21 +14,21 @@ def run(fast=True):
     trials = 150 if fast else 500
     k = 32
     rows = []
-    for fmt in ("tt", "cp"):
+    for family in ("tt", "cp"):
         for (d, N) in ((4, 3), (3, 6)):
             for R in (1, 2, 5):
                 dims = (d,) * N
                 x = random_tt(jax.random.PRNGKey(0), dims, 3, norm="unit")
                 xd = x.full()
-                sampler = sample_tt_rp if fmt == "tt" else sample_cp_rp
+                spec = rp.ProjectorSpec(family=family, k=k, dims=dims, rank=R)
                 keys = jax.random.split(jax.random.PRNGKey(1), trials)
                 vals = np.asarray(jax.lax.map(
-                    lambda kk: jnp.sum(sampler(kk, dims, k, R).project(xd) ** 2),
+                    lambda kk: jnp.sum(
+                        rp.project(rp.make_projector(spec, kk), xd) ** 2),
                     keys))
-                bound = (theory.variance_factor_tt(N, R) if fmt == "tt"
-                         else theory.variance_factor_cp(N, R)) / k
+                bound = theory.variance_factor(family, N=N, R=R) / k
                 rows.append(csv_row(
-                    f"variance/{fmt}/N={N}/R={R}", 0.0,
+                    f"variance/{family}/N={N}/R={R}", 0.0,
                     f"mean={vals.mean():.4f};var={vals.var():.5f};"
                     f"bound={bound:.5f};ok={vals.var() <= bound * 1.3}"))
     return rows

@@ -1,13 +1,13 @@
-"""Quickstart: the paper's tensorized random projections in 60 lines.
+"""Quickstart: the paper's tensorized random projections via the unified
+`repro.rp` API — one spec, one factory, one structure-dispatched `project`.
 
 Run: PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 import jax.numpy as jnp
 
-from repro.core import (GaussianRP, random_tt, sample_cp_rp, sample_tt_rp,
-                        theory)
-from repro.kernels import tt_project
+from repro import rp
+from repro.core import random_tt, theory
 
 key = jax.random.PRNGKey(0)
 
@@ -20,18 +20,28 @@ x = random_tt(key, dims, rank=10, norm="unit")
 x_dense = x.full()
 k = 512
 
-tt_op = sample_tt_rp(jax.random.fold_in(key, 1), dims, k, rank=5)
-cp_op = sample_cp_rp(jax.random.fold_in(key, 2), dims, k, rank=25)
+# Every family goes through the same spec/registry — adding a new family
+# (see PAPERS.md) is one @rp.register_family entry, not a new call-site API.
+tt_op = rp.make_projector(
+    rp.ProjectorSpec(family="tt", k=k, dims=dims, rank=5),
+    jax.random.fold_in(key, 1))
+cp_op = rp.make_projector(
+    rp.ProjectorSpec(family="cp", k=k, dims=dims, rank=25),
+    jax.random.fold_in(key, 2))
 
+print(f"registered families: {rp.list_families()}")
 print(f"input dim          : {x_dense.size:,}")
-print(f"dense JLT params   : {theory.params_gaussian_rp(k, dims):,}")
+print(f"dense JLT params   : {theory.params_rp('gaussian', k, dims):,}")
 print(f"f_TT(5)  params    : {tt_op.num_params():,}")
 print(f"f_CP(25) params    : {cp_op.num_params():,}")
 
 # ------------------------------------------------------------ projection ---
-y_tt = tt_op.project_tt(x)          # fast path: input already in TT format
-y_tt_dense = tt_op.project(x_dense)  # same map, dense input
-y_cp = cp_op.project_tt(x)
+# rp.project dispatches on the input's structure: TTTensor / CPTensor take
+# the structured contraction path, dense tensors and flat vectors are
+# auto-tensorized. No per-format method zoo at the call site.
+y_tt = rp.project(tt_op, x)              # fast path: input already in TT
+y_tt_dense = rp.project(tt_op, x_dense)  # same map, dense input
+y_cp = rp.project(cp_op, x)
 
 print(f"\n||x||^2 = 1.0")
 print(f"||f_TT(x)||^2  = {float(jnp.sum(y_tt**2)):.4f}  "
@@ -43,15 +53,18 @@ print(f"TT dense/struct paths agree: "
 
 # -------------------------------------------------- theory (Thm 1 / Thm 2) -
 print(f"\nThm-1 variance factors (lower = better embedding at same k):")
-print(f"  TT rank 5 : {theory.variance_factor_tt(12, 5):8.1f}")
-print(f"  CP rank 25: {theory.variance_factor_cp(12, 25):8.1f}   "
+print(f"  TT rank 5 : {theory.variance_factor('tt', N=12, R=5):8.1f}")
+print(f"  CP rank 25: {theory.variance_factor('cp', N=12, R=25):8.1f}   "
       "<- exponential in N: CP is hopeless at high order")
 
 # ----------------------------------------------- TPU kernel (order-3 path) -
+# backend='auto' picks the Pallas kernel on TPU for MXU-aligned shapes;
+# 'pallas' forces it (interpret mode on CPU), 'xla' forces the einsum path.
 dims3 = (64, 128, 64)
 x3 = jax.random.normal(jax.random.fold_in(key, 3), dims3)
-op3 = sample_tt_rp(jax.random.fold_in(key, 4), dims3, 256, 2)
-y_kernel = tt_project(op3, x3)     # Pallas kernel (interpret=True on CPU)
-y_ref = op3.project(x3)
+op3 = rp.make_projector(rp.ProjectorSpec(family="tt", k=256, dims=dims3,
+                                         rank=2), jax.random.fold_in(key, 4))
+y_kernel = rp.project(op3, x3, backend="pallas")
+y_ref = rp.project(op3, x3, backend="xla")
 print(f"\nPallas tt_project kernel matches reference: "
       f"{bool(jnp.allclose(y_kernel, y_ref, rtol=1e-4, atol=1e-4))}")

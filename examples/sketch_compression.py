@@ -43,7 +43,7 @@ def run(compressor, steps=80):
 
 
 base = run(None)
-scfg = SketchConfig(fmt="tt", k=128, rank=8, bucket_elems=4 * 8 * 16,
+scfg = SketchConfig(family="tt", k=128, rank=8, bucket_elems=4 * 8 * 16,
                     dims=(4, 8, 16))  # 4x fewer bytes on the wire
 comp = SketchCompressor(scfg)
 smet = run(comp)

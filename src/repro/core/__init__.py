@@ -2,6 +2,14 @@
 
 Faithful implementation of the paper's two maps (Definitions 1 & 2) plus the
 baselines it compares against and the sketching infrastructure built on top.
+
+Deprecation note (one release): construct projectors through the unified
+`repro.rp` API — `rp.make_projector(rp.ProjectorSpec(family=..., ...), key)`
+— and project with `rp.project(op, x)`, which dispatches on input structure
+(dense / flat / TTTensor / CPTensor) and routes dense inputs to the Pallas
+kernels. The names re-exported here (`sample_tt_rp`, `sample_cp_rp`,
+`GaussianRP`, `VerySparseRP`, and the per-format `project_tt`/`project_cp`
+methods) remain importable as thin shims for existing code and tests.
 """
 from .baselines import GaussianRP, VerySparseRP
 from .cp_rp import CPRP, sample_cp_rp, trp_average, trp_project

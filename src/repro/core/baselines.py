@@ -2,7 +2,10 @@
 
 Both are implemented streaming-over-column-blocks so the k x D matrix is never
 fully materialized for large D (the paper could not run them at high order for
-exactly this reason — we keep the memory honest and report it).
+exactly this reason — we keep the memory honest and report it). Each class
+defines its random block via `_block_mat`; the shared project/reconstruct/
+materialize streaming machinery lives in `_StreamedFlatRP` so the forward map
+and its adjoint can never drift apart.
 """
 from __future__ import annotations
 
@@ -13,8 +16,69 @@ import jax
 import jax.numpy as jnp
 
 
+class _StreamedFlatRP:
+    """Streaming (k, D) linear map defined block-wise by `_block_mat(b, dtype)`.
+
+    Subclasses provide `key`, `k`, `dim`, `block`, and `_block_mat`; this
+    mixin derives the projection, the unbiased adjoint, and materialization
+    from that single block definition.
+    """
+
+    @property
+    def in_dims(self) -> tuple[int, ...]:
+        """RPOperator protocol: flat-vector operator, a single mode."""
+        return (self.dim,)
+
+    def _n_blocks(self) -> int:
+        return -(-self.dim // self.block)
+
+    def project(self, x: jnp.ndarray) -> jnp.ndarray:
+        assert x.shape[-1] == self.dim
+        n_blocks = self._n_blocks()
+        pad = n_blocks * self.block - self.dim
+        xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+        xb = jnp.moveaxis(xp.reshape(x.shape[:-1] + (n_blocks, self.block)),
+                          -2, 0)  # (n_blocks, *batch, block)
+
+        def body(acc, args):
+            b, xblk = args
+            return acc + xblk @ self._block_mat(b, x.dtype), None
+
+        init = jnp.zeros(x.shape[:-1] + (self.k,), x.dtype)
+        out, _ = jax.lax.scan(body, init, (jnp.arange(n_blocks), xb))
+        return out / jnp.sqrt(jnp.asarray(self.k, x.dtype))
+
+    def reconstruct(self, y: jnp.ndarray, *,
+                    chunk: int | None = None) -> jnp.ndarray:
+        """Unbiased adjoint x_hat = A^T y / sqrt(k), streamed over blocks.
+
+        `chunk` is accepted for protocol parity; streaming is governed by
+        `block` (the k-sized intermediate never exceeds block * k floats).
+        """
+        del chunk
+        assert y.shape == (self.k,), y.shape
+
+        def body(_, b):
+            return None, self._block_mat(b, y.dtype) @ y
+
+        _, parts = jax.lax.scan(body, None, jnp.arange(self._n_blocks()))
+        x = parts.reshape(-1)[: self.dim]
+        return x / jnp.sqrt(jnp.asarray(self.k, y.dtype))
+
+    def materialize(self) -> jnp.ndarray:
+        """Dense (k, D) matrix — small-order cases only."""
+        blocks = [self._block_mat(b, jnp.float32)
+                  for b in range(self._n_blocks())]
+        a = jnp.concatenate(blocks, axis=0)[: self.dim]
+        return a.T / jnp.sqrt(jnp.asarray(self.k, a.dtype))
+
+    def as_dense_matrix(self) -> jnp.ndarray:
+        """RPOperator protocol alias of `materialize`."""
+        return self.materialize()
+
+
 @dataclasses.dataclass(frozen=True)
-class GaussianRP:
+class GaussianRP(_StreamedFlatRP):
     """Classical JLT: y = A x / sqrt(k), A_ij ~ N(0, 1)."""
 
     key: jax.Array
@@ -25,37 +89,13 @@ class GaussianRP:
     def num_params(self) -> int:
         return self.k * self.dim
 
-    def project(self, x: jnp.ndarray) -> jnp.ndarray:
-        assert x.shape[-1] == self.dim
-        n_blocks = -(-self.dim // self.block)
-        pad = n_blocks * self.block - self.dim
-        xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
-        xb = xp.reshape(x.shape[:-1] + (n_blocks, self.block))
-
-        def body(acc, args):
-            b, xblk = args
-            a = jax.random.normal(jax.random.fold_in(self.key, b),
-                                  (self.block, self.k), dtype=x.dtype)
-            return acc + xblk @ a, None
-
-        init = jnp.zeros(x.shape[:-1] + (self.k,), x.dtype)
-        xb_m = jnp.moveaxis(xb, -2, 0)  # (n_blocks, *batch, block)
-        out, _ = jax.lax.scan(body, init, (jnp.arange(n_blocks), xb_m))
-        return out / jnp.sqrt(jnp.asarray(self.k, x.dtype))
-
-    def materialize(self) -> jnp.ndarray:
-        """Dense (k, D) matrix — small-order cases only."""
-        n_blocks = -(-self.dim // self.block)
-        blocks = [
-            jax.random.normal(jax.random.fold_in(self.key, b), (self.block, self.k))
-            for b in range(n_blocks)
-        ]
-        a = jnp.concatenate(blocks, axis=0)[: self.dim]
-        return a.T / jnp.sqrt(jnp.asarray(self.k, a.dtype))
+    def _block_mat(self, b, dtype) -> jnp.ndarray:
+        return jax.random.normal(jax.random.fold_in(self.key, b),
+                                 (self.block, self.k), dtype=dtype)
 
 
 @dataclasses.dataclass(frozen=True)
-class VerySparseRP:
+class VerySparseRP(_StreamedFlatRP):
     """Li et al. 2006: A_ij = +sqrt(s) w.p. 1/2s, 0 w.p. 1-1/s, -sqrt(s) w.p. 1/2s.
 
     Default s = sqrt(D) ("very sparse"), giving ~k*sqrt(D) expected nonzeros.
@@ -76,24 +116,9 @@ class VerySparseRP:
         """Expected nonzeros (index+value storage in a real implementation)."""
         return int(self.k * self.dim / self.sparsity)
 
-    def _block_mat(self, b: int, dtype) -> jnp.ndarray:
+    def _block_mat(self, b, dtype) -> jnp.ndarray:
         s = self.sparsity
         kk = jax.random.fold_in(self.key, b)
         u = jax.random.uniform(kk, (self.block, self.k))
         sign = jnp.where(u < 0.5 / s, 1.0, jnp.where(u > 1.0 - 0.5 / s, -1.0, 0.0))
         return (sign * jnp.sqrt(s)).astype(dtype)
-
-    def project(self, x: jnp.ndarray) -> jnp.ndarray:
-        assert x.shape[-1] == self.dim
-        n_blocks = -(-self.dim // self.block)
-        pad = n_blocks * self.block - self.dim
-        xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
-        xb = jnp.moveaxis(xp.reshape(x.shape[:-1] + (n_blocks, self.block)), -2, 0)
-
-        def body(acc, args):
-            b, xblk = args
-            return acc + xblk @ self._block_mat(b, x.dtype), None
-
-        init = jnp.zeros(x.shape[:-1] + (self.k,), x.dtype)
-        out, _ = jax.lax.scan(body, init, (jnp.arange(n_blocks), xb))
-        return out / jnp.sqrt(jnp.asarray(self.k, x.dtype))

@@ -49,6 +49,11 @@ class CPRP:
         return tuple(int(f.shape[1]) for f in self.factors)
 
     @property
+    def in_dims(self) -> tuple[int, ...]:
+        """RPOperator protocol: input mode sizes (alias of `dims`)."""
+        return self.dims
+
+    @property
     def rank(self) -> int:
         return int(self.factors[0].shape[2])
 

@@ -2,9 +2,11 @@
 
 This is the systems integration of the paper: big flat vectors (gradients,
 parameter deltas) are bucketed, each bucket is tensorized into an MXU-aligned
-order-3 tensor, and projected with f_TT(R) / f_CP(R). Because the operator is
-derived from a PRNG key, distributed hosts regenerate it locally — only the
-k-dim sketches ever cross the network.
+order-3 tensor, and projected with any registered `repro.rp` family —
+f_TT(R) / f_CP(R) from the paper, or the gaussian/sparse baselines via
+flat-vector dispatch. Because the operator is derived from a PRNG key,
+distributed hosts regenerate it locally — only the k-dim sketches ever cross
+the network.
 
 Used by:
   * optim/compress.py — error-feedback compressed cross-pod all-reduce,
@@ -13,30 +15,42 @@ Used by:
 from __future__ import annotations
 
 import dataclasses
-import math
+import warnings
 from typing import Any
 
 import jax
 import jax.numpy as jnp
-from jax.flatten_util import ravel_pytree
 
-from .cp_rp import CPRP, sample_cp_rp
 from .formats import _prod
-from .tt_rp import TTRP, sample_tt_rp
 
 
 @dataclasses.dataclass(frozen=True)
 class SketchConfig:
-    fmt: str = "tt"            # 'tt' | 'cp'
+    family: str = "tt"         # any registered repro.rp family
     k: int = 1024              # sketch size per bucket
     rank: int = 2              # R of the tensorized map
     bucket_elems: int = 128 * 128 * 64  # elements per bucket (1,048,576)
     dims: tuple[int, ...] = (128, 128, 64)  # MXU-aligned tensorization
     fresh_per_step: bool = True  # re-draw operator each step (EF-friendly)
+    backend: str = "auto"      # repro.rp backend policy for projections
+    fmt: dataclasses.InitVar[str | None] = None  # deprecated alias of family
 
-    def __post_init__(self):
+    def __post_init__(self, fmt):
+        if fmt is not None:
+            warnings.warn("SketchConfig(fmt=...) is deprecated; use "
+                          "family=...", DeprecationWarning, stacklevel=2)
+            object.__setattr__(self, "family", fmt)
         assert _prod(self.dims) == self.bucket_elems, (self.dims, self.bucket_elems)
-        assert self.fmt in ("tt", "cp")
+        from repro import rp  # function-level: core <-> rp import cycle
+        rp.get_family(self.family)  # fail fast on unknown families
+
+    # (fmt read-access is restored as a property after the class definition;
+    # the dataclass captured the InitVar default before the override.)
+
+    def spec(self):
+        from repro import rp
+        return rp.ProjectorSpec(family=self.family, k=self.k, dims=self.dims,
+                                rank=self.rank, backend=self.backend)
 
     def shrinkage(self) -> float:
         """MMSE damping for the adjoint roundtrip x_hat = alpha * A^T A x.
@@ -47,21 +61,25 @@ class SketchConfig:
         compressor is (1-delta)-contractive, delta = alpha*.
         """
         from . import theory
-        n = len(self.dims)
-        c = (theory.variance_factor_tt(n, self.rank) if self.fmt == "tt"
-             else theory.variance_factor_cp(n, self.rank))
+        c = theory.variance_factor(self.family, N=len(self.dims),
+                                   R=self.rank, D=self.bucket_elems)
         return 1.0 / (1.0 + c * self.bucket_elems / self.k)
 
-    def operator(self, key) -> TTRP | CPRP:
-        if self.fmt == "tt":
-            return sample_tt_rp(key, self.dims, self.k, self.rank)
-        return sample_cp_rp(key, self.dims, self.k, self.rank)
+    def operator(self, key):
+        from repro import rp
+        return rp.make_projector(self.spec(), key)
 
     def operator_params(self) -> int:
         from . import theory
-        if self.fmt == "tt":
-            return theory.params_tt_rp(self.k, self.dims, self.rank)
-        return theory.params_cp_rp(self.k, self.dims, self.rank)
+        try:
+            return theory.params_rp(self.family, self.k, self.dims, self.rank)
+        except KeyError:
+            # externally registered family: count a sampled instance
+            return self.operator(jax.random.PRNGKey(0)).num_params()
+
+
+# Deprecated read alias: cfg.fmt -> cfg.family.
+SketchConfig.fmt = property(lambda self: self.family)
 
 
 def _constrain_buckets(x):
@@ -127,20 +145,23 @@ class PytreeSketcher:
     # -- sketch / unsketch -----------------------------------------------
     def sketch(self, tree: Any, key) -> jnp.ndarray:
         """tree -> (n_buckets, k) sketch (buckets concatenated over leaves)."""
+        from repro import rp
         op = self.cfg.operator(key)
+        proj = lambda b: rp.project(op, b, backend=self.cfg.backend)  # noqa: E731
         ys = []
         for leaf, nb in zip(jax.tree_util.tree_leaves(tree), self._nb):
-            ys.append(jax.vmap(op.project)(self._leaf_to_buckets(leaf, nb)))
+            ys.append(jax.vmap(proj)(self._leaf_to_buckets(leaf, nb)))
         return jnp.concatenate(ys, axis=0)
 
     def unsketch(self, y: jnp.ndarray, key) -> Any:
         """(n_buckets, k) -> unbiased pytree estimate (same key as sketch)."""
+        from repro import rp
         op = self.cfg.operator(key)
         out = []
         off = 0
         for nb, size, shape, dtype in zip(self._nb, self._sizes,
                                           self._shapes, self._dtypes):
-            buckets = jax.vmap(lambda yy: op.reconstruct(yy))(
+            buckets = jax.vmap(lambda yy: rp.reconstruct(op, yy))(
                 _constrain_buckets(y[off:off + nb]))
             out.append(self._leaf_from_buckets(buckets, size, shape, dtype))
             off += nb

@@ -27,6 +27,27 @@ def variance_factor_gaussian() -> float:
     return 2.0
 
 
+def variance_factor_sparse(s: float) -> float:
+    """Very-sparse RP (Li et al. 2006) worst case: E[a^4] = s gives
+    Var(||y||^2) <= (2 + (s-3) sum x_j^4/||x||^4)/k ||x||^4 <= (s-1)/k ||x||^4."""
+    return max(2.0, s - 1.0)
+
+
+def variance_factor(family: str, *, N: int, R: int, D: int | None = None) -> float:
+    """Thm-1 variance factor for any built-in family (per-family dispatch).
+
+    Unknown (externally registered) families fall back to the Gaussian
+    factor — conservative users should register a tighter bound here.
+    """
+    if family == "tt":
+        return variance_factor_tt(N, R)
+    if family == "cp":
+        return variance_factor_cp(N, R)
+    if family in ("sparse", "verysparse"):
+        return variance_factor_sparse(math.sqrt(D) if D else 2.0)
+    return variance_factor_gaussian()
+
+
 # ---------------------------------------------------------------------------
 # Theorem 2 — JL embedding-size lower bounds
 # ---------------------------------------------------------------------------
@@ -94,6 +115,19 @@ def params_sparse_rp(k: int, dims, s: float | None = None) -> int:
         D *= d
     s = s if s is not None else math.sqrt(D)
     return int(k * D / s)
+
+
+def params_rp(family: str, k: int, dims, R: int = 2) -> int:
+    """Operator parameter count for any built-in family."""
+    if family == "tt":
+        return params_tt_rp(k, dims, R)
+    if family == "cp":
+        return params_cp_rp(k, dims, R)
+    if family in ("gaussian", "dense"):
+        return params_gaussian_rp(k, dims)
+    if family in ("sparse", "verysparse"):
+        return params_sparse_rp(k, dims)
+    raise KeyError(f"no parameter formula for family {family!r}")
 
 
 # FLOP estimates for the projection paths (multiply-adds x2), used by the

@@ -55,6 +55,11 @@ class TTRP:
         return tuple(int(c.shape[2]) for c in self.cores)
 
     @property
+    def in_dims(self) -> tuple[int, ...]:
+        """RPOperator protocol: input mode sizes (alias of `dims`)."""
+        return self.dims
+
+    @property
     def rank(self) -> int:
         return int(self.cores[0].shape[3]) if self.order > 1 else 1
 
@@ -106,7 +111,9 @@ class TTRP:
             tmp = jnp.einsum("kap,kads->kpds", carry, g)
             carry = jnp.einsum("kpds,dp->ksp", tmp, f)
         w = x.weights if x.weights is not None else jnp.ones((x.rank,), x.dtype)
-        y = jnp.einsum("ksp,p->k", carry[:, :1, :] if carry.shape[1] == 1 else carry, w)
+        # the boundary carry is always (k, r_N = 1, R~): contract it directly
+        assert carry.shape[1] == 1, carry.shape
+        y = jnp.einsum("kp,p->k", carry[:, 0, :], w)
         return y / jnp.sqrt(jnp.asarray(k, y.dtype))
 
     def reconstruct(self, y: jnp.ndarray, *, chunk: int | None = None) -> jnp.ndarray:

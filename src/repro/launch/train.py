@@ -103,16 +103,16 @@ def main(argv=None) -> int:
         on_metrics = None
         if args.monitor:
             from repro.core import PytreeSketcher, SketchConfig, SketchMonitor
-            mon_cfg = SketchConfig(fmt="tt", k=256, rank=2,
+            mon_cfg = SketchConfig(family="tt", k=256, rank=2,
                                    bucket_elems=4 * 8 * 16, dims=(4, 8, 16),
                                    fresh_per_step=False)
             monitor = SketchMonitor(
                 PytreeSketcher(mon_cfg, state["params"]),
                 jax.random.PRNGKey(17))
 
-            def on_metrics(step, metrics):
+            def on_metrics(step, metrics, live_state):
                 if step % 10 == 0:
-                    m = monitor.update(state["params"])
+                    m = monitor.update(live_state["params"])
                     print(f"   [monitor] step {step} "
                           f"sketch_norm={float(m['sketch_norm']):.4f} "
                           f"drift={float(m['sketch_drift']):.5f}")

@@ -32,9 +32,13 @@ from repro.core.sketch import PytreeSketcher, SketchConfig
 
 
 def parse_compress_flag(flag: str) -> SketchConfig:
-    """'tt:k=4096,rank=2[,dims=128x128x64]' -> SketchConfig."""
-    fmt, _, rest = flag.partition(":")
-    kw: dict[str, Any] = {"fmt": fmt}
+    """'<family>:k=4096,rank=2[,dims=128x128x64]' -> SketchConfig.
+
+    `family` is any registered repro.rp family ('tt', 'cp', 'gaussian',
+    'sparse', ...); SketchConfig validates it against the registry.
+    """
+    family, _, rest = flag.partition(":")
+    kw: dict[str, Any] = {"family": family}
     if rest:
         for part in rest.split(","):
             key, _, val = part.partition("=")

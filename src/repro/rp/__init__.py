@@ -1,0 +1,38 @@
+"""repro.rp — the unified projector API for all random-projection families.
+
+One protocol (`RPOperator`), one declarative spec (`ProjectorSpec`), a
+registry (`register_family` / `make_projector`), and a structure-dispatched
+functional entry point (`project` / `reconstruct`) with backend routing
+('auto' | 'pallas' | 'xla') to the Pallas TPU kernels.
+
+Quickstart::
+
+    from repro import rp
+    import jax
+
+    spec = rp.ProjectorSpec(family="tt", k=256, dims=(8, 128, 64), rank=2)
+    op = rp.make_projector(spec, jax.random.PRNGKey(0))
+    y = rp.project(op, x)                      # dense, flat, TT or CP input
+    x_hat = rp.reconstruct(op, y)              # unbiased adjoint
+
+The four built-in families are 'tt', 'cp', 'gaussian', 'sparse'; new ones
+register with::
+
+    @rp.register_family("my-family")
+    def _make(spec, key): ...
+
+The `repro.core` operator classes and samplers remain importable; their
+per-format method zoo (`project_tt` / `project_cp`) is deprecated in favor
+of `rp.project` and kept for one release.
+"""
+from . import families as _families  # noqa: F401  (registers built-ins)
+from .dispatch import (force_pallas, kernel_call_count, project, reconstruct)
+from .protocol import FormatMismatchError, ProjectorSpec, RPOperator
+from .registry import (get_family, list_families, make_projector,
+                       register_family)
+
+__all__ = [
+    "FormatMismatchError", "ProjectorSpec", "RPOperator", "force_pallas",
+    "get_family", "kernel_call_count", "list_families", "make_projector",
+    "project", "reconstruct", "register_family",
+]

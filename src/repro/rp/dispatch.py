@@ -1,0 +1,200 @@
+"""Structure-dispatched projection with backend routing.
+
+`project(op, x)` is the single entry point replacing the old
+`project` / `project_tt` / `project_cp` method zoo: it inspects the input's
+structure (dense tensor, flat vector, `TTTensor`, `CPTensor`) and the
+operator's family, and routes to the cheapest contraction path, raising a
+typed `FormatMismatchError` on incompatible shapes.
+
+Backend policy (`backend='auto' | 'pallas' | 'xla'`)
+---------------------------------------------------
+Dense-input order-3 projections of the TT/CP families have Pallas TPU
+kernels (`repro.kernels.tt_project` / `cp_project`); structured TT input has
+`tt_dot`. Routing:
+
+* 'xla'    — always the einsum path.
+* 'pallas' — always the kernel (the kernels' own wrappers fall back to
+             einsum for unsupported orders); interpret mode off-TPU.
+* 'auto'   — the kernel iff the shapes are MXU-aligned (k a multiple of the
+             128 lane width, every mode a multiple of the 8 sublanes) AND we
+             are on real TPU hardware. Off-TPU the kernels only run in
+             interpret mode — a validation device, not a fast path — so
+             'auto' stays on XLA there unless `force_pallas()` is active
+             (which tests use to prove the routing).
+
+Every dispatch that routes to a kernel increments a module counter readable
+via `kernel_call_count()` so tests can assert the route actually taken
+(counted at trace time — cached jit executions don't re-dispatch).
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cp_rp import CPRP
+from repro.core.formats import CPTensor, TTTensor, _prod
+from repro.core.tt_rp import TTRP
+
+from .protocol import FormatMismatchError, RPOperator
+
+_BACKENDS = ("auto", "pallas", "xla")
+
+# Instrumentation: number of projections routed through a Pallas kernel.
+_KERNEL_CALLS = 0
+# When True, 'auto' may pick the (interpret-mode) kernel off-TPU.
+_FORCE_PALLAS = False
+
+
+def kernel_call_count() -> int:
+    """How many `project` dispatches routed to a Pallas kernel.
+
+    Counts at dispatch (trace) time: under `jax.jit` a cached executable
+    re-runs without re-dispatching, so this proves *routing*, not
+    per-execution kernel launches.
+    """
+    return _KERNEL_CALLS
+
+
+@contextlib.contextmanager
+def force_pallas():
+    """Let `backend='auto'` select the interpret-mode kernel off-TPU.
+
+    Used by tests to exercise/prove the Pallas route on CPU; on real TPU
+    hardware 'auto' selects the kernel by itself.
+    """
+    global _FORCE_PALLAS
+    prev = _FORCE_PALLAS
+    _FORCE_PALLAS = True
+    try:
+        yield
+    finally:
+        _FORCE_PALLAS = prev
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _count_kernel() -> None:
+    global _KERNEL_CALLS
+    _KERNEL_CALLS += 1
+
+
+def _mxu_aligned(op) -> bool:
+    dims = op.in_dims
+    return (op.k % 128 == 0 and len(dims) == 3
+            and all(d % 8 == 0 for d in dims))
+
+
+def _use_kernel(backend: str, *, supported: bool, aligned: bool) -> bool:
+    if backend not in _BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; expected {_BACKENDS}")
+    if not supported:
+        # even for backend='pallas': unsupported orders take the einsum path
+        return False
+    if backend == "pallas":
+        return True
+    if backend == "xla":
+        return False
+    return aligned and (_on_tpu() or _FORCE_PALLAS)
+
+
+def _coerce_dense(op: RPOperator, x: jnp.ndarray) -> jnp.ndarray:
+    """Reshape/pad a dense array to `(*batch, *op.in_dims)`.
+
+    Accepts: exact `(*batch, *in_dims)` tensors; `(*batch, D)` flat vectors
+    with D == prod(in_dims); short 1-D vectors (zero-padded — harmless under
+    a linear map); any unbatched tensorization with the right element count.
+    """
+    dims = tuple(op.in_dims)
+    n = len(dims)
+    size = _prod(dims)
+    x = jnp.asarray(x)
+    if x.ndim >= n and tuple(x.shape[-n:]) == dims:
+        return x
+    if x.ndim >= 1 and x.shape[-1] == size:
+        return x.reshape(x.shape[:-1] + dims)
+    if x.ndim == 1 and x.size < size:
+        pad = jnp.zeros((size - x.size,), x.dtype)
+        return jnp.concatenate([x, pad]).reshape(dims)
+    if x.ndim >= n and x.size == size:
+        # alternate tensorization of a single input (e.g. a gradient bucket
+        # shaped for a tensorized family, fed to a flat baseline); ndim < n
+        # would more likely be a mis-shaped batch — reject those below
+        return x.reshape(dims)
+    raise FormatMismatchError(
+        f"dense input of shape {tuple(x.shape)} is incompatible with "
+        f"operator in_dims={dims} (flat size {size})")
+
+
+def _check_struct_dims(op: RPOperator, x) -> None:
+    if tuple(x.dims) != tuple(op.in_dims):
+        raise FormatMismatchError(
+            f"{type(x).__name__} input dims {tuple(x.dims)} != operator "
+            f"in_dims {tuple(op.in_dims)}")
+
+
+def _project_dense(op: RPOperator, x: jnp.ndarray, backend: str) -> jnp.ndarray:
+    xt = _coerce_dense(op, x)
+    is_tn = isinstance(op, (TTRP, CPRP))
+    supported = (is_tn and op.order == 3 and xt.ndim == 3)
+    if _use_kernel(backend, supported=supported, aligned=_mxu_aligned(op)):
+        from repro.kernels import ops as kops  # local: avoids import cycle
+        _count_kernel()
+        interpret = not _on_tpu()
+        if isinstance(op, TTRP):
+            return kops.tt_project(op, xt, interpret=interpret)
+        return kops.cp_project(op, xt, interpret=interpret)
+    return op.project(xt)
+
+
+def project(op: RPOperator, x, *, backend: str = "auto") -> jnp.ndarray:
+    """Project `x` with `op`, dispatching on the input's structure.
+
+    x may be:
+      * a dense array `(*batch, *op.in_dims)`,
+      * a flat vector (auto-tensorized; short vectors are zero-padded),
+      * a `TTTensor` (TT-format fast path for tensorized families),
+      * a `CPTensor` (CP-format fast path for tensorized families).
+
+    Flat-vector families (gaussian/sparse) accept structured inputs too by
+    densifying them first — only viable at small prod(dims), which is
+    exactly the regime the paper could run those baselines in.
+
+    Returns the `(*batch, k)` sketch (structured inputs are unbatched).
+    """
+    if isinstance(x, TTTensor):
+        if isinstance(op, TTRP):
+            _check_struct_dims(op, x)
+            supported = op.order == 3 and x.order == 3
+            if _use_kernel(backend, supported=supported,
+                           aligned=_mxu_aligned(op)):
+                from repro.kernels import ops as kops
+                _count_kernel()
+                return kops.tt_dot(op, x, interpret=not _on_tpu())
+            return op.project_tt(x)
+        if isinstance(op, CPRP):
+            _check_struct_dims(op, x)
+            return op.project_tt(x)
+        return _project_dense(op, x.full().reshape(-1), backend)
+    if isinstance(x, CPTensor):
+        if isinstance(op, (TTRP, CPRP)):
+            _check_struct_dims(op, x)
+            return op.project_cp(x)
+        return _project_dense(op, x.full().reshape(-1), backend)
+    return _project_dense(op, x, backend)
+
+
+def reconstruct(op: RPOperator, y: jnp.ndarray, *,
+                chunk: int | None = None) -> jnp.ndarray:
+    """Unbiased adjoint reconstruction `x_hat` with shape `op.in_dims`.
+
+    `chunk` bounds the k-sized intermediate for the tensorized families.
+    """
+    y = jnp.asarray(y)
+    if y.shape != (op.k,):
+        raise FormatMismatchError(
+            f"sketch shape {tuple(y.shape)} != (k,) = ({op.k},)")
+    return op.reconstruct(y, chunk=chunk)

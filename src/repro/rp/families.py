@@ -1,0 +1,37 @@
+"""Built-in projector families: the paper's two maps and its two baselines.
+
+family      operator     params (theory.*)        structured fast paths
+------      --------     ------------------       ---------------------
+'tt'        TTRP         O(k N d R^2)             TT, CP inputs
+'cp'        CPRP         O(k N d R)               TT, CP inputs
+'gaussian'  GaussianRP   k * D                    — (flat; streamed blocks)
+'sparse'    VerySparseRP ~ k * D / sqrt(D)        — (flat; streamed blocks)
+"""
+from __future__ import annotations
+
+from repro.core.baselines import GaussianRP, VerySparseRP
+from repro.core.cp_rp import sample_cp_rp
+from repro.core.tt_rp import sample_tt_rp
+
+from .protocol import ProjectorSpec
+from .registry import register_family
+
+
+@register_family("tt")
+def _make_tt(spec: ProjectorSpec, key):
+    return sample_tt_rp(key, spec.dims, spec.k, spec.rank, dtype=spec.dtype)
+
+
+@register_family("cp")
+def _make_cp(spec: ProjectorSpec, key):
+    return sample_cp_rp(key, spec.dims, spec.k, spec.rank, dtype=spec.dtype)
+
+
+@register_family("gaussian", "dense")
+def _make_gaussian(spec: ProjectorSpec, key):
+    return GaussianRP(key=key, k=spec.k, dim=spec.input_size)
+
+
+@register_family("sparse", "verysparse")
+def _make_sparse(spec: ProjectorSpec, key):
+    return VerySparseRP(key=key, k=spec.k, dim=spec.input_size)

@@ -1,0 +1,116 @@
+"""The single projector protocol every RP family implements.
+
+The paper compares *families* of random projections (f_TT, f_CP, dense
+Gaussian, very-sparse JLT); the code therefore needs one interface that all
+of them satisfy so benchmarks, tests, the sketching stack, and the
+compressed all-reduce can iterate over families uniformly.
+
+`RPOperator` is a structural protocol — existing operator classes
+(`repro.core.tt_rp.TTRP`, `repro.core.cp_rp.CPRP`,
+`repro.core.baselines.GaussianRP` / `VerySparseRP`) conform without
+inheriting from anything here. `ProjectorSpec` is the declarative
+description a registry factory turns into a sampled operator.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Protocol, runtime_checkable
+
+import jax.numpy as jnp
+
+
+class FormatMismatchError(TypeError):
+    """Input structure/shape is incompatible with the operator.
+
+    Raised by `repro.rp.project` (and friends) instead of bare asserts so
+    callers can catch a typed error when routing heterogeneous inputs.
+    """
+
+
+@runtime_checkable
+class RPOperator(Protocol):
+    """Structural interface of a sampled random-projection operator.
+
+    Attributes / methods
+    --------------------
+    k            : embedding dimension (number of rows of the implicit map).
+    in_dims      : input mode sizes; `(D,)` for flat-vector operators,
+                   `(d_1, ..., d_N)` for tensorized ones.
+    num_params() : stored parameter count (the paper's memory axis).
+    project(x)   : dense input `(*batch, *in_dims) -> (*batch, k)`.
+    reconstruct(y, *, chunk): unbiased adjoint `(k,) -> in_dims`-shaped
+                   estimate; `chunk` bounds the k-sized intermediate.
+    as_dense_matrix(): materialize the `(k, prod(in_dims))` matrix
+                   (small problems / tests only).
+    """
+
+    @property
+    def k(self) -> int: ...
+
+    @property
+    def in_dims(self) -> tuple[int, ...]: ...
+
+    def num_params(self) -> int: ...
+
+    def project(self, x: jnp.ndarray) -> jnp.ndarray: ...
+
+    def reconstruct(self, y: jnp.ndarray, *,
+                    chunk: int | None = None) -> jnp.ndarray: ...
+
+    def as_dense_matrix(self) -> jnp.ndarray: ...
+
+
+@dataclasses.dataclass(frozen=True)
+class ProjectorSpec:
+    """Declarative description of a projector; `make_projector` samples it.
+
+    family  : registered family name ('tt', 'cp', 'gaussian', 'sparse', ...).
+    k       : embedding dimension.
+    dims    : input mode sizes. Flat-vector families contract over
+              prod(dims), so a tensorized `dims` is valid for every family.
+    rank    : structural rank R (ignored by unstructured families).
+    dtype   : parameter dtype.
+    backend : preferred execution backend for dense-input projections,
+              'auto' | 'pallas' | 'xla' (see `repro.rp.project`).
+    """
+
+    family: str
+    k: int
+    dims: tuple[int, ...]
+    rank: int = 2
+    dtype: Any = jnp.float32
+    backend: str = "auto"
+
+    def __post_init__(self):
+        object.__setattr__(self, "dims", tuple(int(d) for d in self.dims))
+        if self.k <= 0:
+            raise ValueError(f"k must be positive, got {self.k}")
+        if self.backend not in ("auto", "pallas", "xla"):
+            raise ValueError(f"unknown backend {self.backend!r}")
+
+    @property
+    def input_size(self) -> int:
+        out = 1
+        for d in self.dims:
+            out *= d
+        return out
+
+    @classmethod
+    def for_flat(cls, family: str, size: int, k: int, *, rank: int = 2,
+                 dtype: Any = jnp.float32, backend: str = "auto",
+                 max_order: int = 4, align: int = 128) -> "ProjectorSpec":
+        """Spec for a flat vector of `size` elements, auto-tensorized.
+
+        Picks MXU-friendly dims via `formats.auto_dims` (padding the size up
+        to the lane width first); `repro.rp.project` zero-pads short flat
+        inputs to prod(dims), which leaves the projection of the embedded
+        vector unchanged (the map is linear).
+        """
+        import math
+
+        from repro.core.formats import auto_dims
+
+        padded = int(math.ceil(size / align) * align)
+        dims = auto_dims(padded, max_order=max_order, align=align)
+        return cls(family=family, k=k, dims=dims, rank=rank, dtype=dtype,
+                   backend=backend)

@@ -1,0 +1,61 @@
+"""Family registry: name -> factory(spec, key) -> RPOperator.
+
+New projection families (e.g. the Rademacher tensor-network maps of
+Rakhshan & Rabusseau 2021, or orthogonalized-core TT projections of
+Feng et al. 2020 — see PAPERS.md) plug in with a single decorated factory;
+every call site that goes through `make_projector` / `repro.rp.project`
+picks them up without modification.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+from .protocol import ProjectorSpec, RPOperator
+
+Factory = Callable[[ProjectorSpec, object], RPOperator]
+
+_FAMILIES: dict[str, Factory] = {}
+_ALIASES: dict[str, str] = {}
+
+
+def register_family(name: str, *aliases: str) -> Callable[[Factory], Factory]:
+    """Decorator registering `factory(spec, key) -> RPOperator` under `name`.
+
+    >>> @register_family("tt")
+    ... def _make_tt(spec, key):
+    ...     return sample_tt_rp(key, spec.dims, spec.k, spec.rank, spec.dtype)
+    """
+
+    def deco(factory: Factory) -> Factory:
+        for n in (name,) + aliases:
+            if n in _FAMILIES or n in _ALIASES:
+                raise ValueError(f"RP family {n!r} already registered")
+        _FAMILIES[name] = factory
+        for a in aliases:
+            _ALIASES[a] = name
+        return factory
+
+    return deco
+
+
+def list_families() -> tuple[str, ...]:
+    """Canonical registered family names (aliases resolve but aren't listed)."""
+    return tuple(sorted(_FAMILIES))
+
+
+def get_family(name: str) -> Factory:
+    try:
+        return _FAMILIES[_ALIASES.get(name, name)]
+    except KeyError:
+        raise KeyError(
+            f"unknown RP family {name!r}; registered: {list_families()}"
+        ) from None
+
+
+def make_projector(spec: ProjectorSpec, key) -> RPOperator:
+    """Sample a projector for `spec` using PRNG `key`.
+
+    Deterministic given (spec, key): distributed hosts regenerate the same
+    operator locally from a shared key — only sketches cross the network.
+    """
+    return get_family(spec.family)(spec, key)

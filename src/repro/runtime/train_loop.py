@@ -33,12 +33,14 @@ class LoopConfig:
 def run(step_fn: Callable, state: Any, data: SyntheticLM, cfg: LoopConfig, *,
         injector: FaultInjector | None = None,
         log: Callable[[str], None] = print,
-        on_metrics: Callable[[int, dict], None] | None = None) -> tuple[Any, int]:
+        on_metrics: Callable[..., None] | None = None) -> tuple[Any, int]:
     """Runs step_fn(state, batch)->(state, metrics) until total_steps.
 
     Resumes from the latest checkpoint in cfg.ckpt_dir if one exists; the
     data stream fast-forwards to the restored step (pure function of step).
-    Returns (final_state, final_step).
+    `on_metrics(step, metrics, state)` receives the LIVE post-step state —
+    with donated input buffers, closing over the pre-loop state reads
+    deleted arrays. Returns (final_state, final_step).
     """
     start = 0
     if cfg.ckpt_dir:
@@ -64,7 +66,7 @@ def run(step_fn: Callable, state: Any, data: SyntheticLM, cfg: LoopConfig, *,
                 log(f"[straggler] step {step}: {ev.dt:.3f}s "
                     f"(ema {ev.ema:.3f}s, z={ev.zscore:.1f})")
             if on_metrics is not None:
-                on_metrics(step, metrics)
+                on_metrics(step, metrics, state)
             if step % cfg.log_every == 0 or step == cfg.total_steps - 1:
                 scal = {k: float(v) for k, v in metrics.items()
                         if hasattr(v, "shape") and v.shape == ()}

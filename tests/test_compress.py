@@ -9,7 +9,7 @@ from repro.core.sketch import PytreeSketcher, SketchConfig
 from repro.optim.compress import SketchCompressor, parse_compress_flag
 
 
-CFG = SketchConfig(fmt="tt", k=512, rank=4, bucket_elems=4 * 8 * 16,
+CFG = SketchConfig(family="tt", k=512, rank=4, bucket_elems=4 * 8 * 16,
                    dims=(4, 8, 16))
 
 
@@ -89,7 +89,7 @@ mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
 cfg = reduced(get_config("llama3.2-3b"))
 model = build_model(cfg)
 shape = ShapeSpec("t", 32, 8, "train")
-scfg = SketchConfig(fmt="tt", k=1024, rank=8, bucket_elems=4*8*16, dims=(4,8,16))
+scfg = SketchConfig(family="tt", k=1024, rank=8, bucket_elems=4*8*16, dims=(4,8,16))
 comp = SketchCompressor(scfg)
 data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=8))
 with mesh:

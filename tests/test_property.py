@@ -1,10 +1,17 @@
-"""Hypothesis property tests on the sketching invariants."""
-import hypothesis
-import hypothesis.strategies as st
+"""Hypothesis property tests on the sketching invariants.
+
+Skipped wholesale when `hypothesis` is absent (it is not baked into the CI
+container); tests/test_rp_api.py carries non-hypothesis JL smoke coverage so
+the invariants stay exercised either way.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
 
 from repro.core import (auto_dims, pad_to_tensorizable, sample_cp_rp,
                         sample_tt_rp)

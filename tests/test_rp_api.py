@@ -1,0 +1,290 @@
+"""Tests for the unified repro.rp projector API.
+
+Covers: registry round-trip for all four families, structure-dispatch
+equivalence (flat / dense / TT / CP inputs agree), backend equivalence
+(pallas interpret-mode vs xla), provable auto->pallas routing, typed format
+errors, SketchConfig family passthrough (gaussian end-to-end roundtrip),
+and a JL-property smoke test per family (the non-hypothesis counterpart of
+tests/test_property.py::test_jl_pairwise_distances).
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import rp
+from repro.core import random_cp, random_tt
+from repro.core.sketch import PytreeSketcher, SketchConfig
+
+FAMILIES = ("tt", "cp", "gaussian", "sparse")
+DIMS = (4, 5, 6)
+KEY = jax.random.PRNGKey(0)
+
+
+def _op(family, k=64, dims=DIMS, rank=2, key=KEY):
+    return rp.make_projector(
+        rp.ProjectorSpec(family=family, k=k, dims=dims, rank=rank), key)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_lists_all_builtin_families():
+    assert set(FAMILIES) <= set(rp.list_families())
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_registry_roundtrip(family):
+    op = _op(family)
+    assert isinstance(op, rp.RPOperator)
+    assert op.k == 64
+    assert op.num_params() > 0
+    y = rp.project(op, jax.random.normal(KEY, DIMS))
+    assert y.shape == (64,)
+    a = op.as_dense_matrix()
+    assert a.shape == (64, 4 * 5 * 6)
+
+
+def test_registry_aliases_resolve_but_are_not_listed():
+    assert rp.get_family("dense") is rp.get_family("gaussian")
+    assert rp.get_family("verysparse") is rp.get_family("sparse")
+    assert "dense" not in rp.list_families()
+
+
+def test_unknown_family_raises_with_known_list():
+    with pytest.raises(KeyError, match="unknown RP family"):
+        rp.make_projector(rp.ProjectorSpec(family="nope", k=8, dims=(4,)), KEY)
+
+
+def test_duplicate_registration_rejected():
+    with pytest.raises(ValueError, match="already registered"):
+        rp.register_family("tt")(lambda spec, key: None)
+
+
+def test_register_new_family_plugs_into_call_sites():
+    name = "unit-test-scaled-tt"
+    try:
+        @rp.register_family(name)
+        def _make(spec, key):
+            return _op("tt", k=spec.k, dims=spec.dims, rank=spec.rank, key=key)
+
+        op = rp.make_projector(
+            rp.ProjectorSpec(family=name, k=32, dims=DIMS, rank=2), KEY)
+        assert rp.project(op, jax.random.normal(KEY, DIMS)).shape == (32,)
+        cfg = SketchConfig(family=name, k=32, rank=2, bucket_elems=120,
+                           dims=DIMS)
+        assert cfg.operator_params() == op.num_params()
+    finally:
+        from repro.rp import registry as _reg
+        _reg._FAMILIES.pop(name, None)
+
+
+# ---------------------------------------------------------------------------
+# structure dispatch
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_dispatch_paths_agree(family):
+    """flat == dense == TT == CP routing on exactly-representable inputs."""
+    t = random_tt(jax.random.PRNGKey(1), DIMS, 3)
+    c = random_cp(jax.random.PRNGKey(2), DIMS, 2)
+    op = _op(family, k=128)
+    for x in (t, c):
+        xd = x.full()
+        y_dense = rp.project(op, xd)
+        y_flat = rp.project(op, xd.reshape(-1))
+        y_struct = rp.project(op, x)
+        np.testing.assert_allclose(np.asarray(y_dense), np.asarray(y_flat),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(y_dense), np.asarray(y_struct),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_ttrp_project_cp_boundary_contraction():
+    """Regression for the dead conditional in TTRP.project_cp: the carry is
+    always (k, 1, R~); cross-format equality must hold exactly-representably."""
+    c = random_cp(jax.random.PRNGKey(3), DIMS, 4)
+    t = c.to_tt()
+    op = _op("tt", k=96, rank=3)
+    y_dense = rp.project(op, c.full())
+    np.testing.assert_allclose(np.asarray(rp.project(op, c)),
+                               np.asarray(y_dense), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(rp.project(op, t)),
+                               np.asarray(y_dense), rtol=1e-4, atol=1e-5)
+
+
+def test_flat_vector_zero_padding():
+    """Short flat inputs are zero-padded — projection of the embedded vector."""
+    op = _op("tt")
+    x = jax.random.normal(KEY, (100,))  # prod(DIMS) = 120
+    y = rp.project(op, x)
+    xp = jnp.concatenate([x, jnp.zeros((20,))]).reshape(DIMS)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(op.project(xp)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_batched_inputs():
+    op = _op("tt")
+    xb = jax.random.normal(KEY, (7,) + DIMS)
+    yb = rp.project(op, xb)
+    assert yb.shape == (7, 64)
+    np.testing.assert_allclose(np.asarray(yb[3]),
+                               np.asarray(rp.project(op, xb[3])),
+                               rtol=1e-5, atol=1e-5)
+    # batched flat for a flat family
+    g = _op("gaussian")
+    yf = rp.project(g, xb.reshape(7, -1))
+    np.testing.assert_allclose(np.asarray(yf[2]),
+                               np.asarray(rp.project(g, xb[2])),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_format_mismatch_typed_errors():
+    op = _op("tt")
+    with pytest.raises(rp.FormatMismatchError):
+        rp.project(op, jnp.zeros((3, 3)))
+    # a mis-shaped batch whose total size matches prod(dims) must NOT be
+    # silently collapsed into a single tensor
+    with pytest.raises(rp.FormatMismatchError):
+        rp.project(op, jnp.zeros((4, 30)))
+    with pytest.raises(rp.FormatMismatchError):
+        rp.project(op, random_tt(KEY, (2, 2, 2), 2))
+    with pytest.raises(rp.FormatMismatchError):
+        rp.reconstruct(op, jnp.zeros((65,)))
+    with pytest.raises(ValueError, match="unknown backend"):
+        rp.project(op, jnp.zeros(DIMS), backend="cuda")
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_reconstruct_adjoint(family):
+    op = _op(family, k=128)
+    x = jax.random.normal(jax.random.PRNGKey(4), DIMS)
+    y = rp.project(op, x)
+    a = op.as_dense_matrix()
+    want = np.asarray(a).T @ np.asarray(y)
+    np.testing.assert_allclose(
+        np.asarray(rp.reconstruct(op, y)).reshape(-1), want,
+        rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# backend routing
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", ("tt", "cp"))
+def test_backend_equivalence_pallas_vs_xla(family):
+    dims = (16, 32, 24)
+    op = _op(family, k=128, dims=dims)
+    x = jax.random.normal(jax.random.PRNGKey(5), dims)
+    y_xla = rp.project(op, x, backend="xla")
+    y_pal = rp.project(op, x, backend="pallas")  # interpret mode on CPU
+    np.testing.assert_allclose(np.asarray(y_xla), np.asarray(y_pal),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_auto_routes_through_pallas_kernel_when_aligned():
+    """Acceptance: MXU-aligned dense input + backend='auto' provably takes
+    the Pallas kernel (interpret-mode instrumentation via force_pallas)."""
+    dims = (8, 128, 64)  # aligned: every mode % 8 == 0, k % 128 == 0
+    op = _op("tt", k=128, dims=dims)
+    x = jax.random.normal(jax.random.PRNGKey(6), dims)
+    before = rp.kernel_call_count()
+    y_plain = rp.project(op, x, backend="auto")
+    assert rp.kernel_call_count() == before  # off-TPU auto stays on XLA
+    with rp.force_pallas():
+        y_kern = rp.project(op, x, backend="auto")
+    assert rp.kernel_call_count() == before + 1
+    np.testing.assert_allclose(np.asarray(y_plain), np.asarray(y_kern),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_auto_skips_kernel_when_unaligned():
+    op = _op("tt", k=60, dims=(3, 5, 7))
+    x = jax.random.normal(KEY, (3, 5, 7))
+    before = rp.kernel_call_count()
+    with rp.force_pallas():
+        rp.project(op, x, backend="auto")
+    assert rp.kernel_call_count() == before
+
+
+# ---------------------------------------------------------------------------
+# SketchConfig family passthrough
+# ---------------------------------------------------------------------------
+
+def _tree():
+    return {"w": jax.random.normal(jax.random.PRNGKey(7), (24, 24)),
+            "b": jax.random.normal(jax.random.PRNGKey(8), (17,))}
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_sketcher_roundtrip_every_family(family):
+    cfg = SketchConfig(family=family, k=256, rank=2, bucket_elems=128,
+                       dims=(4, 4, 8), backend="xla")
+    tree = _tree()
+    sk = PytreeSketcher(cfg, tree)
+    recon, y = sk.roundtrip(tree, jax.random.PRNGKey(9))
+    assert y.shape == (sk.n_buckets, cfg.k)
+    assert jax.tree_util.tree_structure(recon) == \
+        jax.tree_util.tree_structure(tree)
+    for a, b in zip(jax.tree_util.tree_leaves(recon),
+                    jax.tree_util.tree_leaves(tree)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+        assert bool(jnp.all(jnp.isfinite(a)))
+    # roundtrip is a (noisy) estimator, not garbage: positive correlation
+    flat_r = jnp.concatenate([a.reshape(-1) for a in
+                              jax.tree_util.tree_leaves(recon)])
+    flat_t = jnp.concatenate([a.reshape(-1) for a in
+                              jax.tree_util.tree_leaves(tree)])
+    corr = jnp.vdot(flat_r, flat_t) / (
+        jnp.linalg.norm(flat_r) * jnp.linalg.norm(flat_t))
+    assert float(corr) > 0.2, float(corr)
+
+
+def test_sketchconfig_fmt_alias_deprecated():
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        cfg = SketchConfig(fmt="cp", k=64, bucket_elems=120, dims=DIMS)
+    assert cfg.family == "cp" and cfg.fmt == "cp"
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+
+
+def test_sketchconfig_rejects_unknown_family():
+    with pytest.raises(KeyError, match="unknown RP family"):
+        SketchConfig(family="nope", bucket_elems=120, dims=DIMS)
+
+
+def test_shrinkage_defined_for_all_families():
+    for family in FAMILIES:
+        cfg = SketchConfig(family=family, k=64, bucket_elems=120, dims=DIMS)
+        assert 0.0 < cfg.shrinkage() < 1.0
+        assert cfg.operator_params() > 0
+
+
+# ---------------------------------------------------------------------------
+# JL smoke per family (non-hypothesis port of test_property.py machinery)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_jl_pairwise_distance_smoke(family):
+    dims, k, m = (4, 4, 4), 256, 6
+    op = _op(family, k=k, dims=dims, rank=4, key=jax.random.PRNGKey(11))
+    pts = jax.random.normal(jax.random.PRNGKey(12), (m,) + dims)
+    proj = jax.vmap(lambda t: rp.project(op, t))(pts)
+    ratios = []
+    for i in range(m):
+        for j in range(i + 1, m):
+            du = float(jnp.sum((pts[i] - pts[j]) ** 2))
+            dv = float(jnp.sum((proj[i] - proj[j]) ** 2))
+            ratios.append(dv / du)
+    assert 0.5 < float(np.median(ratios)) < 1.6, np.median(ratios)
+
+
+def test_spec_for_flat_auto_tensorizes():
+    spec = rp.ProjectorSpec.for_flat("tt", 100_000, k=64)
+    assert spec.input_size >= 100_000
+    op = rp.make_projector(spec, KEY)
+    y = rp.project(op, jax.random.normal(KEY, (100_000,)))
+    assert y.shape == (64,)
