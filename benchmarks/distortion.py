@@ -60,9 +60,8 @@ def run(fast=True):
     trials = 10 if fast else 50
     all_rows = []
     for case in CASES:
-        rows = distortion_table(case, ks=ks, trials=trials)
-        all_rows += rows
-        for r in rows:
-            csv_row(f"distortion/{case}/{r['map']}/k={r['k']}", 0.0,
-                    f"mean={r['mean']:.4f};std={r['std']:.4f}")
+        for r in distortion_table(case, ks=ks, trials=trials):
+            all_rows.append(
+                csv_row(f"distortion/{case}/{r['map']}/k={r['k']}", 0.0,
+                        f"mean={r['mean']:.4f};std={r['std']:.4f}"))
     return all_rows

@@ -1,10 +1,51 @@
 """Benchmark harness — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV. `--full` uses paper-scale trial
-counts (slow on CPU); default is a faithful but reduced sweep.
+counts (slow on CPU); default is a faithful but reduced sweep. `--json PATH`
+additionally writes a structured ``BENCH_rp.json`` perf record (per-kernel
+us/call, parsed derived metrics such as batched-vs-per-bucket launch counts
+and bytes moved) so CI can archive the perf trajectory run over run.
 """
 import argparse
+import json
 import sys
+import time
+
+
+def _parse_derived(derived: str):
+    """'a=1;b=2.5x;c=foo' -> {'a': 1, 'b': '2.5x', 'c': 'foo'} (best effort)."""
+    out = {}
+    for part in derived.split(";"):
+        if not part:
+            continue
+        key, eq, val = part.partition("=")
+        if not eq:
+            out[part] = True
+            continue
+        for cast in (int, float):
+            try:
+                val = cast(val)
+                break
+            except ValueError:
+                continue
+        out[key] = val
+    return out
+
+
+def _rows_to_records(rows):
+    records = []
+    for row in rows or []:
+        if not isinstance(row, str):  # tolerate structured (non-CSV) rows
+            records.append({"raw": row})
+            continue
+        name, _, rest = row.partition(",")
+        us, _, derived = rest.partition(",")
+        records.append({
+            "name": name,
+            "us_per_call": float(us),
+            "derived": _parse_derived(derived),
+        })
+    return records
 
 
 def main(argv=None) -> None:
@@ -15,6 +56,8 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: distortion,timing,pairwise,memory,"
                          "variance,gradcomp,rooflines,smoke")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write a structured perf record (BENCH_rp.json)")
     args = ap.parse_args(argv)
     fast = not args.full
     from . import (distortion, gradcomp, memory, pairwise, rooflines, smoke,
@@ -31,9 +74,23 @@ def main(argv=None) -> None:
     else:
         wanted = [m for m in mods if m != "smoke"]
     print("name,us_per_call,derived")
+    sections = {}
     for name in wanted:
         print(f"# --- {name} ---", flush=True)
-        mods[name].run(fast=fast)
+        sections[name] = _rows_to_records(mods[name].run(fast=fast))
+    if args.json:
+        import jax
+        record = {
+            "schema": "bench_rp/v1",
+            "unix_time": time.time(),
+            "backend": jax.default_backend(),
+            "fast": fast,
+            "argv": list(argv) if argv is not None else sys.argv[1:],
+            "sections": sections,
+        }
+        with open(args.json, "w") as f:
+            json.dump(record, f, indent=2, sort_keys=True)
+        print(f"# wrote {args.json}", flush=True)
 
 
 if __name__ == "__main__":

@@ -5,8 +5,9 @@ parameter deltas) are bucketed, each bucket is tensorized into an MXU-aligned
 order-3 tensor, and projected with any registered `repro.rp` family —
 f_TT(R) / f_CP(R) from the paper, or the gaussian/sparse baselines via
 flat-vector dispatch. Because the operator is derived from a PRNG key,
-distributed hosts regenerate it locally — only the k-dim sketches ever cross
-the network.
+distributed hosts regenerate it locally — the operator itself never crosses
+the network (what else crosses depends on the consumer's sync formulation;
+see optim/compress.py).
 
 Used by:
   * optim/compress.py — error-feedback compressed cross-pod all-reduce,
@@ -144,25 +145,38 @@ class PytreeSketcher:
 
     # -- sketch / unsketch -----------------------------------------------
     def sketch(self, tree: Any, key) -> jnp.ndarray:
-        """tree -> (n_buckets, k) sketch (buckets concatenated over leaves)."""
+        """tree -> (n_buckets, k) sketch (buckets concatenated over leaves).
+
+        All buckets of a leaf go through ONE batched `rp.project` call — on
+        the Pallas route that is a single kernel launch with a native batch
+        grid axis (operator cores streamed once per k-tile, not once per
+        bucket), instead of the old vmap of per-bucket launches.
+        """
         from repro import rp
         op = self.cfg.operator(key)
-        proj = lambda b: rp.project(op, b, backend=self.cfg.backend)  # noqa: E731
+        flat_op = len(op.in_dims) == 1  # gaussian/sparse contract flat
         ys = []
         for leaf, nb in zip(jax.tree_util.tree_leaves(tree), self._nb):
-            ys.append(jax.vmap(proj)(self._leaf_to_buckets(leaf, nb)))
+            buckets = self._leaf_to_buckets(leaf, nb)
+            if flat_op:
+                buckets = buckets.reshape(nb, -1)
+            ys.append(rp.project(op, buckets, backend=self.cfg.backend))
         return jnp.concatenate(ys, axis=0)
 
     def unsketch(self, y: jnp.ndarray, key) -> Any:
-        """(n_buckets, k) -> unbiased pytree estimate (same key as sketch)."""
+        """(n_buckets, k) -> unbiased pytree estimate (same key as sketch).
+
+        One batched `rp.reconstruct` per leaf — the Pallas adjoint kernels
+        reconstruct every bucket of the leaf in a single launch.
+        """
         from repro import rp
         op = self.cfg.operator(key)
         out = []
         off = 0
         for nb, size, shape, dtype in zip(self._nb, self._sizes,
                                           self._shapes, self._dtypes):
-            buckets = jax.vmap(lambda yy: rp.reconstruct(op, yy))(
-                _constrain_buckets(y[off:off + nb]))
+            buckets = rp.reconstruct(op, _constrain_buckets(y[off:off + nb]),
+                                     backend=self.cfg.backend)
             out.append(self._leaf_from_buckets(buckets, size, shape, dtype))
             off += nb
         return jax.tree_util.tree_unflatten(self._treedef, out)

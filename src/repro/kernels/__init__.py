@@ -1,10 +1,15 @@
 """Pallas TPU kernels for the paper's projection hot-spots.
 
-tt_project / cp_project: dense-input (tensorized flat vector) projections.
+tt_project / cp_project: batched dense-input (tensorized flat vector)
+projections — one launch per batch of buckets, JLT scaling fused.
+tt_reconstruct / cp_reconstruct: batched adjoint reconstructions.
 tt_dot: structured TT-input projection (the paper's O(kNd max(R,R~)^3) path).
+pick_tiles: the VMEM-budgeted tile selector shared by all dense wrappers.
 Validated in interpret mode against ref.py; BlockSpecs target TPU VMEM.
 """
-from .ops import cp_project, tt_dot, tt_project
 from . import ref
+from .ops import (cp_project, cp_reconstruct, pick_tiles, tt_dot, tt_project,
+                  tt_reconstruct)
 
-__all__ = ["cp_project", "tt_dot", "tt_project", "ref"]
+__all__ = ["cp_project", "cp_reconstruct", "pick_tiles", "tt_dot",
+           "tt_project", "tt_reconstruct", "ref"]

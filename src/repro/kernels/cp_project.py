@@ -1,9 +1,11 @@
-"""Pallas TPU kernel: dense-input CP random projection (order 3).
+"""Pallas TPU kernel: batched dense-input CP random projection (order 3).
 
-y[i] = sum_r <f1[i,:,r] o f2[i,:,r] o f3[i,:,r], x>  — same grid/accumulation
-skeleton as tt_project.py (k tiled to lanes, leading mode streamed, output
-block revisited for partial sums). The CP contraction is cheaper per mode
-(rank vectors instead of rank x rank transfer matrices).
+y[n,i] = scale * sum_r <f1[i,:,r] o f2[i,:,r] o f3[i,:,r], x[n]> — same
+grid/accumulation skeleton as tt_project.py (k-tile outermost so the factors
+stay VMEM-resident across the batch, batch and leading mode streamed, output
+block revisited for partial sums over d1, JLT scale fused in the epilogue).
+The CP contraction is cheaper per mode (rank vectors instead of rank x rank
+transfer matrices).
 """
 from __future__ import annotations
 
@@ -14,46 +16,48 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _cp_project3_kernel(x_ref, f1_ref, f2_ref, f3_ref, o_ref):
-    ia = pl.program_id(1)
-    x = x_ref[...]                                    # (BA, d2, d3)
+def _cp_project3_kernel(x_ref, f1_ref, f2_ref, f3_ref, o_ref, *, scale):
+    ia = pl.program_id(2)
+    x = x_ref[...]                                    # (TB, BA, d2, d3)
     f3 = f3_ref[...]                                  # (TK, d3, R)
-    z = jnp.einsum("abc,kcr->kabr", x, f3, preferred_element_type=jnp.float32)
+    z = jnp.einsum("nabc,kcr->knabr", x, f3, preferred_element_type=jnp.float32)
     f2 = f2_ref[...]                                  # (TK, d2, R)
-    v = jnp.einsum("kabr,kbr->kar", z, f2, preferred_element_type=jnp.float32)
+    v = jnp.einsum("knabr,kbr->knar", z, f2, preferred_element_type=jnp.float32)
     f1 = f1_ref[...]                                  # (TK, BA, R)
-    y = jnp.einsum("kar,kar->k", v, f1, preferred_element_type=jnp.float32)
+    y = jnp.einsum("knar,kar->nk", v, f1,
+                   preferred_element_type=jnp.float32) * scale
 
     @pl.when(ia == 0)
     def _init():
-        o_ref[...] = y[:, None]
+        o_ref[...] = y
 
     @pl.when(ia != 0)
     def _acc():
-        o_ref[...] += y[:, None]
+        o_ref[...] += y
 
 
-@functools.partial(jax.jit, static_argnames=("tk", "ba", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("tk", "tb", "ba", "scale", "interpret"))
 def cp_project3(x: jnp.ndarray, f1: jnp.ndarray, f2: jnp.ndarray,
-                f3: jnp.ndarray, *, tk: int = 128, ba: int = 8,
-                interpret: bool = True) -> jnp.ndarray:
-    """Raw contraction; x (d1,d2,d3); f_n (k, d_n, R). k%tk==0, d1%ba==0."""
-    d1, d2, d3 = x.shape
+                f3: jnp.ndarray, *, tk: int = 128, tb: int = 4, ba: int = 8,
+                scale: float = 1.0, interpret: bool = True) -> jnp.ndarray:
+    """Batched contraction; x (B,d1,d2,d3); f_n (k,d_n,R). k%tk==0, B%tb==0,
+    d1%ba==0. `scale` is fused into the epilogue. Returns (B, k) float32."""
+    b, d1, d2, d3 = x.shape
     k, _, r = f1.shape
     assert f2.shape == (k, d2, r) and f3.shape == (k, d3, r)
-    assert k % tk == 0 and d1 % ba == 0
-    grid = (k // tk, d1 // ba)
-    out = pl.pallas_call(
-        _cp_project3_kernel,
+    assert k % tk == 0 and b % tb == 0 and d1 % ba == 0
+    grid = (k // tk, b // tb, d1 // ba)
+    return pl.pallas_call(
+        functools.partial(_cp_project3_kernel, scale=scale),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((ba, d2, d3), lambda ik, ia: (ia, 0, 0)),
-            pl.BlockSpec((tk, ba, r), lambda ik, ia: (ik, ia, 0)),
-            pl.BlockSpec((tk, d2, r), lambda ik, ia: (ik, 0, 0)),
-            pl.BlockSpec((tk, d3, r), lambda ik, ia: (ik, 0, 0)),
+            pl.BlockSpec((tb, ba, d2, d3), lambda ik, ib, ia: (ib, ia, 0, 0)),
+            pl.BlockSpec((tk, ba, r), lambda ik, ib, ia: (ik, ia, 0)),
+            pl.BlockSpec((tk, d2, r), lambda ik, ib, ia: (ik, 0, 0)),
+            pl.BlockSpec((tk, d3, r), lambda ik, ib, ia: (ik, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((tk, 1), lambda ik, ia: (ik, 0)),
-        out_shape=jax.ShapeDtypeStruct((k, 1), jnp.float32),
+        out_specs=pl.BlockSpec((tb, tk), lambda ik, ib, ia: (ib, ik)),
+        out_shape=jax.ShapeDtypeStruct((b, k), jnp.float32),
         interpret=interpret,
     )(x, f1, f2, f3)
-    return out[:, 0]

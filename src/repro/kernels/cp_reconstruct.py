@@ -1,0 +1,72 @@
+"""Pallas TPU kernel: batched CP adjoint reconstruction (order 3).
+
+x_hat[n,a,b,c] = scale * sum_{i,r} y[n,i] f1[i,a,r] f2[i,b,r] f3[i,c,r]
+
+Same grid/accumulation skeleton as tt_reconstruct.py: k-tile innermost so
+per-k-tile partials accumulate in the revisited (TB, BA, d2, d3) output
+block; the rank-r outer products of the two trailing factors are fused once
+per instance into m[i,r,b,c] = f2[i,b,r] f3[i,c,r] and the rest is one large
+(TB*BA, TK*R) x (TK*R, d2*d3) MXU contraction.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cp_reconstruct3_kernel(y_ref, f1_ref, f2_ref, f3_ref, o_ref, *, scale):
+    ik = pl.program_id(2)
+    f2 = f2_ref[...]                                  # (TK, d2, R)
+    f3 = f3_ref[...]                                  # (TK, d3, R)
+    # rank-wise outer product of the trailing factors: (TK, R, d2, d3)
+    m = jnp.einsum("kbr,kcr->krbc", f2, f3, preferred_element_type=jnp.float32)
+    y = y_ref[...]                                    # (TB, TK)
+    f1 = f1_ref[...]                                  # (TK, BA, R)
+    h = jnp.einsum("nk,kar->nakr", y, f1, preferred_element_type=jnp.float32)
+    out = jnp.einsum("nakr,krbc->nabc", h, m,
+                     preferred_element_type=jnp.float32) * scale
+
+    @pl.when(ik == 0)
+    def _init():
+        o_ref[...] = out
+
+    @pl.when(ik != 0)
+    def _acc():
+        o_ref[...] += out
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tk", "tb", "ba", "scale", "interpret"))
+def cp_reconstruct3(y: jnp.ndarray, f1: jnp.ndarray, f2: jnp.ndarray,
+                    f3: jnp.ndarray, *, tk: int = 32, tb: int = 4, ba: int = 8,
+                    scale: float = 1.0,
+                    interpret: bool = True) -> jnp.ndarray:
+    """Batched adjoint; y (B,k); f_n (k,d_n,R). k%tk==0, B%tb==0, d1%ba==0.
+
+    `scale` is fused — pass 1/sqrt(k_logical). Returns (B, d1, d2, d3) f32.
+    """
+    b, k = y.shape
+    _, d1, r = f1.shape
+    d2 = f2.shape[1]
+    d3 = f3.shape[1]
+    assert f1.shape == (k, d1, r) and f2.shape == (k, d2, r)
+    assert f3.shape == (k, d3, r)
+    assert k % tk == 0 and b % tb == 0 and d1 % ba == 0, (k, tk, b, tb, d1, ba)
+    grid = (b // tb, d1 // ba, k // tk)
+    return pl.pallas_call(
+        functools.partial(_cp_reconstruct3_kernel, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, tk), lambda ib, ia, ik: (ib, ik)),
+            pl.BlockSpec((tk, ba, r), lambda ib, ia, ik: (ik, ia, 0)),
+            pl.BlockSpec((tk, d2, r), lambda ib, ia, ik: (ik, 0, 0)),
+            pl.BlockSpec((tk, d3, r), lambda ib, ia, ik: (ik, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, ba, d2, d3),
+                               lambda ib, ia, ik: (ib, ia, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, d1, d2, d3), jnp.float32),
+        interpret=interpret,
+    )(y, f1, f2, f3)

@@ -1,14 +1,25 @@
 """Jit'd public wrappers around the Pallas kernels.
 
-Handle padding (k to the lane tile, d1 to the stream block), the JLT
-1/sqrt(k) scaling, layout conversion from the repro.core operator containers,
-and graceful fallback to the jnp reference path for orders != 3.
+Handle batch/mode/k padding, layout conversion from the repro.core operator
+containers, VMEM-budgeted tile selection, and graceful fallback to the jnp
+reference path for orders != 3. The JLT 1/sqrt(k) scaling is FUSED into the
+kernel epilogues (`scale=`), so no separate scaling pass runs over the output.
+
+All four dense-path wrappers (`tt_project` / `cp_project` and the adjoints
+`tt_reconstruct` / `cp_reconstruct`) accept either a single input
+(`(d1,d2,d3)` tensor / `(k,)` sketch) or a batch (`(B,d1,d2,d3)` / `(B,k)`);
+the batch runs in ONE kernel launch with a native batch grid axis — this is
+how `PytreeSketcher` sketches all buckets of a leaf per launch.
 
 `interpret` defaults to True because this container is CPU-only; on real TPU
 hardware pass interpret=False (the BlockSpecs are written for TPU VMEM).
 """
 from __future__ import annotations
 
+import math
+import warnings
+
+import jax
 import jax.numpy as jnp
 
 from repro.core.cp_rp import CPRP
@@ -17,8 +28,14 @@ from repro.core.tt_rp import TTRP
 
 from . import ref
 from .cp_project import cp_project3
+from .cp_reconstruct import cp_reconstruct3
 from .tt_dot import tt_dot3
 from .tt_project import tt_project3
+from .tt_reconstruct import tt_reconstruct3
+
+# Per-kernel-instance VMEM budget. Real TPU cores have ~16 MiB; half of it
+# leaves headroom for Pallas' double-buffered pipeline copies.
+VMEM_BUDGET_BYTES = 8 * 1024 * 1024
 
 
 def _pad_axis(a: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
@@ -31,45 +48,197 @@ def _pad_axis(a: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
     return jnp.pad(a, widths)
 
 
-def _pick_tiles(k: int, d1: int) -> tuple[int, int]:
-    tk = 128 if k >= 128 else max(8, 1 << (k - 1).bit_length())
-    ba = 8 if d1 % 8 == 0 or d1 >= 8 else d1
-    return tk, ba
+def _lane_tile(k: int) -> int:
+    return 128 if k >= 128 else max(8, 1 << (k - 1).bit_length())
 
+
+def _pow2_at_most(n: int, cap: int) -> int:
+    return min(cap, 1 << max(0, (n - 1).bit_length()))
+
+
+def pick_tiles(k: int, b: int, dims: tuple[int, ...], rank: int, *,
+               kind: str = "project", family: str = "tt",
+               budget: int = VMEM_BUDGET_BYTES) -> tuple[int, int, int]:
+    """VMEM-budgeted (tk, tb, ba) for the batched order-3 kernels.
+
+    Accounts for every per-instance buffer — streamed input/output blocks,
+    per-k-tile cores (`family='tt'` transfer cores are R x R on the middle
+    mode, `'cp'` factors are rank vectors), and the kernel-internal einsum
+    intermediates — and shrinks tiles until the footprint fits `budget`:
+
+    * kind='project': the z intermediate (TK*TB*BA*d2*R floats) dominates and
+      scales with both TK and TB; the batch tile is shrunk first (TK=128 keeps
+      k on the lane axis, which matters more than batch amortization).
+    * kind='reconstruct': the fused transfer-core intermediate m
+      (TK*R*d2*d3 floats) dominates and is batch-independent, so TK is shrunk
+      first and the batch tile survives (it is what fills the MXU).
+    """
+    d1, d2, d3 = dims
+    r = max(1, int(rank))
+    tk = _lane_tile(k)
+    tb = _pow2_at_most(max(1, b), 8)
+    ba = 8 if d1 % 8 == 0 or d1 >= 8 else d1
+    if family == "tt":     # (tk,ba,r) + (tk,r,d2,r) + (tk,r,d3)
+        core_elems = ba * r + r * d2 * r + r * d3
+    else:                  # cp: (tk,ba,r) + (tk,d2,r) + (tk,d3,r)
+        core_elems = ba * r + d2 * r + d3 * r
+
+    def project_bytes(tk: int, tb: int) -> int:
+        x_blk = tb * ba * d2 * d3
+        z = tk * tb * ba * d2 * r
+        v = tk * tb * ba * r
+        return 4 * (x_blk + z + v + tk * core_elems + tb * tk)
+
+    def reconstruct_bytes(tk: int, tb: int) -> int:
+        m = tk * r * d2 * d3
+        h = tb * ba * tk * r
+        out_blk = tb * ba * d2 * d3
+        return 4 * (m + h + tk * core_elems + out_blk + tb * tk)
+
+    if kind == "project":
+        footprint, first, second = project_bytes, "tb", "tk"
+    elif kind == "reconstruct":
+        footprint, first, second = reconstruct_bytes, "tk", "tb"
+    else:
+        raise ValueError(f"unknown kind {kind!r}")
+    for axis in (first, second):
+        while footprint(tk, tb) > budget:
+            if axis == "tb" and tb > 1:
+                tb //= 2
+            elif axis == "tk" and tk > 8:
+                tk //= 2
+            else:
+                break
+    if footprint(tk, tb) > budget:
+        # tb/tk are at their floors and the untiled d2/d3 modes alone exceed
+        # the budget — compiles in interpret mode, but on real TPU hardware
+        # expect a VMEM allocation failure; surface the cause here, next to
+        # the dims that chose it, rather than deep in the Mosaic compiler.
+        warnings.warn(
+            f"pick_tiles(kind={kind!r}): dims={tuple(dims)}, rank={r} need "
+            f"{footprint(tk, tb)} bytes of VMEM at the smallest tiling "
+            f"(tk={tk}, tb={tb}, ba={ba}) > budget {budget}; the kernel may "
+            "not fit on real TPU hardware — use smaller trailing modes",
+            RuntimeWarning, stacklevel=2)
+    return tk, tb, ba
+
+
+def _as_batch(x: jnp.ndarray, ndim: int) -> tuple[jnp.ndarray, bool]:
+    """Add a singleton batch axis when `x` is a single input of rank `ndim`."""
+    if x.ndim == ndim:
+        return x[None], False
+    assert x.ndim == ndim + 1, (x.shape, ndim)
+    return x, True
+
+
+# ---------------------------------------------------------------------------
+# projections
+# ---------------------------------------------------------------------------
 
 def tt_project(op: TTRP, x: jnp.ndarray, *, interpret: bool = True,
                use_kernel: bool = True) -> jnp.ndarray:
-    """f_TT(R)(x) for a dense order-3 input via the Pallas kernel."""
+    """f_TT(R)(x) for dense order-3 input(s) via the batched Pallas kernel.
+
+    x: (d1,d2,d3) -> (k,)  or  (B,d1,d2,d3) -> (B,k), one launch either way.
+    """
     if op.order != 3 or not use_kernel:
         return op.project(x)
     k = op.k
     g1 = op.cores[0][:, 0, :, :]          # (k, d1, R)
     g2 = op.cores[1]                      # (k, R, d2, R)
     g3 = op.cores[2][:, :, :, 0]          # (k, R, d3)
-    tk, ba = _pick_tiles(k, x.shape[0])
-    xk = _pad_axis(x, 0, ba)
+    xb, batched = _as_batch(x, 3)
+    tk, tb, ba = pick_tiles(k, xb.shape[0], op.in_dims, op.rank,
+                            kind="project")
+    xk = _pad_axis(_pad_axis(xb, 0, tb), 1, ba)
     g1k = _pad_axis(_pad_axis(g1, 0, tk), 1, ba)
     g2k = _pad_axis(g2, 0, tk)
     g3k = _pad_axis(g3, 0, tk)
-    y = tt_project3(xk, g1k, g2k, g3k, tk=tk, ba=ba, interpret=interpret)
-    return y[:k] / jnp.sqrt(jnp.asarray(k, y.dtype))
+    y = tt_project3(xk, g1k, g2k, g3k, tk=tk, tb=tb, ba=ba,
+                    scale=1.0 / math.sqrt(k), interpret=interpret)
+    y = y[:xb.shape[0], :k]
+    return y if batched else y[0]
 
 
 def cp_project(op: CPRP, x: jnp.ndarray, *, interpret: bool = True,
                use_kernel: bool = True) -> jnp.ndarray:
-    """f_CP(R)(x) for a dense order-3 input via the Pallas kernel."""
+    """f_CP(R)(x) for dense order-3 input(s) via the batched Pallas kernel."""
     if op.order != 3 or not use_kernel:
         return op.project(x)
     k = op.k
     f1, f2, f3 = op.factors
-    tk, ba = _pick_tiles(k, x.shape[0])
-    xk = _pad_axis(x, 0, ba)
+    xb, batched = _as_batch(x, 3)
+    tk, tb, ba = pick_tiles(k, xb.shape[0], op.in_dims, op.rank,
+                            kind="project", family="cp")
+    xk = _pad_axis(_pad_axis(xb, 0, tb), 1, ba)
     f1k = _pad_axis(_pad_axis(f1, 0, tk), 1, ba)
     f2k = _pad_axis(f2, 0, tk)
     f3k = _pad_axis(f3, 0, tk)
-    y = cp_project3(xk, f1k, f2k, f3k, tk=tk, ba=ba, interpret=interpret)
-    return y[:k] / jnp.sqrt(jnp.asarray(k, y.dtype))
+    y = cp_project3(xk, f1k, f2k, f3k, tk=tk, tb=tb, ba=ba,
+                    scale=1.0 / math.sqrt(k), interpret=interpret)
+    y = y[:xb.shape[0], :k]
+    return y if batched else y[0]
 
+
+# ---------------------------------------------------------------------------
+# adjoints
+# ---------------------------------------------------------------------------
+
+def tt_reconstruct(op: TTRP, y: jnp.ndarray, *, interpret: bool = True,
+                   use_kernel: bool = True) -> jnp.ndarray:
+    """Unbiased adjoint for sketch(es): (k,) -> dims or (B,k) -> (B,*dims).
+
+    Batched sketches reconstruct in ONE launch; padding k with zero sketch
+    entries keeps padded core rows inert (y multiplies every term).
+    """
+    if op.order != 3 or not use_kernel:
+        if y.ndim == 2:
+            return jax.vmap(op.reconstruct)(y)
+        return op.reconstruct(y)
+    k = op.k
+    g1 = op.cores[0][:, 0, :, :]
+    g2 = op.cores[1]
+    g3 = op.cores[2][:, :, :, 0]
+    yb, batched = _as_batch(y, 1)
+    tk, tb, ba = pick_tiles(k, yb.shape[0], op.in_dims, op.rank,
+                            kind="reconstruct")
+    yk = _pad_axis(_pad_axis(yb, 0, tb), 1, tk)
+    g1k = _pad_axis(_pad_axis(g1, 0, tk), 1, ba)
+    g2k = _pad_axis(g2, 0, tk)
+    g3k = _pad_axis(g3, 0, tk)
+    out = tt_reconstruct3(yk, g1k, g2k, g3k, tk=tk, tb=tb, ba=ba,
+                          scale=1.0 / math.sqrt(k), interpret=interpret)
+    d1 = op.in_dims[0]
+    out = out[:yb.shape[0], :d1]
+    return out if batched else out[0]
+
+
+def cp_reconstruct(op: CPRP, y: jnp.ndarray, *, interpret: bool = True,
+                   use_kernel: bool = True) -> jnp.ndarray:
+    """Unbiased adjoint for sketch(es) of a CP operator; see tt_reconstruct."""
+    if op.order != 3 or not use_kernel:
+        if y.ndim == 2:
+            return jax.vmap(op.reconstruct)(y)
+        return op.reconstruct(y)
+    k = op.k
+    f1, f2, f3 = op.factors
+    yb, batched = _as_batch(y, 1)
+    tk, tb, ba = pick_tiles(k, yb.shape[0], op.in_dims, op.rank,
+                            kind="reconstruct", family="cp")
+    yk = _pad_axis(_pad_axis(yb, 0, tb), 1, tk)
+    f1k = _pad_axis(_pad_axis(f1, 0, tk), 1, ba)
+    f2k = _pad_axis(f2, 0, tk)
+    f3k = _pad_axis(f3, 0, tk)
+    out = cp_reconstruct3(yk, f1k, f2k, f3k, tk=tk, tb=tb, ba=ba,
+                          scale=1.0 / math.sqrt(k), interpret=interpret)
+    d1 = op.in_dims[0]
+    out = out[:yb.shape[0], :d1]
+    return out if batched else out[0]
+
+
+# ---------------------------------------------------------------------------
+# structured input
+# ---------------------------------------------------------------------------
 
 def tt_dot(op: TTRP, x: TTTensor, *, interpret: bool = True,
            use_kernel: bool = True) -> jnp.ndarray:
@@ -80,7 +249,7 @@ def tt_dot(op: TTRP, x: TTTensor, *, interpret: bool = True,
     g1 = op.cores[0][:, 0, :, :]
     g2 = op.cores[1]
     g3 = op.cores[2][:, :, :, 0]
-    tk, _ = _pick_tiles(k, 8)
+    tk = _lane_tile(k)
     g1k = _pad_axis(g1, 0, tk)
     g2k = _pad_axis(g2, 0, tk)
     g3k = _pad_axis(g3, 0, tk)
@@ -89,4 +258,5 @@ def tt_dot(op: TTRP, x: TTTensor, *, interpret: bool = True,
     return y[:k] / jnp.sqrt(jnp.asarray(k, y.dtype))
 
 
-__all__ = ["tt_project", "cp_project", "tt_dot", "ref"]
+__all__ = ["tt_project", "cp_project", "tt_reconstruct", "cp_reconstruct",
+           "tt_dot", "pick_tiles", "ref", "VMEM_BUDGET_BYTES"]

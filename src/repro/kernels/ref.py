@@ -29,6 +29,22 @@ def cp_project3_ref(x: jnp.ndarray, f1: jnp.ndarray, f2: jnp.ndarray,
     return jnp.einsum("kar,kar->k", v, f1)
 
 
+def tt_reconstruct3_ref(y: jnp.ndarray, g1: jnp.ndarray, g2: jnp.ndarray,
+                        g3: jnp.ndarray) -> jnp.ndarray:
+    """x_hat[n,a,b,c] = sum_{k,r,s} y[n,k] g1[k,a,r] g2[k,r,b,s] g3[k,s,c]."""
+    w = jnp.einsum("nk,kar->nkar", y, g1)
+    w = jnp.einsum("nkar,krbs->nkabs", w, g2)
+    return jnp.einsum("nkabs,ksc->nabc", w, g3)
+
+
+def cp_reconstruct3_ref(y: jnp.ndarray, f1: jnp.ndarray, f2: jnp.ndarray,
+                        f3: jnp.ndarray) -> jnp.ndarray:
+    """x_hat[n,a,b,c] = sum_{k,r} y[n,k] f1[k,a,r] f2[k,b,r] f3[k,c,r]."""
+    w = jnp.einsum("nk,kar->nkar", y, f1)
+    w = jnp.einsum("nkar,kbr->nkabr", w, f2)
+    return jnp.einsum("nkabr,kcr->nabc", w, f3)
+
+
 def tt_dot3_ref(x1: jnp.ndarray, x2: jnp.ndarray, x3: jnp.ndarray,
                 g1: jnp.ndarray, g2: jnp.ndarray, g3: jnp.ndarray) -> jnp.ndarray:
     """Batched <TT_i, X_tt> via transfer matrices, order 3.

@@ -1,24 +1,27 @@
-"""Pallas TPU kernel: dense-input TT random projection (order 3).
+"""Pallas TPU kernel: batched dense-input TT random projection (order 3).
 
-Computes y[i] = sum_{a,b,c,r,s} g1[i,a,r] g2[i,r,b,s] g3[i,s,c] x[a,b,c]
-for i in [k] — the hot loop of f_TT(R) applied to a flat (tensorized) vector
-such as a gradient bucket.
+Computes y[n,i] = scale * sum_{a,b,c,r,s} g1[i,a,r] g2[i,r,b,s] g3[i,s,c]
+x[n,a,b,c] for i in [k], n in [B] — the hot loop of f_TT(R) applied to a whole
+*batch* of flat (tensorized) vectors, e.g. every gradient bucket of a pytree
+leaf in one launch. `scale` fuses the JLT 1/sqrt(k) into the kernel epilogue
+(each k-tile partial sum is scaled, so the accumulated total carries it too).
 
 TPU mapping
 -----------
-* grid = (k/TK, d1/BA): k tiled by TK=128 (lane width — every per-k einsum
-  becomes an MXU/VPU op with k on the minor axis), the leading input mode
-  tiled by BA so the streamed x block (BA, d2, d3) plus the per-tile cores and
-  the (TK, BA, d2, R) intermediate stay inside VMEM.
-* The output block index depends only on the k-tile, so partial sums over the
-  d1 grid axis accumulate in-place (revisited output block) — the canonical
-  Pallas matmul accumulation pattern.
-* VMEM budget at defaults (TK=128, BA=8, d2=128, d3=64, R=2), f32:
-    x block      8*128*64*4      = 256 KiB
-    z intermed.  128*8*128*2*4   = 1   MiB
-    cores        ~0.3 MiB        -> << 16 MiB VMEM.
-* All contraction shapes are multiples of (8,128) when dims are MXU-aligned
-  (the compressor picks (128,128,64) buckets for exactly this reason).
+* grid = (k/TK, B/TB, d1/BA): the k-tile index is OUTERMOST so the per-tile
+  cores — whose block index depends only on ik — stay resident in VMEM while
+  the whole batch streams through; with the old per-bucket vmap the cores
+  were re-fetched from HBM once per bucket. TK=128 puts k on the lane axis so
+  every per-k einsum is an MXU/VPU op; the batch tile TB enlarges each
+  contraction (B*BA rows instead of BA) toward the 128x128 systolic shape.
+* The output block index (ib, ik) is independent of the d1 grid axis (ia,
+  innermost), so partial sums over d1 accumulate in-place in the revisited
+  output block — the canonical Pallas matmul accumulation pattern.
+* VMEM per instance at defaults (TK=128, TB=4, BA=8, d2=128, d3=64, R=2), f32:
+    x block      4*8*128*64*4        = 1   MiB
+    z intermed.  128*4*8*128*2*4     = 4   MiB
+    cores        ~0.3 MiB, out 128*4*4 -> well under the 16 MiB/core VMEM;
+  ops.pick_tiles shrinks TB (then TK) when B/d2/R would blow the budget.
 """
 from __future__ import annotations
 
@@ -29,52 +32,57 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _tt_project3_kernel(x_ref, g1_ref, g2_ref, g3_ref, o_ref):
-    ia = pl.program_id(1)
-    x = x_ref[...]                                    # (BA, d2, d3)
+def _tt_project3_kernel(x_ref, g1_ref, g2_ref, g3_ref, o_ref, *, scale):
+    ia = pl.program_id(2)
+    x = x_ref[...]                                    # (TB, BA, d2, d3)
     g3 = g3_ref[...]                                  # (TK, R, d3)
-    # contract c: (TK, BA, d2, R)
-    z = jnp.einsum("abc,ksc->kabs", x, g3, preferred_element_type=jnp.float32)
+    # contract c: (TK, TB, BA, d2, R)
+    z = jnp.einsum("nabc,ksc->knabs", x, g3, preferred_element_type=jnp.float32)
     g2 = g2_ref[...]                                  # (TK, R, d2, R)
-    # contract (b, s): (TK, BA, R)
-    v = jnp.einsum("kabs,krbs->kar", z, g2, preferred_element_type=jnp.float32)
+    # contract (b, s): (TK, TB, BA, R)
+    v = jnp.einsum("knabs,krbs->knar", z, g2, preferred_element_type=jnp.float32)
     g1 = g1_ref[...]                                  # (TK, BA, R)
-    y = jnp.einsum("kar,kar->k", v, g1, preferred_element_type=jnp.float32)
+    y = jnp.einsum("knar,kar->nk", v, g1,
+                   preferred_element_type=jnp.float32) * scale
 
     @pl.when(ia == 0)
     def _init():
-        o_ref[...] = y[:, None]
+        o_ref[...] = y
 
     @pl.when(ia != 0)
     def _acc():
-        o_ref[...] += y[:, None]
+        o_ref[...] += y
 
 
-@functools.partial(jax.jit, static_argnames=("tk", "ba", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("tk", "tb", "ba", "scale", "interpret"))
 def tt_project3(x: jnp.ndarray, g1: jnp.ndarray, g2: jnp.ndarray,
-                g3: jnp.ndarray, *, tk: int = 128, ba: int = 8,
-                interpret: bool = True) -> jnp.ndarray:
-    """Raw contraction (no 1/sqrt(k)); ops.py applies scaling/padding.
+                g3: jnp.ndarray, *, tk: int = 128, tb: int = 4, ba: int = 8,
+                scale: float = 1.0, interpret: bool = True) -> jnp.ndarray:
+    """Batched contraction; ops.py handles padding and layout.
 
-    x (d1,d2,d3); g1 (k,d1,R); g2 (k,R,d2,R); g3 (k,R,d3). k%tk==0, d1%ba==0.
+    x (B,d1,d2,d3); g1 (k,d1,R); g2 (k,R,d2,R); g3 (k,R,d3). Requires
+    k%tk==0, B%tb==0, d1%ba==0. `scale` (static) is fused into the epilogue —
+    pass 1/sqrt(k_logical) for the JLT scaling, 1.0 for the raw contraction.
+    Returns (B, k) float32.
     """
-    d1, d2, d3 = x.shape
+    b, d1, d2, d3 = x.shape
     k, _, r = g1.shape
     assert g2.shape == (k, r, d2, r) and g3.shape == (k, r, d3)
     assert k % tk == 0, (k, tk)
+    assert b % tb == 0, (b, tb)
     assert d1 % ba == 0, (d1, ba)
-    grid = (k // tk, d1 // ba)
-    out = pl.pallas_call(
-        _tt_project3_kernel,
+    grid = (k // tk, b // tb, d1 // ba)
+    return pl.pallas_call(
+        functools.partial(_tt_project3_kernel, scale=scale),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((ba, d2, d3), lambda ik, ia: (ia, 0, 0)),
-            pl.BlockSpec((tk, ba, r), lambda ik, ia: (ik, ia, 0)),
-            pl.BlockSpec((tk, r, d2, r), lambda ik, ia: (ik, 0, 0, 0)),
-            pl.BlockSpec((tk, r, d3), lambda ik, ia: (ik, 0, 0)),
+            pl.BlockSpec((tb, ba, d2, d3), lambda ik, ib, ia: (ib, ia, 0, 0)),
+            pl.BlockSpec((tk, ba, r), lambda ik, ib, ia: (ik, ia, 0)),
+            pl.BlockSpec((tk, r, d2, r), lambda ik, ib, ia: (ik, 0, 0, 0)),
+            pl.BlockSpec((tk, r, d3), lambda ik, ib, ia: (ik, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((tk, 1), lambda ik, ia: (ik, 0)),
-        out_shape=jax.ShapeDtypeStruct((k, 1), jnp.float32),
+        out_specs=pl.BlockSpec((tb, tk), lambda ik, ib, ia: (ib, ik)),
+        out_shape=jax.ShapeDtypeStruct((b, k), jnp.float32),
         interpret=interpret,
     )(x, g1, g2, g3)
-    return out[:, 0]

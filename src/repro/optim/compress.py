@@ -4,15 +4,23 @@ The paper's map f_TT(R) / f_CP(R) gives an oblivious linear sketch whose
 adjoint is an unbiased reconstruction (E[vec(S_i)vec(S_i)^T] = I). That makes
 it a drop-in gradient compressor for the SLOW cross-pod axis:
 
-  worker w:  p_w = g_w + e_w                 (error feedback)
-             y_w = Sketch_t(p_w)             (k floats per 1M-float bucket)
-  network:   y   = mean_w y_w                (all-reduce of sketches ONLY)
-  worker w:  g_hat  = Unsketch_t(y)          (shared PRNG -> same operator)
-             e_w'   = p_w - Unsketch_t(y_w)  (local residual)
+  worker w:  p_w = g_w + e_w                   (error feedback)
+             y_w = Sketch_t(p_w)               (k floats per 1M-float bucket)
+             h_w = Unsketch_t(y_w)             (ONE adjoint pass per worker)
+  network:   g_hat = mean_w h_w                (== Unsketch_t(mean_w y_w) by
+                                                linearity of the adjoint)
+  worker w:  e_w'  = p_w - h_w                 (local residual)
 
 All workers regenerate the operator from fold_in(key, step) — the operator
 itself (O(kNdR^2) floats) never crosses the network; the paper's memory bound
-is exactly why the whole operator fits in VMEM/cache. Topology: params are
+is exactly why the whole operator fits in VMEM/cache. NOTE the tradeoff in
+the default mean_w h_w formulation (SketchCompressor(sync='local-mean')): it
+halves per-worker adjoint compute (one unsketch instead of two), but the
+sync point is a mean of DENSE reconstructions rather than of (buckets, k)
+sketches. On a bandwidth-bound cross-pod link prefer sync='sketch-mean',
+which restores the formulation that syncs y = mean_w y_w (~D/k times fewer
+wire bytes) at the cost of every worker redundantly computing Unsketch_t(y);
+`_metrics` reports `sketch_bytes` for THAT formulation's wire cost. Topology: params are
 FSDP-sharded *within* a pod and replicated *across* pods (DiLoCo-style
 DDP-of-FSDP), so the pod axis syncs via this compressed all-reduce.
 
@@ -58,9 +66,35 @@ class SketchCompressor:
     cfg: SketchConfig
     pod_axis: str | None = None     # lax axis name inside shard_map
     base_key: int = 0x5EED
+    # Cross-pod sync formulation for compress_per_pod (equal by linearity):
+    #   'local-mean'  — ONE adjoint pass per pod; the sync point is the
+    #                   pod-mean of the dense local reconstructions (cheapest
+    #                   compute, dense bytes on the pod axis);
+    #   'sketch-mean' — sync the (buckets, k) sketch-mean (k-sized bytes on
+    #                   the wire), then every pod redundantly unsketches it
+    #                   (second adjoint pass). Prefer when the pod link is
+    #                   bandwidth-bound.
+    sync: str = "local-mean"
+
+    def __post_init__(self):
+        if self.sync not in ("local-mean", "sketch-mean"):
+            raise ValueError(f"unknown sync mode {self.sync!r}; expected "
+                             "'local-mean' or 'sketch-mean'")
+    # (structure-key, sketcher) memo — the tree structure is fixed across
+    # steps, so the flatten + family/registry validation in PytreeSketcher
+    # runs once instead of on every compress/compress_per_pod trace.
+    _sk_cache: tuple | None = dataclasses.field(
+        default=None, init=False, repr=False, compare=False)
 
     def _sketcher(self, tree) -> PytreeSketcher:
-        return PytreeSketcher(self.cfg, tree)
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        key = (treedef, tuple(tuple(l.shape) for l in leaves),
+               tuple(jnp.dtype(l.dtype).name for l in leaves))
+        if self._sk_cache is not None and self._sk_cache[0] == key:
+            return self._sk_cache[1]
+        sk = PytreeSketcher(self.cfg, tree)
+        self._sk_cache = (key, sk)
+        return sk
 
     def init_state(self, params) -> dict:
         return {"residual": jax.tree.map(
@@ -92,8 +126,15 @@ class SketchCompressor:
 
         grads_pp / state['residual']: every leaf has a leading npod dim
         (produced by jax.vmap(..., spmd_axis_name='pod') so the dim is
-        sharded over the pod mesh axis). The ONLY cross-pod communication is
-        the mean over that dim of the (buckets, k) sketches.
+        sharded over the pod mesh axis). Each pod runs ONE adjoint pass (its
+        local unsketch, needed for the error-feedback residual anyway); by
+        linearity of the adjoint, unsketch(mean_w y_w) == mean_w
+        unsketch(y_w), so with the default sync='local-mean' the synced
+        estimate is the pod-mean of the local reconstructions and the
+        redundant second reconstruction of the old unsketch(y_mean)
+        formulation is gone; sync='sketch-mean' keeps that formulation for
+        bandwidth-bound pod links (see the `sync` field / module docstring
+        for the compute-vs-bandwidth tradeoff).
         Returns (synced grads WITHOUT pod dim, new_state, metrics).
         """
         example = jax.tree.map(lambda g: jax.ShapeDtypeStruct(g.shape[1:],
@@ -105,17 +146,29 @@ class SketchCompressor:
                          grads_pp, state["residual"])
         alpha = self.cfg.shrinkage()
         y_pp = jax.vmap(lambda t: sk.sketch(t, key))(p)   # (npod, buckets, k)
-        y_mean = jnp.mean(y_pp, axis=0)                   # <- the all-reduce
-        g_hat = jax.tree.map(lambda x: alpha * x,
-                             sk.unsketch(y_mean, key))    # synced estimate
         g_hat_local = jax.tree.map(
             lambda x: alpha * x,
             jax.vmap(lambda yy: sk.unsketch(yy, key))(y_pp))
+        if self.sync == "local-mean":
+            # == alpha * unsketch(mean(y_pp, 0)) by linearity, WITHOUT a
+            # second adjoint pass; syncs dense bytes over the pod axis.
+            g_hat = jax.tree.map(lambda gh: jnp.mean(gh, axis=0), g_hat_local)
+        else:  # 'sketch-mean' (sync validated in __post_init__)
+            y_mean = jnp.mean(y_pp, axis=0)       # k-sized wire bytes
+            g_hat = jax.tree.map(lambda x: alpha * x,
+                                 sk.unsketch(y_mean, key))
         new_residual = jax.tree.map(lambda pp, gh: pp - gh.astype(jnp.float32),
                                     p, g_hat_local)
         g_out = jax.tree.map(lambda gh, g: gh.astype(g.dtype),
                              g_hat, example)
-        return g_out, {"residual": new_residual}, self._metrics(sk, new_residual)
+        metrics = self._metrics(sk, new_residual)
+        # actual per-step cross-pod wire bytes of the ACTIVE sync mode —
+        # sketch_bytes/dense_bytes alone describe the sketch-mean
+        # formulation and would misreport 'local-mean' comm on dashboards.
+        metrics["wire_bytes"] = jnp.asarray(
+            sk.sketch_bytes() if self.sync == "sketch-mean"
+            else sk.dense_bytes(), jnp.float32)
+        return g_out, {"residual": new_residual}, metrics
 
     def _metrics(self, sk: PytreeSketcher, residual) -> dict:
         return {

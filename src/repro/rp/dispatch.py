@@ -8,9 +8,11 @@ typed `FormatMismatchError` on incompatible shapes.
 
 Backend policy (`backend='auto' | 'pallas' | 'xla'`)
 ---------------------------------------------------
-Dense-input order-3 projections of the TT/CP families have Pallas TPU
-kernels (`repro.kernels.tt_project` / `cp_project`); structured TT input has
-`tt_dot`. Routing:
+Dense-input order-3 projections of the TT/CP families have batched Pallas
+TPU kernels (`repro.kernels.tt_project` / `cp_project` — `(*batch, *dims)`
+inputs run in ONE launch with a native batch grid axis, never vmap); the
+adjoints route the same way through `tt_reconstruct` / `cp_reconstruct` for
+`(*batch, k)` sketches; structured TT input has `tt_dot`. Routing:
 
 * 'xla'    — always the einsum path.
 * 'pallas' — always the kernel (the kernels' own wrappers fall back to
@@ -139,14 +141,17 @@ def _check_struct_dims(op: RPOperator, x) -> None:
 def _project_dense(op: RPOperator, x: jnp.ndarray, backend: str) -> jnp.ndarray:
     xt = _coerce_dense(op, x)
     is_tn = isinstance(op, (TTRP, CPRP))
-    supported = (is_tn and op.order == 3 and xt.ndim == 3)
+    supported = (is_tn and op.order == 3 and xt.ndim >= 3)
     if _use_kernel(backend, supported=supported, aligned=_mxu_aligned(op)):
         from repro.kernels import ops as kops  # local: avoids import cycle
         _count_kernel()
         interpret = not _on_tpu()
-        if isinstance(op, TTRP):
-            return kops.tt_project(op, xt, interpret=interpret)
-        return kops.cp_project(op, xt, interpret=interpret)
+        kern = kops.tt_project if isinstance(op, TTRP) else kops.cp_project
+        if xt.ndim <= 4:  # single input or 1-D batch: native batch axis
+            return kern(op, xt, interpret=interpret)
+        batch = xt.shape[:-3]
+        flat = xt.reshape((-1,) + xt.shape[-3:])
+        return kern(op, flat, interpret=interpret).reshape(batch + (op.k,))
     return op.project(xt)
 
 
@@ -187,14 +192,37 @@ def project(op: RPOperator, x, *, backend: str = "auto") -> jnp.ndarray:
     return _project_dense(op, x, backend)
 
 
-def reconstruct(op: RPOperator, y: jnp.ndarray, *,
-                chunk: int | None = None) -> jnp.ndarray:
-    """Unbiased adjoint reconstruction `x_hat` with shape `op.in_dims`.
+def reconstruct(op: RPOperator, y: jnp.ndarray, *, chunk: int | None = None,
+                backend: str = "auto") -> jnp.ndarray:
+    """Unbiased adjoint reconstruction, `(*batch, k) -> (*batch, *in_dims)`.
 
-    `chunk` bounds the k-sized intermediate for the tensorized families.
+    A `(k,)` sketch returns an `in_dims`-shaped estimate (the original
+    contract); batched sketches route to the batched Pallas adjoint kernels
+    (`tt_reconstruct3` / `cp_reconstruct3`) under the same backend policy as
+    `project` — ONE launch for the whole batch, no vmap — and otherwise fall
+    back to a vmap of the operator's einsum adjoint. `chunk` bounds the
+    k-sized intermediate on the einsum path (kernels tile k instead).
     """
     y = jnp.asarray(y)
-    if y.shape != (op.k,):
+    if y.ndim < 1 or y.shape[-1] != op.k:
         raise FormatMismatchError(
-            f"sketch shape {tuple(y.shape)} != (k,) = ({op.k},)")
-    return op.reconstruct(y, chunk=chunk)
+            f"sketch shape {tuple(y.shape)} does not end in k = {op.k}")
+    is_tn = isinstance(op, (TTRP, CPRP))
+    supported = is_tn and op.order == 3
+    if _use_kernel(backend, supported=supported, aligned=_mxu_aligned(op)):
+        from repro.kernels import ops as kops  # local: avoids import cycle
+        _count_kernel()
+        interpret = not _on_tpu()
+        kern = (kops.tt_reconstruct if isinstance(op, TTRP)
+                else kops.cp_reconstruct)
+        if y.ndim <= 2:
+            return kern(op, y, interpret=interpret)
+        batch = y.shape[:-1]
+        out = kern(op, y.reshape(-1, op.k), interpret=interpret)
+        return out.reshape(batch + tuple(op.in_dims))
+    if y.ndim == 1:
+        return op.reconstruct(y, chunk=chunk)
+    batch = y.shape[:-1]
+    out = jax.vmap(lambda yy: op.reconstruct(yy, chunk=chunk))(
+        y.reshape(-1, op.k))
+    return out.reshape(batch + tuple(op.in_dims))

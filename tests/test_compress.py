@@ -71,6 +71,28 @@ def test_ef_transmits_full_signal_over_time():
     assert rel < 0.35, rel
 
 
+def test_per_pod_sync_modes_agree():
+    """'local-mean' (one adjoint pass) == 'sketch-mean' (sketch-sized comm)
+    by linearity of the adjoint; both yield identical synced grads/residuals."""
+    npod = 3
+    g = {"w": jax.random.normal(jax.random.PRNGKey(2), (npod, 500)),
+         "b": jax.random.normal(jax.random.PRNGKey(3), (npod, 33))}
+    outs = {}
+    for sync in ("local-mean", "sketch-mean"):
+        comp = SketchCompressor(CFG, sync=sync)
+        state = comp.init_state(jax.tree.map(lambda x: x[0], g))
+        state = {"residual": jax.tree.map(
+            lambda r: jnp.broadcast_to(r, (npod,) + r.shape), state["residual"])}
+        outs[sync] = comp.compress_per_pod(g, state, step=0)
+    for a, b in zip(jax.tree.leaves(outs["local-mean"][:2]),
+                    jax.tree.leaves(outs["sketch-mean"][:2])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-5, atol=2e-5)
+    with pytest.raises(ValueError, match="unknown sync mode"):
+        SketchCompressor(CFG, sync="nope").compress_per_pod(
+            g, {"residual": jax.tree.map(jnp.zeros_like, g)}, step=0)
+
+
 def test_multi_pod_compressed_training(subproc):
     """2x2x2 mesh: per-pod grads via vmap(spmd_axis_name), sketch-only
     cross-pod sync, loss must decrease."""

@@ -1,6 +1,7 @@
 """Pallas kernels vs pure-jnp oracle (ref.py), interpret=True on CPU.
 
-Sweeps shapes (aligned and ragged), k values (padding path) and ranks.
+Sweeps shapes (aligned and ragged), k values (padding path), ranks, batch
+sizes (ragged B included), and the batched adjoint kernels.
 """
 import jax
 import jax.numpy as jnp
@@ -8,7 +9,8 @@ import numpy as np
 import pytest
 
 from repro.core import TTTensor, random_tt, sample_cp_rp, sample_tt_rp
-from repro.kernels import cp_project, ref, tt_dot, tt_project
+from repro.kernels import (cp_project, cp_reconstruct, pick_tiles, ref,
+                           tt_dot, tt_project, tt_reconstruct)
 
 SHAPES = [
     (16, 32, 24),      # ragged-ish
@@ -64,6 +66,129 @@ def test_tt_dot_kernel(dims, k, rx):
                                rtol=2e-4, atol=2e-4)
     np.testing.assert_allclose(np.asarray(got), np.asarray(op.project_tt(x)),
                                rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# batched kernels vs vmap-of-reference (interpret mode)
+# ---------------------------------------------------------------------------
+
+BATCHES = [1, 3, 5, 16]   # ragged (3, 5) exercise batch-tile padding
+
+
+@pytest.mark.parametrize("b", BATCHES)
+@pytest.mark.parametrize("dims,k", [((16, 32, 24), 200), ((8, 128, 64), 128)])
+def test_tt_project_batched_vs_vmap_ref(b, dims, k):
+    """Batched kernel == vmap of the unbatched reference, with the fused
+    1/sqrt(k) scaling (non-power-of-two k=200 covers the k-padding path)."""
+    op = sample_tt_rp(jax.random.PRNGKey(0), dims, k, 2)
+    xb = jax.random.normal(jax.random.PRNGKey(1), (b,) + dims)
+    got = tt_project(op, xb)
+    assert got.shape == (b, k)
+    g1 = op.cores[0][:, 0, :, :]
+    g2 = op.cores[1]
+    g3 = op.cores[2][:, :, :, 0]
+    want = jax.vmap(lambda x: ref.tt_project3_ref(x, g1, g2, g3))(xb)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(want) / np.sqrt(float(k)),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("b", BATCHES)
+@pytest.mark.parametrize("dims,k", [((16, 32, 24), 200), ((8, 128, 64), 128)])
+def test_cp_project_batched_vs_vmap_ref(b, dims, k):
+    op = sample_cp_rp(jax.random.PRNGKey(0), dims, k, 3)
+    xb = jax.random.normal(jax.random.PRNGKey(1), (b,) + dims)
+    got = cp_project(op, xb)
+    assert got.shape == (b, k)
+    want = jax.vmap(lambda x: ref.cp_project3_ref(x, *op.factors))(xb)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(want) / np.sqrt(float(k)),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("b", BATCHES)
+@pytest.mark.parametrize("dims", SHAPES)
+@pytest.mark.parametrize("k", [128, 200])
+def test_tt_reconstruct_batched_vs_vmap_ref(b, dims, k):
+    """Adjoint kernel == vmap of the reference einsum chain == vmap of
+    op.reconstruct, ragged B and non-power-of-two k included."""
+    op = sample_tt_rp(jax.random.PRNGKey(0), dims, k, 2)
+    y = jax.random.normal(jax.random.PRNGKey(1), (b, k))
+    got = tt_reconstruct(op, y)
+    assert got.shape == (b,) + dims
+    g1 = op.cores[0][:, 0, :, :]
+    g2 = op.cores[1]
+    g3 = op.cores[2][:, :, :, 0]
+    want = ref.tt_reconstruct3_ref(y, g1, g2, g3) / np.sqrt(float(k))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(jax.vmap(op.reconstruct)(y)),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("b", BATCHES)
+@pytest.mark.parametrize("dims", SHAPES)
+@pytest.mark.parametrize("k", [128, 200])
+def test_cp_reconstruct_batched_vs_vmap_ref(b, dims, k):
+    op = sample_cp_rp(jax.random.PRNGKey(0), dims, k, 3)
+    y = jax.random.normal(jax.random.PRNGKey(1), (b, k))
+    got = cp_reconstruct(op, y)
+    assert got.shape == (b,) + dims
+    want = ref.cp_reconstruct3_ref(y, *op.factors) / np.sqrt(float(k))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(jax.vmap(op.reconstruct)(y)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_reconstruct_unbatched_matches_op():
+    """(k,) in, in_dims-shaped out — the single-sketch contract survives."""
+    dims, k = (16, 32, 24), 128
+    for sampler, kern in ((sample_tt_rp, tt_reconstruct),
+                          (sample_cp_rp, cp_reconstruct)):
+        op = sampler(jax.random.PRNGKey(0), dims, k, 2)
+        y = jax.random.normal(jax.random.PRNGKey(1), (k,))
+        got = kern(op, y)
+        assert got.shape == dims
+        np.testing.assert_allclose(np.asarray(got),
+                                   np.asarray(op.reconstruct(y)),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_fused_scaling_matches_explicit():
+    """The epilogue-fused 1/sqrt(k) equals the raw contraction scaled after —
+    scaling each k-tile partial sum commutes with the d1 accumulation."""
+    from repro.kernels.tt_project import tt_project3
+    dims, k = (16, 32, 24), 128
+    op = sample_tt_rp(jax.random.PRNGKey(0), dims, k, 2)
+    xb = jax.random.normal(jax.random.PRNGKey(1), (4,) + dims)
+    g1 = op.cores[0][:, 0, :, :]
+    g2 = op.cores[1]
+    g3 = op.cores[2][:, :, :, 0]
+    raw = tt_project3(xb, g1, g2, g3, tk=64, tb=4, ba=8)
+    fused = tt_project3(xb, g1, g2, g3, tk=64, tb=4, ba=8,
+                        scale=1.0 / float(np.sqrt(k)))
+    np.testing.assert_allclose(np.asarray(fused),
+                               np.asarray(raw) / np.sqrt(float(k)),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_pick_tiles_respects_vmem_budget():
+    """The selector shrinks tiles until the accounted footprint fits, and
+    prefers shrinking the batch tile for project / the k tile for the
+    adjoint (whose m intermediate is batch-independent)."""
+    dims = (128, 128, 64)
+    tk_p, tb_p, ba_p = pick_tiles(1024, 16, dims, 2, kind="project")
+    assert tk_p == 128 and ba_p == 8 and 1 <= tb_p <= 8
+    tk_r, tb_r, _ = pick_tiles(1024, 16, dims, 2, kind="reconstruct")
+    assert tk_r < 128          # m = tk*R*d2*d3 floats forces a smaller tk
+    assert tb_r >= tb_p        # batch tile survives on the adjoint
+    # tiny problems keep full-size tiles
+    assert pick_tiles(64, 2, (8, 8, 8), 2, kind="project") == (64, 2, 8)
+    with pytest.raises(ValueError, match="unknown kind"):
+        pick_tiles(64, 2, (8, 8, 8), 2, kind="nope")
 
 
 def test_kernel_fallback_non_order3():

@@ -142,6 +142,53 @@ def test_batched_inputs():
                                rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.parametrize("family", FAMILIES)
+def test_batched_reconstruct_dispatch(family):
+    """(B, k) sketches -> (B, *in_dims) estimates matching per-sketch calls."""
+    op = _op(family, k=64)
+    yb = jax.random.normal(jax.random.PRNGKey(13), (5, 64))
+    xb = rp.reconstruct(op, yb)
+    assert xb.shape == (5,) + tuple(op.in_dims)
+    np.testing.assert_allclose(np.asarray(xb[2]),
+                               np.asarray(rp.reconstruct(op, yb[2])),
+                               rtol=1e-5, atol=1e-5)
+    # multi-axis batch
+    x2 = rp.reconstruct(op, yb.reshape(5, 1, 64))
+    np.testing.assert_allclose(np.asarray(x2[:, 0]), np.asarray(xb),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("family", ("tt", "cp"))
+def test_batched_project_reconstruct_backend_equivalence(family):
+    """Batched pallas (interpret) == batched xla for project AND reconstruct."""
+    dims = (16, 32, 24)
+    op = _op(family, k=128, dims=dims)
+    xb = jax.random.normal(jax.random.PRNGKey(14), (6,) + dims)
+    y_xla = rp.project(op, xb, backend="xla")
+    y_pal = rp.project(op, xb, backend="pallas")
+    np.testing.assert_allclose(np.asarray(y_xla), np.asarray(y_pal),
+                               rtol=2e-4, atol=2e-4)
+    r_xla = rp.reconstruct(op, y_xla, backend="xla")
+    r_pal = rp.reconstruct(op, y_xla, backend="pallas")
+    assert r_xla.shape == (6,) + dims
+    np.testing.assert_allclose(np.asarray(r_xla), np.asarray(r_pal),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_batched_input_is_one_kernel_dispatch():
+    """A whole batch routes through ONE kernel dispatch (no vmap-of-launches):
+    the launch-count reduction the batched sketcher relies on."""
+    dims = (8, 128, 64)
+    op = _op("tt", k=128, dims=dims)
+    xb = jax.random.normal(jax.random.PRNGKey(15), (16,) + dims)
+    before = rp.kernel_call_count()
+    with rp.force_pallas():
+        yb = rp.project(op, xb, backend="auto")
+        rp.reconstruct(op, yb, backend="auto")
+    assert rp.kernel_call_count() == before + 2  # one per direction, B=16
+    assert yb.shape == (16, 128)
+
+
 def test_format_mismatch_typed_errors():
     op = _op("tt")
     with pytest.raises(rp.FormatMismatchError):
