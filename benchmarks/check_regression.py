@@ -1,0 +1,86 @@
+"""Bench-regression gate: diff a fresh BENCH_rp.json against the committed
+baseline.
+
+Usage: python -m benchmarks.check_regression NEW.json BASELINE.json
+
+Fails (exit 1) on SCHEMA DRIFT — schema version string changed, a baseline
+section or named row disappeared, or a record lost the
+{name, us_per_call, derived} shape — and on a LAUNCH-COUNT REGRESSION: any
+row whose Pallas dispatch count (launches_batched / launches_project /
+launches_reconstruct) grew to more than 2x the baseline, i.e. a batched
+path quietly decomposing back into per-bucket or vmap launches. Wall-clock
+deltas are deliberately NOT gated — CI machines are too noisy — only
+structure and launch counts, which are deterministic.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+LAUNCH_KEYS = ("launches_batched", "launches_project", "launches_reconstruct")
+RECORD_KEYS = {"name", "us_per_call", "derived"}
+
+
+def _rows_by_name(record: dict) -> dict:
+    return {r["name"]: r for rows in record.get("sections", {}).values()
+            for r in rows if isinstance(r, dict) and "name" in r}
+
+
+def check(new: dict, base: dict) -> list[str]:
+    """All gate violations of `new` vs the `base` baseline (empty = pass)."""
+    errors = []
+    if new.get("schema") != base.get("schema"):
+        errors.append(f"schema drift: {new.get('schema')!r} != baseline "
+                      f"{base.get('schema')!r}")
+    missing = sorted(set(base.get("sections", {})) - set(new.get("sections", {})))
+    if missing:
+        errors.append(f"sections missing from new record: {missing}")
+    for sec, rows in new.get("sections", {}).items():
+        for r in rows:
+            if not isinstance(r, dict) or not RECORD_KEYS <= set(r):
+                errors.append(f"malformed record in section {sec!r}: "
+                              f"{str(r)[:80]}")
+    new_rows, base_rows = _rows_by_name(new), _rows_by_name(base)
+    gone = sorted(set(base_rows) - set(new_rows))
+    if gone:
+        errors.append(f"baseline rows missing from new record: {gone[:8]}")
+    for name, brow in base_rows.items():
+        nrow = new_rows.get(name)
+        if nrow is None:
+            continue
+        for key in LAUNCH_KEYS:
+            b = brow.get("derived", {}).get(key)
+            if not isinstance(b, (int, float)):
+                continue
+            n = nrow.get("derived", {}).get(key)
+            if not isinstance(n, (int, float)):
+                # the metric vanishing must not evade the gate it feeds
+                errors.append(f"{name}: launch metric {key} present in "
+                              f"baseline but missing/non-numeric in new "
+                              f"record ({n!r})")
+            elif b > 0 and n > 2 * b:
+                errors.append(f"{name}: {key} regressed {b} -> {n} (>2x)")
+    return errors
+
+
+def main(argv=None) -> None:
+    args = sys.argv[1:] if argv is None else list(argv)
+    if len(args) != 2:
+        raise SystemExit("usage: python -m benchmarks.check_regression "
+                         "NEW.json BASELINE.json")
+    with open(args[0]) as f:
+        new = json.load(f)
+    with open(args[1]) as f:
+        base = json.load(f)
+    errors = check(new, base)
+    for e in errors:
+        print(f"BENCH-REGRESSION: {e}", file=sys.stderr)
+    if errors:
+        raise SystemExit(1)
+    n_rows = len(_rows_by_name(new))
+    print(f"bench-regression: OK ({new.get('schema')}, {n_rows} rows checked "
+          f"against {len(_rows_by_name(base))} baseline rows)")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,8 +3,10 @@
 Prints ``name,us_per_call,derived`` CSV. `--full` uses paper-scale trial
 counts (slow on CPU); default is a faithful but reduced sweep. `--json PATH`
 additionally writes a structured ``BENCH_rp.json`` perf record (per-kernel
-us/call, parsed derived metrics such as batched-vs-per-bucket launch counts
-and bytes moved) so CI can archive the perf trajectory run over run.
+us/call, parsed derived metrics such as batched-vs-per-bucket launch counts,
+bytes moved, and the per-order ``time/order/*`` frontier rows) so CI can
+archive the perf trajectory run over run and diff it against the committed
+baseline (``benchmarks.check_regression``).
 """
 import argparse
 import json
@@ -81,7 +83,10 @@ def main(argv=None) -> None:
     if args.json:
         import jax
         record = {
-            "schema": "bench_rp/v1",
+            # v2: order-N kernel layer — timing gains per-order
+            # time/order/{tt,cp}/N={2..5} rows (launch counts, operator
+            # params, Thm-1 variance factors)
+            "schema": "bench_rp/v2",
             "unix_time": time.time(),
             "backend": jax.default_backend(),
             "fast": fast,

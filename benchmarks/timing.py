@@ -1,12 +1,13 @@
 """Paper Fig. 2 + App. B.2: embedding time for medium-order inputs given in
 TT or CP format, across the map family (TT/CP/sparse/dense) — plus the
 batched-vs-per-bucket kernel comparison that tracks the sketcher hot path
-(launch counts, wall time, analytic bytes moved) into BENCH_rp.json."""
+(launch counts, wall time, analytic bytes moved) and the TT-vs-CP-vs-order
+frontier (time/order/* rows, N in {2,3,4,5}) into BENCH_rp.json."""
 import jax
 import jax.numpy as jnp
 
 from repro import rp
-from repro.core import random_cp, random_tt
+from repro.core import random_cp, random_tt, theory
 
 from ._util import csv_row, time_call
 
@@ -19,30 +20,80 @@ def _compiled_with_dispatch_count(fn, arg):
 
 
 def _analytic_hbm_bytes(direction, family, k, b, dims, rank):
-    """Grid-accurate analytic HBM traffic of ONE batched launch.
+    """Grid-accurate analytic HBM traffic of ONE batched launch, any order.
 
-    Follows the BlockSpec index maps in kernels/{tt,cp}_{project,
-    reconstruct}.py: a block is re-fetched whenever its index map changes
+    Follows the BlockSpec index maps the planner lays out in
+    kernels/_sweep.py: a block is re-fetched whenever its index map changes
     between consecutive grid steps and stays resident otherwise.
     """
-    from repro.kernels import pick_tiles
-    d1, d2, d3 = dims
-    tk, tb, ba = pick_tiles(k, b, dims, rank, kind=direction, family=family)
-    nk, nb_t, na = -(-k // tk), -(-b // tb), -(-d1 // ba)
-    x_total = b * d1 * d2 * d3 * 4
+    from repro.kernels import plan_contraction
+    plan = plan_contraction(family, direction, k, b, dims, rank)
+    nk, nb_t, na = (-(-k // plan.tk), -(-b // plan.tb),
+                    -(-dims[0] // plan.ba))
+    x_total = b * 4
+    for d in dims:
+        x_total *= d
     y_total = b * k * 4
+    c1 = k * dims[0] * rank * 4            # leading core, ia-indexed
     if family == "tt":
-        c1, c2, c3 = k * d1 * rank * 4, k * rank * d2 * rank * 4, \
-            k * rank * d3 * 4
+        c_rest = (sum(k * rank * d * rank * 4 for d in dims[1:-1])
+                  + k * rank * dims[-1] * 4)
     else:
-        c1, c2, c3 = k * d1 * rank * 4, k * d2 * rank * 4, k * d3 * rank * 4
+        c_rest = sum(k * d * rank * 4 for d in dims[1:])
     if direction == "project":
         # grid (ik, ib, ia): x re-streamed once per k-tile; the ia-indexed
-        # leading core once per batch tile; g2/g3 resident per k-tile.
-        return nk * x_total + nb_t * c1 + c2 + c3 + y_total
+        # leading core once per batch tile; trailing cores resident per
+        # k-tile.
+        return nk * x_total + nb_t * c1 + c_rest + y_total
     # grid (ib, ia, ik): y re-fetched once per d1-tile; leading core once
     # per batch tile; trailing cores re-streamed per (batch, d1) tile.
-    return na * y_total + nb_t * c1 + nb_t * na * (c2 + c3) + x_total
+    return na * y_total + nb_t * c1 + nb_t * na * c_rest + x_total
+
+
+def _order_frontier(rows, fast=True):
+    """The TT-vs-CP-vs-order frontier the order-N kernel layer unlocks.
+
+    One batched Pallas (interpret off-TPU) launch per (family, N, direction)
+    for N in {2,..,5} at fixed k/rank: `params` shows the operator shrinking
+    as the same-size bucket is tensorized into more, smaller modes (core
+    params scale with the SUM of the modes, not their product), and
+    `var_factor` / `var_ratio_cp_tt` chart the Thm-1 cost CP pays for that
+    at each order. `launches_*` prove the mode-sweep route (one dispatch per
+    batched call at every order). Wall-clock is meaningful on TPU, noisy in
+    CPU interpret mode.
+    """
+    del fast
+    k, rank, b = 128, 2, 4
+    dims_by_n = {2: (64, 64), 3: (16, 16, 16), 4: (8, 8, 8, 8),
+                 5: (8, 8, 8, 8, 8)}
+    key = jax.random.PRNGKey(7)
+    for n, dims in dims_by_n.items():
+        xb = jax.random.normal(jax.random.fold_in(key, n), (b,) + dims)
+        for family in ("tt", "cp"):
+            op = rp.make_projector(
+                rp.ProjectorSpec(family=family, k=k, dims=dims, rank=rank),
+                jax.random.fold_in(key, 10 * n))
+
+            def project(a, op=op):
+                return rp.project(op, a, backend="pallas")
+
+            def reconstruct(y, op=op):
+                return rp.reconstruct(op, y, backend="pallas")
+
+            f_p, launches_p = _compiled_with_dispatch_count(project, xb)
+            us_p = time_call(f_p, xb)
+            yb = f_p(xb)
+            f_r, launches_r = _compiled_with_dispatch_count(reconstruct, yb)
+            us_r = time_call(f_r, yb)
+            rows.append(csv_row(
+                f"time/order/{family}/N={n}", us_p,
+                f"dims={'x'.join(map(str, dims))};k={k};rank={rank};B={b};"
+                f"launches_project={launches_p};"
+                f"launches_reconstruct={launches_r};"
+                f"us_reconstruct={us_r:.1f};"
+                f"params={theory.params_rp(family, k, dims, rank)};"
+                f"var_factor={theory.variance_factor(family, N=n, R=rank):.2f};"
+                f"var_ratio_cp_tt={theory.variance_ratio_cp_to_tt(n, rank):.2f}"))
 
 
 def _batched_vs_per_bucket(rows, fast=True):
@@ -157,4 +208,5 @@ def run(fast=True):
                             f"D={3**n}"))
 
     _batched_vs_per_bucket(rows, fast=fast)
+    _order_frontier(rows, fast=fast)
     return rows

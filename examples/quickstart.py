@@ -57,14 +57,22 @@ print(f"  TT rank 5 : {theory.variance_factor('tt', N=12, R=5):8.1f}")
 print(f"  CP rank 25: {theory.variance_factor('cp', N=12, R=25):8.1f}   "
       "<- exponential in N: CP is hopeless at high order")
 
-# ----------------------------------------------- TPU kernel (order-3 path) -
-# backend='auto' picks the Pallas kernel on TPU for MXU-aligned shapes;
-# 'pallas' forces it (interpret mode on CPU), 'xla' forces the einsum path.
-dims3 = (64, 128, 64)
-x3 = jax.random.normal(jax.random.fold_in(key, 3), dims3)
-op3 = rp.make_projector(rp.ProjectorSpec(family="tt", k=256, dims=dims3,
+# ------------------------------------------- TPU kernel (order-N sweep) ----
+# backend='auto' picks the mode-sweep Pallas kernel on TPU for MXU-aligned
+# shapes of ANY order >= 2; 'pallas' forces it (interpret mode on CPU),
+# 'xla' forces the einsum path. An order-4 tensorization of the same bucket
+# halves the operator vs the order-3 (64, 128, 64) layout — core params
+# scale with the SUM of the modes, not their product.
+dims4 = (16, 32, 16, 64)          # same 2^19-element bucket, order 4
+x4 = jax.random.normal(jax.random.fold_in(key, 3), dims4)
+op4 = rp.make_projector(rp.ProjectorSpec(family="tt", k=256, dims=dims4,
                                          rank=2), jax.random.fold_in(key, 4))
-y_kernel = rp.project(op3, x3, backend="pallas")
-y_ref = rp.project(op3, x3, backend="xla")
-print(f"\nPallas tt_project kernel matches reference: "
+op3 = rp.make_projector(rp.ProjectorSpec(family="tt", k=256,
+                                         dims=(64, 128, 64), rank=2),
+                        jax.random.fold_in(key, 5))
+y_kernel = rp.project(op4, x4, backend="pallas")
+y_ref = rp.project(op4, x4, backend="xla")
+print(f"\norder-4 mode-sweep kernel matches reference: "
       f"{bool(jnp.allclose(y_kernel, y_ref, rtol=1e-4, atol=1e-4))}")
+print(f"operator params, same bucket: order-3 {op3.num_params():,} -> "
+      f"order-4 {op4.num_params():,}")

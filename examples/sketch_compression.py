@@ -43,8 +43,11 @@ def run(compressor, steps=80):
 
 
 base = run(None)
-scfg = SketchConfig(family="tt", k=128, rank=8, bucket_elems=4 * 8 * 16,
-                    dims=(4, 8, 16))  # 4x fewer bytes on the wire
+# Order-4 tensorization of the same 512-element bucket: the mode-sweep
+# kernels handle any order, and the smaller modes shrink the TT operator
+# (core params scale with the sum of the modes) at the same 4x wire saving.
+scfg = SketchConfig(family="tt", k=128, rank=8, bucket_elems=4 * 4 * 8 * 4,
+                    dims=(4, 4, 8, 4))
 comp = SketchCompressor(scfg)
 smet = run(comp)
 print(f"uncompressed final loss : {float(base['loss']):.4f}")

@@ -2,7 +2,10 @@
 
 This is the systems integration of the paper: big flat vectors (gradients,
 parameter deltas) are bucketed, each bucket is tensorized into an MXU-aligned
-order-3 tensor, and projected with any registered `repro.rp` family —
+order-N tensor (`dims` may be any length — the mode-sweep kernels handle any
+order >= 2, and higher order means smaller cores for the same bucket size:
+TT/CP operator params scale with the SUM of the modes, not their product),
+and projected with any registered `repro.rp` family —
 f_TT(R) / f_CP(R) from the paper, or the gaussian/sparse baselines via
 flat-vector dispatch. Because the operator is derived from a PRNG key,
 distributed hosts regenerate it locally — the operator itself never crosses
@@ -31,7 +34,10 @@ class SketchConfig:
     k: int = 1024              # sketch size per bucket
     rank: int = 2              # R of the tensorized map
     bucket_elems: int = 128 * 128 * 64  # elements per bucket (1,048,576)
-    dims: tuple[int, ...] = (128, 128, 64)  # MXU-aligned tensorization
+    # MXU-aligned tensorization; ANY length >= 1 (order-N buckets route
+    # through the mode-sweep kernels; e.g. (32, 32, 32, 32) halves TT
+    # operator memory vs (128, 128, 64) at the same bucket size)
+    dims: tuple[int, ...] = (128, 128, 64)
     fresh_per_step: bool = True  # re-draw operator each step (EF-friendly)
     backend: str = "auto"      # repro.rp backend policy for projections
     fmt: dataclasses.InitVar[str | None] = None  # deprecated alias of family

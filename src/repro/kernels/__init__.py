@@ -1,15 +1,21 @@
-"""Pallas TPU kernels for the paper's projection hot-spots.
+"""Pallas TPU kernels for the paper's projection hot-spots, order-generic.
 
 tt_project / cp_project: batched dense-input (tensorized flat vector)
-projections — one launch per batch of buckets, JLT scaling fused.
-tt_reconstruct / cp_reconstruct: batched adjoint reconstructions.
-tt_dot: structured TT-input projection (the paper's O(kNd max(R,R~)^3) path).
-pick_tiles: the VMEM-budgeted tile selector shared by all dense wrappers.
+projections for ANY order N >= 2 — one launch per batch of buckets, JLT
+scaling fused — via the mode-sweep kernels (tt_sweep.py / cp_sweep.py).
+tt_reconstruct / cp_reconstruct: the batched adjoint reconstructions.
+tt_dot: structured TT-input projection (the paper's O(kNd max(R,R~)^3)
+path; order-3 kernel, transfer-matrix einsum elsewhere).
+plan_contraction / ContractionPlan: the mode-sweep contraction planner —
+einsum program + VMEM-budgeted tiles + grid for a static order.
+pick_tiles: the tile view of the planner, shared by all dense wrappers.
 Validated in interpret mode against ref.py; BlockSpecs target TPU VMEM.
 """
 from . import ref
-from .ops import (cp_project, cp_reconstruct, pick_tiles, tt_dot, tt_project,
-                  tt_reconstruct)
+from .ops import (MAX_ORDER, ContractionPlan, cp_project, cp_reconstruct,
+                  kernel_order_supported, pick_tiles, plan_contraction,
+                  tt_cores_squeezed, tt_dot, tt_project, tt_reconstruct)
 
-__all__ = ["cp_project", "cp_reconstruct", "pick_tiles", "tt_dot",
-           "tt_project", "tt_reconstruct", "ref"]
+__all__ = ["MAX_ORDER", "ContractionPlan", "cp_project", "cp_reconstruct",
+           "kernel_order_supported", "pick_tiles", "plan_contraction", "ref",
+           "tt_cores_squeezed", "tt_dot", "tt_project", "tt_reconstruct"]

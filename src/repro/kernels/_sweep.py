@@ -1,0 +1,134 @@
+"""Family-agnostic Pallas machinery for the order-N mode-sweep kernels.
+
+The kernel bodies execute the einsum program emitted by the contraction
+planner (`ops.plan_contraction`) verbatim — `steps` arrives as a static
+tuple of strings, so each (family, kind, order, tiling) compiles exactly
+once. `tt_sweep.py` / `cp_sweep.py` wrap these with the family core layouts
+and document the TPU schedule; nothing here is family-specific beyond what
+the program strings encode.
+
+Grid conventions (the PR-2 batched schedule, order-generic):
+* project: grid = (k/TK, B/TB, d1/BA), k-tile OUTERMOST, accumulate over
+  the d1 axis in the revisited (TB, TK) output block.
+* reconstruct: grid = (B/TB, d1/BA, k/TK), k-tile INNERMOST, accumulate
+  over k in the revisited (TB, BA, d2..dN) output block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _project_kernel(x_ref, *refs, steps, scale):
+    core_refs, o_ref = refs[:-1], refs[-1]
+    ia = pl.program_id(2)
+    z = x_ref[...]                       # (TB, BA, d2..dN)
+    # mode sweep: rightmost core first, rank bond carried between steps
+    for spec, g_ref in zip(steps, reversed(core_refs)):
+        z = jnp.einsum(spec, z, g_ref[...],
+                       preferred_element_type=jnp.float32)
+    y = z * scale                        # (TB, TK)
+
+    @pl.when(ia == 0)
+    def _init():
+        o_ref[...] = y
+
+    @pl.when(ia != 0)
+    def _acc():
+        o_ref[...] += y
+
+
+def _reconstruct_kernel(y_ref, *refs, steps, scale):
+    core_refs, o_ref = refs[:-1], refs[-1]
+    m_steps, h_spec, out_spec = steps
+    ik = pl.program_id(2)
+    # fold the trailing cores into the batch-independent transfer block m
+    m = core_refs[-1][...]
+    if m_steps[0] is not None:           # CP layout transpose; None for TT
+        m = jnp.einsum(m_steps[0], m)
+    for spec, g_ref in zip(m_steps[1:], reversed(core_refs[1:-1])):
+        m = jnp.einsum(spec, g_ref[...], m,
+                       preferred_element_type=jnp.float32)
+    h = jnp.einsum(h_spec, y_ref[...], core_refs[0][...],
+                   preferred_element_type=jnp.float32)
+    out = jnp.einsum(out_spec, h, m,
+                     preferred_element_type=jnp.float32) * scale
+
+    @pl.when(ik == 0)
+    def _init():
+        o_ref[...] = out
+
+    @pl.when(ik != 0)
+    def _acc():
+        o_ref[...] += out
+
+
+def _imap(*pattern):
+    """Index map selecting grid axes by position (`int`) or pinning 0
+    (`None`) — replaces the per-arity lambdas of the order-3 kernels."""
+    def f(i0, i1, i2):
+        prog = (i0, i1, i2)
+        return tuple(prog[p] if p is not None else 0 for p in pattern)
+    return f
+
+
+def _core_specs(cores, tk, ba, *, lead_pos, k_pos):
+    """BlockSpecs for the cores: the leading core is tiled on its mode axis
+    (it rides the d1 grid axis at `lead_pos`); the rest are full-size per
+    k-tile (grid axis `k_pos`) so they stay VMEM-resident across it."""
+    specs = [pl.BlockSpec((tk, ba, cores[0].shape[2]),
+                          _imap(k_pos, lead_pos, None))]
+    for g in cores[1:]:
+        specs.append(pl.BlockSpec((tk,) + g.shape[1:],
+                                  _imap(k_pos, *([None] * (g.ndim - 1)))))
+    return specs
+
+
+@functools.partial(jax.jit, static_argnames=("steps", "tk", "tb", "ba",
+                                             "scale", "interpret"))
+def sweep_project(x: jnp.ndarray, *cores: jnp.ndarray, steps, tk: int,
+                  tb: int, ba: int, scale: float,
+                  interpret: bool) -> jnp.ndarray:
+    b, d1 = x.shape[:2]
+    trail = x.shape[2:]
+    k = cores[0].shape[0]
+    assert len(cores) == x.ndim - 1 and len(steps) == len(cores)
+    assert k % tk == 0 and b % tb == 0 and d1 % ba == 0, (k, tk, b, tb, d1, ba)
+    grid = (k // tk, b // tb, d1 // ba)
+    in_specs = [pl.BlockSpec((tb, ba) + trail,
+                             _imap(1, 2, *([None] * len(trail))))]
+    in_specs += _core_specs(cores, tk, ba, lead_pos=2, k_pos=0)
+    return pl.pallas_call(
+        functools.partial(_project_kernel, steps=steps, scale=scale),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((tb, tk), _imap(1, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, k), jnp.float32),
+        interpret=interpret,
+    )(x, *cores)
+
+
+@functools.partial(jax.jit, static_argnames=("steps", "trail", "tk", "tb",
+                                             "ba", "scale", "interpret"))
+def sweep_reconstruct(y: jnp.ndarray, *cores: jnp.ndarray, steps,
+                      trail: tuple[int, ...], tk: int, tb: int, ba: int,
+                      scale: float, interpret: bool) -> jnp.ndarray:
+    b, k = y.shape
+    d1 = cores[0].shape[1]
+    assert len(trail) == len(cores) - 1
+    assert k % tk == 0 and b % tb == 0 and d1 % ba == 0, (k, tk, b, tb, d1, ba)
+    grid = (b // tb, d1 // ba, k // tk)
+    in_specs = [pl.BlockSpec((tb, tk), _imap(0, 2))]
+    in_specs += _core_specs(cores, tk, ba, lead_pos=1, k_pos=2)
+    return pl.pallas_call(
+        functools.partial(_reconstruct_kernel, steps=steps, scale=scale),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((tb, ba) + trail,
+                               _imap(0, 1, *([None] * len(trail)))),
+        out_shape=jax.ShapeDtypeStruct((b, d1) + trail, jnp.float32),
+        interpret=interpret,
+    )(y, *cores)

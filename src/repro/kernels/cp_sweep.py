@@ -1,0 +1,50 @@
+"""Pallas TPU kernels: order-N batched dense-input CP projection + adjoint.
+
+y[n,i] = scale * sum_r <f1[i,:,r] o f2[i,:,r] o ... o fN[i,:,r], x[n]> and
+its adjoint — the CP counterparts of `tt_sweep.py`, sharing the planner
+(`ops.plan_contraction`) and the grid machinery (`_sweep.py`): k-tile
+outermost for project (factors VMEM-resident across the batch), k-tile
+innermost for reconstruct (partials accumulate in the revisited output
+block), batch grid axis, fused JLT scaling.
+
+The CP sweep is cheaper per mode than TT (rank vectors instead of R x R
+transfer cores) and its rank carry never alternates bonds — the planner's
+einsum program keeps a single 'r' index through the whole sweep. For the
+adjoint, the trailing factors fold into the transfer block
+m[i,r,d2..dN] = f2[i,d2,r] * ... * fN[i,dN,r] (rank-wise outer product; the
+first program step is the (k,dN,R)->(k,R,dN) layout transpose).
+
+Factor layout is `op.factors` as-is: f_n (k, d_n, R).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ._sweep import sweep_project, sweep_reconstruct
+
+
+def cp_sweep_project(x: jnp.ndarray, *factors: jnp.ndarray, steps,
+                     tk: int = 128, tb: int = 4, ba: int = 8,
+                     scale: float = 1.0,
+                     interpret: bool = True) -> jnp.ndarray:
+    """Batched order-N CP contraction; x (B, d1, ..., dN), f_n (k, d_n, R).
+
+    Requires k%tk==0, B%tb==0, d1%ba==0; `scale` is fused into the
+    epilogue. Returns (B, k) float32.
+    """
+    return sweep_project(x, *factors, steps=steps, tk=tk, tb=tb, ba=ba,
+                         scale=scale, interpret=interpret)
+
+
+def cp_sweep_reconstruct(y: jnp.ndarray, *factors: jnp.ndarray, steps,
+                         tk: int = 32, tb: int = 4, ba: int = 8,
+                         scale: float = 1.0,
+                         interpret: bool = True) -> jnp.ndarray:
+    """Batched order-N CP adjoint; y (B, k), f_n (k, d_n, R).
+
+    `scale` is fused — pass 1/sqrt(k_logical). Returns (B, d1, ..., dN)
+    float32.
+    """
+    trail = tuple(int(f.shape[1]) for f in factors[1:])
+    return sweep_reconstruct(y, *factors, steps=steps, trail=trail, tk=tk,
+                             tb=tb, ba=ba, scale=scale, interpret=interpret)

@@ -1,21 +1,31 @@
-"""Jit'd public wrappers around the Pallas kernels.
+"""Contraction planner + jit'd public wrappers around the Pallas kernels.
 
-Handle batch/mode/k padding, layout conversion from the repro.core operator
-containers, VMEM-budgeted tile selection, and graceful fallback to the jnp
-reference path for orders != 3. The JLT 1/sqrt(k) scaling is FUSED into the
-kernel epilogues (`scale=`), so no separate scaling pass runs over the output.
+The planner (`plan_contraction` -> `ContractionPlan`) is the single source
+of truth for the order-N mode-sweep schedule: for a static order N it emits
+the einsum program of the sweep (one contraction per mode, rank carried
+between steps), the VMEM-budgeted tiles `(tk, tb, ba)`, and the grid — and
+the family-specific kernel modules (`tt_sweep.py` / `cp_sweep.py`) execute
+exactly that program inside a `pallas_call` that preserves the batched
+order-3 schedule the plan generalizes: k-tile outermost for `project` (cores
+stay VMEM-resident across the batch), k-tile innermost for `reconstruct`
+(partial sums accumulate in the revisited output block), batch grid axis,
+and the JLT 1/sqrt(k) scaling FUSED into the kernel epilogue.
 
-All four dense-path wrappers (`tt_project` / `cp_project` and the adjoints
-`tt_reconstruct` / `cp_reconstruct`) accept either a single input
-(`(d1,d2,d3)` tensor / `(k,)` sketch) or a batch (`(B,d1,d2,d3)` / `(B,k)`);
-the batch runs in ONE kernel launch with a native batch grid axis — this is
-how `PytreeSketcher` sketches all buckets of a leaf per launch.
+The wrappers (`tt_project` / `cp_project` and the adjoints `tt_reconstruct`
+/ `cp_reconstruct`) handle batch/mode/k padding and layout conversion from
+the repro.core operator containers for ANY order N >= 2; order-1 operators
+(classical Gaussian RP) fall back to the jnp reference path. Each accepts a
+single input (`(*dims)` tensor / `(k,)` sketch) or a batch (`(B, *dims)` /
+`(B, k)`); the batch runs in ONE kernel launch with a native batch grid
+axis — this is how `PytreeSketcher` sketches all buckets of a leaf per
+launch.
 
-`interpret` defaults to True because this container is CPU-only; on real TPU
-hardware pass interpret=False (the BlockSpecs are written for TPU VMEM).
+`interpret` defaults to True because this container is CPU-only; on real
+TPU hardware pass interpret=False (the BlockSpecs are written for TPU VMEM).
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 import warnings
 
@@ -23,19 +33,23 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.cp_rp import CPRP
-from repro.core.formats import TTTensor
+from repro.core.formats import TTTensor, _prod
 from repro.core.tt_rp import TTRP
 
 from . import ref
-from .cp_project import cp_project3
-from .cp_reconstruct import cp_reconstruct3
 from .tt_dot import tt_dot3
-from .tt_project import tt_project3
-from .tt_reconstruct import tt_reconstruct3
 
 # Per-kernel-instance VMEM budget. Real TPU cores have ~16 MiB; half of it
 # leaves headroom for Pallas' double-buffered pipeline copies.
 VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+
+# Mode axis letters of the einsum programs ('a' = leading mode). Bounds the
+# supported order; 8 modes is far past the paper's N<=6 evaluation range.
+MODES = "abcdefgh"
+MAX_ORDER = len(MODES)
+
+_FAMILIES = ("tt", "cp")
+_KINDS = ("project", "reconstruct")
 
 
 def _pad_axis(a: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
@@ -56,51 +70,168 @@ def _pow2_at_most(n: int, cap: int) -> int:
     return min(cap, 1 << max(0, (n - 1).bit_length()))
 
 
-def pick_tiles(k: int, b: int, dims: tuple[int, ...], rank: int, *,
-               kind: str = "project", family: str = "tt",
-               budget: int = VMEM_BUDGET_BYTES) -> tuple[int, int, int]:
-    """VMEM-budgeted (tk, tb, ba) for the batched order-3 kernels.
+# ---------------------------------------------------------------------------
+# mode-sweep einsum programs
+# ---------------------------------------------------------------------------
 
-    Accounts for every per-instance buffer — streamed input/output blocks,
-    per-k-tile cores (`family='tt'` transfer cores are R x R on the middle
-    mode, `'cp'` factors are rank vectors), and the kernel-internal einsum
-    intermediates — and shrinks tiles until the footprint fits `budget`:
+def _project_steps(family: str, order: int) -> tuple[str, ...]:
+    """Einsum program of the projection mode sweep, rightmost mode first.
 
-    * kind='project': the z intermediate (TK*TB*BA*d2*R floats) dominates and
-      scales with both TK and TB; the batch tile is shrunk first (TK=128 keeps
-      k on the lane axis, which matters more than batch amortization).
-    * kind='reconstruct': the fused transfer-core intermediate m
-      (TK*R*d2*d3 floats) dominates and is batch-independent, so TK is shrunk
-      first and the batch tile survives (it is what fills the MXU).
+    Step s contracts operands `(carry, core)` where `carry` starts as the
+    batched input block `(TB, BA, d2..dN)` and the cores are visited last to
+    first; the rank bond ('u'/'v' for TT, 'r' for CP) is carried between
+    steps and the final step collapses it against the leading core into the
+    `(TB, TK)` output tile.
     """
-    d1, d2, d3 = dims
+    modes = MODES[:order]
+    steps = []
+    if family == "tt":
+        steps.append(f"n{modes},ku{modes[-1]}->kn{modes[:-1]}u")
+        carry = "u"
+        for i in range(order - 2, 0, -1):
+            new = "v" if carry == "u" else "u"
+            steps.append(f"kn{modes[:i + 1]}{carry},k{new}{modes[i]}{carry}"
+                         f"->kn{modes[:i]}{new}")
+            carry = new
+        steps.append(f"kna{carry},ka{carry}->nk")
+    else:
+        steps.append(f"n{modes},k{modes[-1]}r->kn{modes[:-1]}r")
+        for i in range(order - 2, 0, -1):
+            steps.append(f"kn{modes[:i + 1]}r,k{modes[i]}r->kn{modes[:i]}r")
+        steps.append("knar,kar->nk")
+    return tuple(steps)
+
+
+def _reconstruct_steps(family: str, order: int):
+    """Einsum program of the adjoint: `(m_steps, h_spec, out_spec)`.
+
+    The trailing cores are folded right-to-left into a batch-independent
+    transfer block m `(TK, R, d2..dN)` (m_steps; the first entry is a unary
+    layout transpose for CP, None for TT whose squeezed last core already
+    has the bond leading); h grafts the sketch onto the leading core, and
+    out_spec is the one big `(TB*BA, TK*R) x (TK*R, prod(d2..dN))` MXU
+    contraction.
+    """
+    modes = MODES[:order]
+    m_steps = []
+    if family == "tt":
+        m_steps.append(None)
+        carry = "u"
+        for i in range(order - 2, 0, -1):
+            new = "v" if carry == "u" else "u"
+            m_steps.append(f"k{new}{modes[i]}{carry},k{carry}{modes[i + 1:]}"
+                           f"->k{new}{modes[i:]}")
+            carry = new
+    else:
+        m_steps.append(f"k{modes[-1]}r->kr{modes[-1]}")
+        carry = "r"
+        for i in range(order - 2, 0, -1):
+            m_steps.append(f"k{modes[i]}r,kr{modes[i + 1:]}->kr{modes[i:]}")
+    h_spec = f"nk,ka{carry}->nak{carry}"
+    out_spec = f"nak{carry},k{carry}{modes[1:]}->na{modes[1:]}"
+    return (tuple(m_steps), h_spec, out_spec)
+
+
+# ---------------------------------------------------------------------------
+# the planner
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ContractionPlan:
+    """A fully-resolved mode-sweep schedule for one kernel launch.
+
+    `steps` is the einsum program (`_project_steps` /
+    `_reconstruct_steps`) that the sweep kernels execute verbatim — it is
+    static (a tuple of strings), so it participates in the jit cache key and
+    a given (family, kind, order) compiles exactly once per tiling.
+    `vmem_bytes` is the accounted per-instance footprint at the chosen
+    tiles.
+    """
+
+    family: str
+    kind: str
+    k: int
+    b: int
+    dims: tuple[int, ...]
+    rank: int
+    tk: int
+    tb: int
+    ba: int
+    steps: tuple
+    vmem_bytes: int
+
+    @property
+    def order(self) -> int:
+        return len(self.dims)
+
+    @property
+    def grid(self) -> tuple[int, int, int]:
+        """Grid for the padded problem (k-tile outermost for project,
+        innermost for reconstruct — the PR-2 schedule, order-generic)."""
+        nk = -(-self.k // self.tk)
+        nb = -(-self.b // self.tb)
+        na = -(-self.dims[0] // self.ba)
+        if self.kind == "project":
+            return (nk, nb, na)
+        return (nb, na, nk)
+
+
+def plan_contraction(family: str, kind: str, k: int, b: int,
+                     dims: tuple[int, ...], rank: int, *,
+                     budget: int = VMEM_BUDGET_BYTES) -> ContractionPlan:
+    """Plan a mode-sweep kernel launch for static order N = len(dims).
+
+    Accounts every per-instance VMEM buffer — streamed input/output blocks,
+    per-k-tile cores (TT transfer cores are R x R on interior modes, CP
+    factors are rank vectors), and every intermediate of the mode sweep —
+    and shrinks tiles until the footprint fits `budget`:
+
+    * kind='project': the sweep intermediates (sum over sweep steps of
+      TK*TB*BA*prod(d2..dj)*R floats) dominate and scale with both TK and
+      TB; the batch tile is shrunk first (TK=128 keeps k on the lane axis,
+      which matters more than batch amortization).
+    * kind='reconstruct': the fused transfer-block stages m (sum of
+      TK*R*prod(dj..dN) floats) dominate and are batch-independent, so TK
+      is shrunk first and the batch tile survives (it is what fills the
+      MXU).
+    """
+    if kind not in _KINDS:
+        raise ValueError(f"unknown kind {kind!r}; expected {_KINDS}")
+    if family not in _FAMILIES:
+        raise ValueError(f"unknown family {family!r}; expected {_FAMILIES}")
+    dims = tuple(int(d) for d in dims)
+    order = len(dims)
+    if order < 2:
+        raise ValueError(f"mode-sweep kernels need order >= 2, got dims={dims}")
+    if order > MAX_ORDER:
+        raise ValueError(f"order {order} exceeds MAX_ORDER={MAX_ORDER}")
     r = max(1, int(rank))
+    d1, trail = dims[0], dims[1:]
     tk = _lane_tile(k)
     tb = _pow2_at_most(max(1, b), 8)
     ba = 8 if d1 % 8 == 0 or d1 >= 8 else d1
-    if family == "tt":     # (tk,ba,r) + (tk,r,d2,r) + (tk,r,d3)
-        core_elems = ba * r + r * d2 * r + r * d3
-    else:                  # cp: (tk,ba,r) + (tk,d2,r) + (tk,d3,r)
-        core_elems = ba * r + d2 * r + d3 * r
+    if family == "tt":
+        core_elems = (ba * r + sum(r * d * r for d in trail[:-1])
+                      + r * trail[-1])
+    else:
+        core_elems = ba * r + sum(d * r for d in trail)
 
     def project_bytes(tk: int, tb: int) -> int:
-        x_blk = tb * ba * d2 * d3
-        z = tk * tb * ba * d2 * r
-        v = tk * tb * ba * r
-        return 4 * (x_blk + z + v + tk * core_elems + tb * tk)
+        x_blk = tb * ba * _prod(trail)
+        sweep = sum(tk * tb * ba * _prod(trail[:j]) * r
+                    for j in range(len(trail)))
+        return 4 * (x_blk + sweep + tk * core_elems + tb * tk)
 
     def reconstruct_bytes(tk: int, tb: int) -> int:
-        m = tk * r * d2 * d3
+        m = sum(tk * r * _prod(trail[i:]) for i in range(len(trail) - 1))
         h = tb * ba * tk * r
-        out_blk = tb * ba * d2 * d3
+        out_blk = tb * ba * _prod(trail)
         return 4 * (m + h + tk * core_elems + out_blk + tb * tk)
 
     if kind == "project":
         footprint, first, second = project_bytes, "tb", "tk"
-    elif kind == "reconstruct":
-        footprint, first, second = reconstruct_bytes, "tk", "tb"
     else:
-        raise ValueError(f"unknown kind {kind!r}")
+        footprint, first, second = reconstruct_bytes, "tk", "tb"
     for axis in (first, second):
         while footprint(tk, tb) > budget:
             if axis == "tb" and tb > 1:
@@ -110,17 +241,43 @@ def pick_tiles(k: int, b: int, dims: tuple[int, ...], rank: int, *,
             else:
                 break
     if footprint(tk, tb) > budget:
-        # tb/tk are at their floors and the untiled d2/d3 modes alone exceed
-        # the budget — compiles in interpret mode, but on real TPU hardware
-        # expect a VMEM allocation failure; surface the cause here, next to
-        # the dims that chose it, rather than deep in the Mosaic compiler.
+        # tb/tk are at their floors and the untiled trailing modes alone
+        # exceed the budget — compiles in interpret mode, but on real TPU
+        # hardware expect a VMEM allocation failure; surface the cause here,
+        # next to the dims that chose it, not deep in the Mosaic compiler.
         warnings.warn(
-            f"pick_tiles(kind={kind!r}): dims={tuple(dims)}, rank={r} need "
+            f"plan_contraction(kind={kind!r}): dims={dims}, rank={r} need "
             f"{footprint(tk, tb)} bytes of VMEM at the smallest tiling "
             f"(tk={tk}, tb={tb}, ba={ba}) > budget {budget}; the kernel may "
-            "not fit on real TPU hardware — use smaller trailing modes",
+            "not fit on real TPU hardware — use smaller trailing modes or a "
+            "higher order (smaller modes) for the same bucket size",
             RuntimeWarning, stacklevel=2)
-    return tk, tb, ba
+    steps = (_project_steps(family, order) if kind == "project"
+             else _reconstruct_steps(family, order))
+    return ContractionPlan(family=family, kind=kind, k=k, b=b, dims=dims,
+                           rank=r, tk=tk, tb=tb, ba=ba, steps=steps,
+                           vmem_bytes=footprint(tk, tb))
+
+
+def pick_tiles(k: int, b: int, dims: tuple[int, ...], rank: int, *,
+               kind: str = "project", family: str = "tt",
+               budget: int = VMEM_BUDGET_BYTES) -> tuple[int, int, int]:
+    """VMEM-budgeted (tk, tb, ba) for an order-N batched kernel — the tile
+    view of `plan_contraction` (kept as the stable public selector)."""
+    plan = plan_contraction(family, kind, k, b, dims, rank, budget=budget)
+    return plan.tk, plan.tb, plan.ba
+
+
+# ---------------------------------------------------------------------------
+# operator-container layouts
+# ---------------------------------------------------------------------------
+
+def tt_cores_squeezed(op: TTRP) -> tuple[jnp.ndarray, ...]:
+    """Kernel layout of TT cores: boundary bonds (r_0 = r_N = 1) squeezed —
+    (k, d1, R), interior (k, R, dn, R), (k, R, dN). Requires order >= 2."""
+    cores = op.cores
+    return ((cores[0][:, 0, :, :],) + tuple(cores[1:-1])
+            + (cores[-1][:, :, :, 0],))
 
 
 def _as_batch(x: jnp.ndarray, ndim: int) -> tuple[jnp.ndarray, bool]:
@@ -131,58 +288,78 @@ def _as_batch(x: jnp.ndarray, ndim: int) -> tuple[jnp.ndarray, bool]:
     return x, True
 
 
+def _pad_operands(plan: ContractionPlan, cores) -> list[jnp.ndarray]:
+    """Pad every core's k axis to the k tile and the leading core's mode
+    axis to the leading-mode tile (zero rows are inert under a linear map)."""
+    padded = [_pad_axis(c, 0, plan.tk) for c in cores]
+    padded[0] = _pad_axis(padded[0], 1, plan.ba)
+    return padded
+
+
 # ---------------------------------------------------------------------------
 # projections
 # ---------------------------------------------------------------------------
 
-def tt_project(op: TTRP, x: jnp.ndarray, *, interpret: bool = True,
-               use_kernel: bool = True) -> jnp.ndarray:
-    """f_TT(R)(x) for dense order-3 input(s) via the batched Pallas kernel.
-
-    x: (d1,d2,d3) -> (k,)  or  (B,d1,d2,d3) -> (B,k), one launch either way.
-    """
-    if op.order != 3 or not use_kernel:
-        return op.project(x)
+def _sweep_project(family, op, cores, x, interpret):
+    from .cp_sweep import cp_sweep_project
+    from .tt_sweep import tt_sweep_project
     k = op.k
-    g1 = op.cores[0][:, 0, :, :]          # (k, d1, R)
-    g2 = op.cores[1]                      # (k, R, d2, R)
-    g3 = op.cores[2][:, :, :, 0]          # (k, R, d3)
-    xb, batched = _as_batch(x, 3)
-    tk, tb, ba = pick_tiles(k, xb.shape[0], op.in_dims, op.rank,
-                            kind="project")
-    xk = _pad_axis(_pad_axis(xb, 0, tb), 1, ba)
-    g1k = _pad_axis(_pad_axis(g1, 0, tk), 1, ba)
-    g2k = _pad_axis(g2, 0, tk)
-    g3k = _pad_axis(g3, 0, tk)
-    y = tt_project3(xk, g1k, g2k, g3k, tk=tk, tb=tb, ba=ba,
-                    scale=1.0 / math.sqrt(k), interpret=interpret)
+    xb, batched = _as_batch(x, op.order)
+    plan = plan_contraction(family, "project", k, xb.shape[0], op.in_dims,
+                            op.rank)
+    xk = _pad_axis(_pad_axis(xb, 0, plan.tb), 1, plan.ba)
+    kern = tt_sweep_project if family == "tt" else cp_sweep_project
+    y = kern(xk, *_pad_operands(plan, cores), steps=plan.steps, tk=plan.tk,
+             tb=plan.tb, ba=plan.ba, scale=1.0 / math.sqrt(k),
+             interpret=interpret)
     y = y[:xb.shape[0], :k]
     return y if batched else y[0]
+
+
+def kernel_order_supported(order: int) -> bool:
+    """Orders the mode-sweep kernels cover; outside it (order-1 classical
+    Gaussian, order > MAX_ORDER) the wrappers fall back to einsum."""
+    return 2 <= order <= MAX_ORDER
+
+
+def tt_project(op: TTRP, x: jnp.ndarray, *, interpret: bool = True,
+               use_kernel: bool = True) -> jnp.ndarray:
+    """f_TT(R)(x) for dense order-N input(s) via the mode-sweep kernel.
+
+    x: (*dims) -> (k,)  or  (B, *dims) -> (B, k), one launch either way.
+    """
+    if not kernel_order_supported(op.order) or not use_kernel:
+        return op.project(x)
+    return _sweep_project("tt", op, tt_cores_squeezed(op), x, interpret)
 
 
 def cp_project(op: CPRP, x: jnp.ndarray, *, interpret: bool = True,
                use_kernel: bool = True) -> jnp.ndarray:
-    """f_CP(R)(x) for dense order-3 input(s) via the batched Pallas kernel."""
-    if op.order != 3 or not use_kernel:
+    """f_CP(R)(x) for dense order-N input(s) via the mode-sweep kernel."""
+    if not kernel_order_supported(op.order) or not use_kernel:
         return op.project(x)
-    k = op.k
-    f1, f2, f3 = op.factors
-    xb, batched = _as_batch(x, 3)
-    tk, tb, ba = pick_tiles(k, xb.shape[0], op.in_dims, op.rank,
-                            kind="project", family="cp")
-    xk = _pad_axis(_pad_axis(xb, 0, tb), 1, ba)
-    f1k = _pad_axis(_pad_axis(f1, 0, tk), 1, ba)
-    f2k = _pad_axis(f2, 0, tk)
-    f3k = _pad_axis(f3, 0, tk)
-    y = cp_project3(xk, f1k, f2k, f3k, tk=tk, tb=tb, ba=ba,
-                    scale=1.0 / math.sqrt(k), interpret=interpret)
-    y = y[:xb.shape[0], :k]
-    return y if batched else y[0]
+    return _sweep_project("cp", op, op.factors, x, interpret)
 
 
 # ---------------------------------------------------------------------------
 # adjoints
 # ---------------------------------------------------------------------------
+
+def _sweep_reconstruct(family, op, cores, y, interpret):
+    from .cp_sweep import cp_sweep_reconstruct
+    from .tt_sweep import tt_sweep_reconstruct
+    k = op.k
+    yb, batched = _as_batch(y, 1)
+    plan = plan_contraction(family, "reconstruct", k, yb.shape[0],
+                            op.in_dims, op.rank)
+    yk = _pad_axis(_pad_axis(yb, 0, plan.tb), 1, plan.tk)
+    kern = tt_sweep_reconstruct if family == "tt" else cp_sweep_reconstruct
+    out = kern(yk, *_pad_operands(plan, cores), steps=plan.steps, tk=plan.tk,
+               tb=plan.tb, ba=plan.ba, scale=1.0 / math.sqrt(k),
+               interpret=interpret)
+    out = out[:yb.shape[0], :op.in_dims[0]]
+    return out if batched else out[0]
+
 
 def tt_reconstruct(op: TTRP, y: jnp.ndarray, *, interpret: bool = True,
                    use_kernel: bool = True) -> jnp.ndarray:
@@ -191,49 +368,21 @@ def tt_reconstruct(op: TTRP, y: jnp.ndarray, *, interpret: bool = True,
     Batched sketches reconstruct in ONE launch; padding k with zero sketch
     entries keeps padded core rows inert (y multiplies every term).
     """
-    if op.order != 3 or not use_kernel:
+    if not kernel_order_supported(op.order) or not use_kernel:
         if y.ndim == 2:
             return jax.vmap(op.reconstruct)(y)
         return op.reconstruct(y)
-    k = op.k
-    g1 = op.cores[0][:, 0, :, :]
-    g2 = op.cores[1]
-    g3 = op.cores[2][:, :, :, 0]
-    yb, batched = _as_batch(y, 1)
-    tk, tb, ba = pick_tiles(k, yb.shape[0], op.in_dims, op.rank,
-                            kind="reconstruct")
-    yk = _pad_axis(_pad_axis(yb, 0, tb), 1, tk)
-    g1k = _pad_axis(_pad_axis(g1, 0, tk), 1, ba)
-    g2k = _pad_axis(g2, 0, tk)
-    g3k = _pad_axis(g3, 0, tk)
-    out = tt_reconstruct3(yk, g1k, g2k, g3k, tk=tk, tb=tb, ba=ba,
-                          scale=1.0 / math.sqrt(k), interpret=interpret)
-    d1 = op.in_dims[0]
-    out = out[:yb.shape[0], :d1]
-    return out if batched else out[0]
+    return _sweep_reconstruct("tt", op, tt_cores_squeezed(op), y, interpret)
 
 
 def cp_reconstruct(op: CPRP, y: jnp.ndarray, *, interpret: bool = True,
                    use_kernel: bool = True) -> jnp.ndarray:
     """Unbiased adjoint for sketch(es) of a CP operator; see tt_reconstruct."""
-    if op.order != 3 or not use_kernel:
+    if not kernel_order_supported(op.order) or not use_kernel:
         if y.ndim == 2:
             return jax.vmap(op.reconstruct)(y)
         return op.reconstruct(y)
-    k = op.k
-    f1, f2, f3 = op.factors
-    yb, batched = _as_batch(y, 1)
-    tk, tb, ba = pick_tiles(k, yb.shape[0], op.in_dims, op.rank,
-                            kind="reconstruct", family="cp")
-    yk = _pad_axis(_pad_axis(yb, 0, tb), 1, tk)
-    f1k = _pad_axis(_pad_axis(f1, 0, tk), 1, ba)
-    f2k = _pad_axis(f2, 0, tk)
-    f3k = _pad_axis(f3, 0, tk)
-    out = cp_reconstruct3(yk, f1k, f2k, f3k, tk=tk, tb=tb, ba=ba,
-                          scale=1.0 / math.sqrt(k), interpret=interpret)
-    d1 = op.in_dims[0]
-    out = out[:yb.shape[0], :d1]
-    return out if batched else out[0]
+    return _sweep_reconstruct("cp", op, op.factors, y, interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -242,13 +391,15 @@ def cp_reconstruct(op: CPRP, y: jnp.ndarray, *, interpret: bool = True,
 
 def tt_dot(op: TTRP, x: TTTensor, *, interpret: bool = True,
            use_kernel: bool = True) -> jnp.ndarray:
-    """f_TT(R)(X) for a TT-format order-3 input via the Pallas kernel."""
+    """f_TT(R)(X) for a TT-format order-3 input via the Pallas kernel.
+
+    (The TT-input kernel is still order-3 only; other orders take the
+    transfer-matrix einsum chain, which is already rank-bounded.)
+    """
     if op.order != 3 or x.order != 3 or not use_kernel:
         return op.project_tt(x)
     k = op.k
-    g1 = op.cores[0][:, 0, :, :]
-    g2 = op.cores[1]
-    g3 = op.cores[2][:, :, :, 0]
+    g1, g2, g3 = tt_cores_squeezed(op)
     tk = _lane_tile(k)
     g1k = _pad_axis(g1, 0, tk)
     g2k = _pad_axis(g2, 0, tk)
@@ -258,5 +409,7 @@ def tt_dot(op: TTRP, x: TTTensor, *, interpret: bool = True,
     return y[:k] / jnp.sqrt(jnp.asarray(k, y.dtype))
 
 
-__all__ = ["tt_project", "cp_project", "tt_reconstruct", "cp_reconstruct",
-           "tt_dot", "pick_tiles", "ref", "VMEM_BUDGET_BYTES"]
+__all__ = ["ContractionPlan", "MAX_ORDER", "VMEM_BUDGET_BYTES",
+           "cp_project", "cp_reconstruct", "kernel_order_supported",
+           "pick_tiles", "plan_contraction", "ref", "tt_cores_squeezed",
+           "tt_dot", "tt_project", "tt_reconstruct"]

@@ -1,8 +1,9 @@
 """Pure-jnp oracles for the Pallas kernels. Deliberately straightforward
-einsum chains — the kernels must match these to ~1e-5 in f32.
+einsum chains, order-generic — the mode-sweep kernels must match these to
+~1e-5 in f32 at any order N >= 2.
 
-Layouts match repro.core:
-  TT-RP cores:  g1 (k, d1, R), g2 (k, R, d2, R), g3 (k, R, d3)   (order-3 case)
+Layouts match the kernel layouts (`ops.tt_cores_squeezed` / `op.factors`):
+  TT-RP cores:   g1 (k, d1, R), interior (k, R, d_n, R), gN (k, R, dN)
   CP-RP factors: f_n (k, d_n, R)
   TT input cores: x1 (1, d1, Rx), x2 (Rx, d2, Rx), x3 (Rx, d3, 1)
 The 1/sqrt(k) JLT scaling is applied by ops.py, NOT here (kernels and refs
@@ -12,44 +13,55 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-
-def tt_project3_ref(x: jnp.ndarray, g1: jnp.ndarray, g2: jnp.ndarray,
-                    g3: jnp.ndarray) -> jnp.ndarray:
-    """y[i] = sum_{abc,rs} g1[i,a,r] g2[i,r,b,s] g3[i,s,c] x[a,b,c]."""
-    z = jnp.einsum("abc,ksc->kabs", x, g3)
-    v = jnp.einsum("kabs,krbs->kar", z, g2)
-    return jnp.einsum("kar,kar->k", v, g1)
+_MODES = "abcdefgh"
 
 
-def cp_project3_ref(x: jnp.ndarray, f1: jnp.ndarray, f2: jnp.ndarray,
-                    f3: jnp.ndarray) -> jnp.ndarray:
-    """y[i] = sum_r <f1[i,:,r] o f2[i,:,r] o f3[i,:,r], x>."""
-    z = jnp.einsum("abc,kcr->kabr", x, f3)
-    v = jnp.einsum("kabr,kbr->kar", z, f2)
-    return jnp.einsum("kar,kar->k", v, f1)
+def tt_project_ref(x: jnp.ndarray, cores) -> jnp.ndarray:
+    """y[i] = < <<G_i^1, ..., G_i^N>>, x >, unbatched x, squeezed cores."""
+    order = len(cores)
+    modes = _MODES[:order]
+    z = jnp.einsum(f"{modes},ku{modes[-1]}->k{modes[:-1]}u", x, cores[-1])
+    carry = "u"
+    for i in range(order - 2, 0, -1):
+        new = "v" if carry == "u" else "u"
+        z = jnp.einsum(f"k{modes[:i + 1]}{carry},k{new}{modes[i]}{carry}"
+                       f"->k{modes[:i]}{new}", z, cores[i])
+        carry = new
+    return jnp.einsum(f"ka{carry},ka{carry}->k", z, cores[0])
 
 
-def tt_reconstruct3_ref(y: jnp.ndarray, g1: jnp.ndarray, g2: jnp.ndarray,
-                        g3: jnp.ndarray) -> jnp.ndarray:
-    """x_hat[n,a,b,c] = sum_{k,r,s} y[n,k] g1[k,a,r] g2[k,r,b,s] g3[k,s,c]."""
-    w = jnp.einsum("nk,kar->nkar", y, g1)
-    w = jnp.einsum("nkar,krbs->nkabs", w, g2)
-    return jnp.einsum("nkabs,ksc->nabc", w, g3)
+def cp_project_ref(x: jnp.ndarray, factors) -> jnp.ndarray:
+    """y[i] = sum_r <f1[i,:,r] o ... o fN[i,:,r], x>, unbatched x."""
+    order = len(factors)
+    modes = _MODES[:order]
+    z = jnp.einsum(f"{modes},k{modes[-1]}r->k{modes[:-1]}r", x, factors[-1])
+    for i in range(order - 2, 0, -1):
+        z = jnp.einsum(f"k{modes[:i + 1]}r,k{modes[i]}r->k{modes[:i]}r",
+                       z, factors[i])
+    return jnp.einsum("kar,kar->k", z, factors[0])
 
 
-def cp_reconstruct3_ref(y: jnp.ndarray, f1: jnp.ndarray, f2: jnp.ndarray,
-                        f3: jnp.ndarray) -> jnp.ndarray:
-    """x_hat[n,a,b,c] = sum_{k,r} y[n,k] f1[k,a,r] f2[k,b,r] f3[k,c,r]."""
-    w = jnp.einsum("nk,kar->nkar", y, f1)
-    w = jnp.einsum("nkar,kbr->nkabr", w, f2)
-    return jnp.einsum("nkabr,kcr->nabc", w, f3)
+def tt_reconstruct_ref(y: jnp.ndarray, cores) -> jnp.ndarray:
+    """x_hat[n,...] = sum_{i, bonds} y[n,i] g1[i,·] ... gN[i,·], y (B, k)."""
+    w = jnp.einsum("nk,kar->nkar", y, cores[0])
+    for g in cores[1:-1]:
+        w = jnp.einsum("nk...r,krds->nk...ds", w, g)
+    return jnp.einsum("nk...r,krd->n...d", w, cores[-1])
+
+
+def cp_reconstruct_ref(y: jnp.ndarray, factors) -> jnp.ndarray:
+    """x_hat[n,...] = sum_{i,r} y[n,i] f1[i,·,r] ... fN[i,·,r], y (B, k)."""
+    w = jnp.einsum("nk,kar->nkar", y, factors[0])
+    for f in factors[1:-1]:
+        w = jnp.einsum("nk...r,kdr->nk...dr", w, f)
+    return jnp.einsum("nk...r,kdr->n...d", w, factors[-1])
 
 
 def tt_dot3_ref(x1: jnp.ndarray, x2: jnp.ndarray, x3: jnp.ndarray,
                 g1: jnp.ndarray, g2: jnp.ndarray, g3: jnp.ndarray) -> jnp.ndarray:
     """Batched <TT_i, X_tt> via transfer matrices, order 3.
 
-    x1 (1,d1,Rx) x2 (Rx,d2,Rx) x3 (Rx,d3,1); g as in tt_project3_ref.
+    x1 (1,d1,Rx) x2 (Rx,d2,Rx) x3 (Rx,d3,1); g in the squeezed layout above.
     """
     xa = x1[0]                     # (d1, Rx)
     t = jnp.einsum("kdr,de->kre", g1, xa)            # (k, R, Rx)

@@ -1,0 +1,69 @@
+"""Pallas TPU kernels: order-N batched dense-input TT projection + adjoint.
+
+These replace the retired order-3 `tt_project3` / `tt_reconstruct3` kernels
+with a mode-sweep pair driven by the contraction planner in `ops.py`: the
+planner emits the einsum program (`plan.steps`) and the VMEM-budgeted tiles
+for a static order N, and the shared machinery in `_sweep.py` lays that
+program out on the TPU grid.
+
+Projection — y[n,i] = scale * sum g1[i,a,u] g2[i,u,b,v] ... gN[i,·,z]
+x[n,a,b,...,z], i in [k], n in [B]:
+
+* grid = (k/TK, B/TB, d1/BA): the k-tile index is OUTERMOST so the per-tile
+  cores — whose block index depends only on ik — stay resident in VMEM
+  while the whole batch streams through. TK=128 puts k on the lane axis so
+  every sweep step is an MXU/VPU op; the batch tile TB enlarges each
+  contraction (TB*BA rows instead of BA) toward the 128x128 systolic shape.
+* The sweep contracts the rightmost mode first, carrying the R-sized TT
+  bond between steps; intermediates shrink by one mode per step, so the
+  first step's (TK, TB, BA, d2..d_{N-1}, R) block is the VMEM peak the
+  planner budgets for. Accumulation over d1 happens in the revisited
+  (TB, TK) output block (ia is the innermost grid axis).
+
+Reconstruction — x_hat[n,a,b,...] = scale * sum_i y[n,i] g1[i,a,u] ... :
+
+* grid = (B/TB, d1/BA, k/TK), k-tile INNERMOST; per-k-tile partial sums
+  accumulate in the revisited (TB, BA, d2..dN) output block.
+* The N-1 trailing cores are pre-fused once per instance into the transfer
+  block m[i,u,d2..dN] — independent of batch AND of the d1 tile; the rest
+  is one (TB*BA, TK*R) x (TK*R, prod(d2..dN)) MXU contraction. m dominates
+  VMEM, so the planner shrinks TK first for this direction.
+
+Core layout is `ops.tt_cores_squeezed`: (k, d1, R), interior (k, R, d, R),
+(k, R, dN). `scale` fuses the JLT 1/sqrt(k) into the epilogue. `interpret`
+defaults to the caller's choice (True off-TPU). Validated against `ref.py`.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ._sweep import sweep_project, sweep_reconstruct
+
+
+def tt_sweep_project(x: jnp.ndarray, *cores: jnp.ndarray, steps,
+                     tk: int = 128, tb: int = 4, ba: int = 8,
+                     scale: float = 1.0,
+                     interpret: bool = True) -> jnp.ndarray:
+    """Batched order-N TT contraction; ops.py plans steps/tiles and pads.
+
+    x (B, d1, ..., dN); cores squeezed. Requires k%tk==0, B%tb==0, d1%ba==0.
+    `scale` (static) is fused into the epilogue — pass 1/sqrt(k_logical) for
+    the JLT scaling, 1.0 for the raw contraction. Returns (B, k) float32.
+    """
+    return sweep_project(x, *cores, steps=steps, tk=tk, tb=tb, ba=ba,
+                         scale=scale, interpret=interpret)
+
+
+def tt_sweep_reconstruct(y: jnp.ndarray, *cores: jnp.ndarray, steps,
+                         tk: int = 32, tb: int = 4, ba: int = 8,
+                         scale: float = 1.0,
+                         interpret: bool = True) -> jnp.ndarray:
+    """Batched order-N TT adjoint; y (B, k), cores squeezed.
+
+    Padding k with zero sketch entries (and arbitrary core rows) is safe:
+    the sketch multiplies every term. `scale` is fused — pass
+    1/sqrt(k_logical). Returns (B, d1, ..., dN) float32.
+    """
+    trail = tuple(int(c.shape[2]) for c in cores[1:])
+    return sweep_reconstruct(y, *cores, steps=steps, trail=trail, tk=tk,
+                             tb=tb, ba=ba, scale=scale, interpret=interpret)

@@ -62,7 +62,7 @@ def main(argv=None) -> int:
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--compress", default=None,
-                    help="tt:k=...,rank=...[,dims=AxBxC]")
+                    help="tt:k=...,rank=...[,dims=AxBxC][,order=N]")
     ap.add_argument("--remat", default="nothing")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--crash-at", type=int, default=None,

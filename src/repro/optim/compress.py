@@ -39,14 +39,38 @@ import jax.numpy as jnp
 from repro.core.sketch import PytreeSketcher, SketchConfig
 
 
+def _balanced_pow2_dims(elems: int, order: int) -> tuple[int, ...]:
+    """Tensorize a power-of-two bucket into `order` balanced pow2 modes.
+
+    Spreads the exponent as evenly as possible, larger modes first —
+    order=3 over the default 2^20 bucket reproduces the classic
+    (128, 128, 64); order=4 gives (32, 32, 32, 32).
+    """
+    if order < 1:
+        raise ValueError(f"order must be a positive integer, got {order}")
+    e = elems.bit_length() - 1
+    if elems <= 0 or (1 << e) != elems:
+        raise ValueError(
+            f"order= without dims= needs a power-of-two bucket, got {elems}")
+    base, extra = divmod(e, order)
+    if base == 0:
+        raise ValueError(f"order={order} is too high for a {elems}-element "
+                         "bucket (a mode would collapse to 1)")
+    return tuple(1 << (base + (1 if i < extra else 0)) for i in range(order))
+
+
 def parse_compress_flag(flag: str) -> SketchConfig:
-    """'<family>:k=4096,rank=2[,dims=128x128x64]' -> SketchConfig.
+    """'<family>:k=4096,rank=2[,dims=128x128x64][,order=4]' -> SketchConfig.
 
     `family` is any registered repro.rp family ('tt', 'cp', 'gaussian',
     'sparse', ...); SketchConfig validates it against the registry.
+    `order=N` without `dims=` tensorizes the default bucket into N balanced
+    power-of-two modes (the order-N kernel path: same bucket/compression,
+    smaller operator); with `dims=` it just cross-checks len(dims) == N.
     """
     family, _, rest = flag.partition(":")
     kw: dict[str, Any] = {"family": family}
+    order: int | None = None
     if rest:
         for part in rest.split(","):
             key, _, val = part.partition("=")
@@ -58,6 +82,19 @@ def parse_compress_flag(flag: str) -> SketchConfig:
                     kw["bucket_elems"] *= d
             elif key in ("k", "rank"):
                 kw[key] = int(val)
+            elif key == "order":
+                order = int(val)
+    if order is not None:
+        if "dims" in kw:
+            if len(kw["dims"]) != order:
+                raise ValueError(
+                    f"order={order} contradicts dims="
+                    f"{'x'.join(map(str, kw['dims']))} (order "
+                    f"{len(kw['dims'])})")
+        else:
+            elems = SketchConfig.__dataclass_fields__["bucket_elems"].default
+            kw["dims"] = _balanced_pow2_dims(elems, order)
+            kw["bucket_elems"] = elems
     return SketchConfig(**kw)
 
 

@@ -3,7 +3,9 @@
 One protocol (`RPOperator`), one declarative spec (`ProjectorSpec`), a
 registry (`register_family` / `make_projector`), and a structure-dispatched
 functional entry point (`project` / `reconstruct`) with backend routing
-('auto' | 'pallas' | 'xla') to the Pallas TPU kernels.
+('auto' | 'pallas' | 'xla') to the order-N mode-sweep Pallas TPU kernels.
+Dispatch instrumentation is context-local (`DispatchStats` /
+`dispatch_stats()` / `kernel_call_count()`).
 
 Quickstart::
 
@@ -26,13 +28,15 @@ per-format method zoo (`project_tt` / `project_cp`) is deprecated in favor
 of `rp.project` and kept for one release.
 """
 from . import families as _families  # noqa: F401  (registers built-ins)
-from .dispatch import (force_pallas, kernel_call_count, project, reconstruct)
+from .dispatch import (DispatchStats, current_stats, dispatch_stats,
+                       force_pallas, kernel_call_count, project, reconstruct)
 from .protocol import FormatMismatchError, ProjectorSpec, RPOperator
 from .registry import (get_family, list_families, make_projector,
                        register_family)
 
 __all__ = [
-    "FormatMismatchError", "ProjectorSpec", "RPOperator", "force_pallas",
-    "get_family", "kernel_call_count", "list_families", "make_projector",
-    "project", "reconstruct", "register_family",
+    "DispatchStats", "FormatMismatchError", "ProjectorSpec", "RPOperator",
+    "current_stats", "dispatch_stats", "force_pallas", "get_family",
+    "kernel_call_count", "list_families", "make_projector", "project",
+    "reconstruct", "register_family",
 ]

@@ -8,29 +8,38 @@ typed `FormatMismatchError` on incompatible shapes.
 
 Backend policy (`backend='auto' | 'pallas' | 'xla'`)
 ---------------------------------------------------
-Dense-input order-3 projections of the TT/CP families have batched Pallas
-TPU kernels (`repro.kernels.tt_project` / `cp_project` — `(*batch, *dims)`
+Dense-input projections of the TT/CP families at any kernel-supported
+order (2 <= N <= `repro.kernels.MAX_ORDER`) have batched mode-sweep Pallas
+kernels (`repro.kernels.tt_project` / `cp_project` — `(*batch, *dims)`
 inputs run in ONE launch with a native batch grid axis, never vmap); the
-adjoints route the same way through `tt_reconstruct` / `cp_reconstruct` for
-`(*batch, k)` sketches; structured TT input has `tt_dot`. Routing:
+adjoints route the same way through `tt_reconstruct` / `cp_reconstruct`
+for `(*batch, k)` sketches; structured TT input has `tt_dot` (order 3).
+Routing:
 
 * 'xla'    — always the einsum path.
-* 'pallas' — always the kernel (the kernels' own wrappers fall back to
-             einsum for unsupported orders); interpret mode off-TPU.
+* 'pallas' — always the kernel (operators outside the supported order
+             range — order-1 classical Gaussian, order > MAX_ORDER — take
+             the einsum path); interpret mode off-TPU.
 * 'auto'   — the kernel iff the shapes are MXU-aligned (k a multiple of the
-             128 lane width, every mode a multiple of the 8 sublanes) AND we
-             are on real TPU hardware. Off-TPU the kernels only run in
-             interpret mode — a validation device, not a fast path — so
-             'auto' stays on XLA there unless `force_pallas()` is active
-             (which tests use to prove the routing).
+             128 lane width, every mode a multiple of the 8 sublanes, order
+             >= 2) AND we are on real TPU hardware. Off-TPU the kernels
+             only run in interpret mode — a validation device, not a fast
+             path — so 'auto' stays on XLA there unless `force_pallas()` is
+             active (which tests use to prove the routing).
 
-Every dispatch that routes to a kernel increments a module counter readable
-via `kernel_call_count()` so tests can assert the route actually taken
-(counted at trace time — cached jit executions don't re-dispatch).
+Instrumentation is CONTEXT-LOCAL: a `DispatchStats` object held in a
+`contextvars.ContextVar` carries the kernel-dispatch counter and the
+force-pallas depth. `kernel_call_count()` reads the current context's
+counter (counted at trace time — cached jit executions don't re-dispatch);
+`dispatch_stats()` installs a fresh, isolated object for a dynamic scope so
+parallel tests and nested contexts can't corrupt each other's counts, and
+`force_pallas()` is depth-counted so nesting composes.
 """
 from __future__ import annotations
 
 import contextlib
+import contextvars
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -43,20 +52,62 @@ from .protocol import FormatMismatchError, RPOperator
 
 _BACKENDS = ("auto", "pallas", "xla")
 
-# Instrumentation: number of projections routed through a Pallas kernel.
-_KERNEL_CALLS = 0
-# When True, 'auto' may pick the (interpret-mode) kernel off-TPU.
-_FORCE_PALLAS = False
+
+@dataclasses.dataclass
+class DispatchStats:
+    """Context-local dispatch instrumentation.
+
+    kernel_calls : number of `project`/`reconstruct` dispatches that routed
+                   to a Pallas kernel in this context.
+    force_depth  : nesting depth of active `force_pallas()` scopes; > 0
+                   lets 'auto' pick the interpret-mode kernel off-TPU.
+    """
+
+    kernel_calls: int = 0
+    force_depth: int = 0
+
+    @property
+    def force_pallas(self) -> bool:
+        return self.force_depth > 0
+
+
+# The root stats is the default for code that never opens a dispatch_stats()
+# scope; scopes (and anything run under contextvars.copy_context / asyncio
+# tasks that set one) get their own isolated object.
+_ROOT_STATS = DispatchStats()
+_STATS: contextvars.ContextVar[DispatchStats] = contextvars.ContextVar(
+    "repro_rp_dispatch_stats", default=_ROOT_STATS)
+
+
+def current_stats() -> DispatchStats:
+    """The `DispatchStats` object active in the current context."""
+    return _STATS.get()
 
 
 def kernel_call_count() -> int:
-    """How many `project` dispatches routed to a Pallas kernel.
+    """How many dispatches routed to a Pallas kernel in this context.
 
     Counts at dispatch (trace) time: under `jax.jit` a cached executable
     re-runs without re-dispatching, so this proves *routing*, not
     per-execution kernel launches.
     """
-    return _KERNEL_CALLS
+    return _STATS.get().kernel_calls
+
+
+@contextlib.contextmanager
+def dispatch_stats():
+    """Install a fresh, isolated `DispatchStats` for the dynamic scope.
+
+    Yields the object; counts and force-pallas state inside the scope never
+    leak to (or read from) the enclosing context — use one per test when
+    tests may run in parallel.
+    """
+    stats = DispatchStats()
+    token = _STATS.set(stats)
+    try:
+        yield stats
+    finally:
+        _STATS.reset(token)
 
 
 @contextlib.contextmanager
@@ -64,15 +115,16 @@ def force_pallas():
     """Let `backend='auto'` select the interpret-mode kernel off-TPU.
 
     Used by tests to exercise/prove the Pallas route on CPU; on real TPU
-    hardware 'auto' selects the kernel by itself.
+    hardware 'auto' selects the kernel by itself. Depth-counted on the
+    context-local stats, so nested scopes compose and cannot clobber each
+    other.
     """
-    global _FORCE_PALLAS
-    prev = _FORCE_PALLAS
-    _FORCE_PALLAS = True
+    stats = _STATS.get()
+    stats.force_depth += 1
     try:
         yield
     finally:
-        _FORCE_PALLAS = prev
+        stats.force_depth -= 1
 
 
 def _on_tpu() -> bool:
@@ -80,13 +132,12 @@ def _on_tpu() -> bool:
 
 
 def _count_kernel() -> None:
-    global _KERNEL_CALLS
-    _KERNEL_CALLS += 1
+    _STATS.get().kernel_calls += 1
 
 
 def _mxu_aligned(op) -> bool:
     dims = op.in_dims
-    return (op.k % 128 == 0 and len(dims) == 3
+    return (op.k % 128 == 0 and len(dims) >= 2
             and all(d % 8 == 0 for d in dims))
 
 
@@ -94,13 +145,13 @@ def _use_kernel(backend: str, *, supported: bool, aligned: bool) -> bool:
     if backend not in _BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; expected {_BACKENDS}")
     if not supported:
-        # even for backend='pallas': unsupported orders take the einsum path
+        # even for backend='pallas': unsupported operators take einsum
         return False
     if backend == "pallas":
         return True
     if backend == "xla":
         return False
-    return aligned and (_on_tpu() or _FORCE_PALLAS)
+    return aligned and (_on_tpu() or _STATS.get().force_pallas)
 
 
 def _coerce_dense(op: RPOperator, x: jnp.ndarray) -> jnp.ndarray:
@@ -138,19 +189,26 @@ def _check_struct_dims(op: RPOperator, x) -> None:
             f"in_dims {tuple(op.in_dims)}")
 
 
+def _kernel_order_ok(n: int) -> bool:
+    # local import: repro.kernels is deliberately not a module-level dep
+    from repro.kernels import kernel_order_supported
+    return kernel_order_supported(n)
+
+
 def _project_dense(op: RPOperator, x: jnp.ndarray, backend: str) -> jnp.ndarray:
     xt = _coerce_dense(op, x)
     is_tn = isinstance(op, (TTRP, CPRP))
-    supported = (is_tn and op.order == 3 and xt.ndim >= 3)
+    n = op.order if is_tn else 0
+    supported = is_tn and _kernel_order_ok(n) and xt.ndim >= n
     if _use_kernel(backend, supported=supported, aligned=_mxu_aligned(op)):
         from repro.kernels import ops as kops  # local: avoids import cycle
         _count_kernel()
         interpret = not _on_tpu()
         kern = kops.tt_project if isinstance(op, TTRP) else kops.cp_project
-        if xt.ndim <= 4:  # single input or 1-D batch: native batch axis
+        if xt.ndim <= n + 1:  # single input or 1-D batch: native batch axis
             return kern(op, xt, interpret=interpret)
-        batch = xt.shape[:-3]
-        flat = xt.reshape((-1,) + xt.shape[-3:])
+        batch = xt.shape[:-n]
+        flat = xt.reshape((-1,) + xt.shape[-n:])
         return kern(op, flat, interpret=interpret).reshape(batch + (op.k,))
     return op.project(xt)
 
@@ -159,7 +217,7 @@ def project(op: RPOperator, x, *, backend: str = "auto") -> jnp.ndarray:
     """Project `x` with `op`, dispatching on the input's structure.
 
     x may be:
-      * a dense array `(*batch, *op.in_dims)`,
+      * a dense array `(*batch, *op.in_dims)` — any operator order,
       * a flat vector (auto-tensorized; short vectors are zero-padded),
       * a `TTTensor` (TT-format fast path for tensorized families),
       * a `CPTensor` (CP-format fast path for tensorized families).
@@ -197,18 +255,19 @@ def reconstruct(op: RPOperator, y: jnp.ndarray, *, chunk: int | None = None,
     """Unbiased adjoint reconstruction, `(*batch, k) -> (*batch, *in_dims)`.
 
     A `(k,)` sketch returns an `in_dims`-shaped estimate (the original
-    contract); batched sketches route to the batched Pallas adjoint kernels
-    (`tt_reconstruct3` / `cp_reconstruct3`) under the same backend policy as
-    `project` — ONE launch for the whole batch, no vmap — and otherwise fall
-    back to a vmap of the operator's einsum adjoint. `chunk` bounds the
-    k-sized intermediate on the einsum path (kernels tile k instead).
+    contract); batched sketches route to the batched mode-sweep adjoint
+    kernels (`tt_sweep_reconstruct` / `cp_sweep_reconstruct`, any order
+    N >= 2) under the same backend policy as `project` — ONE launch for the
+    whole batch, no vmap — and otherwise fall back to a vmap of the
+    operator's einsum adjoint. `chunk` bounds the k-sized intermediate on
+    the einsum path (kernels tile k instead).
     """
     y = jnp.asarray(y)
     if y.ndim < 1 or y.shape[-1] != op.k:
         raise FormatMismatchError(
             f"sketch shape {tuple(y.shape)} does not end in k = {op.k}")
     is_tn = isinstance(op, (TTRP, CPRP))
-    supported = is_tn and op.order == 3
+    supported = is_tn and _kernel_order_ok(op.order)
     if _use_kernel(backend, supported=supported, aligned=_mxu_aligned(op)):
         from repro.kernels import ops as kops  # local: avoids import cycle
         _count_kernel()

@@ -7,6 +7,12 @@ import pytest
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
 
+# `benchmarks` is a plain directory (run via `python -m benchmarks.run`);
+# make it importable for tests that exercise the bench harness even when
+# pytest was not launched from the repo root.
+if REPO not in sys.path:
+    sys.path.insert(0, REPO)
+
 
 def run_subprocess(code: str, devices: int = 8, timeout: int = 900):
     """Run a python snippet in a fresh process with N fake XLA devices.

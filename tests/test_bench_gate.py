@@ -1,0 +1,92 @@
+"""The CI bench-regression gate (benchmarks.check_regression) is pure
+record-diffing — test it directly on synthetic BENCH_rp records."""
+import copy
+
+import pytest
+
+from benchmarks.check_regression import check, main
+
+
+def _record():
+    return {
+        "schema": "bench_rp/v2",
+        "sections": {
+            "timing": [
+                {"name": "time/batched/tt/project/B=16", "us_per_call": 10.0,
+                 "derived": {"launches_batched": 1,
+                             "launches_per_bucket": 16}},
+                {"name": "time/order/tt/N=4", "us_per_call": 5.0,
+                 "derived": {"launches_project": 1,
+                             "launches_reconstruct": 1}},
+            ],
+            "smoke": [
+                {"name": "smoke/tt", "us_per_call": 1.0, "derived": {"k": 64}},
+            ],
+        },
+    }
+
+
+def test_identical_records_pass():
+    assert check(_record(), _record()) == []
+
+
+def test_wall_clock_noise_is_not_gated():
+    new = _record()
+    new["sections"]["timing"][0]["us_per_call"] = 9999.0
+    assert check(new, _record()) == []
+
+
+def test_schema_drift_fails():
+    new = _record()
+    new["schema"] = "bench_rp/v3"
+    assert any("schema drift" in e for e in check(new, _record()))
+
+
+def test_missing_section_and_row_fail():
+    new = _record()
+    del new["sections"]["smoke"]
+    errors = check(new, _record())
+    assert any("sections missing" in e for e in errors)
+    new2 = _record()
+    new2["sections"]["timing"] = new2["sections"]["timing"][:1]
+    assert any("rows missing" in e for e in check(new2, _record()))
+
+
+def test_malformed_record_fails():
+    new = _record()
+    new["sections"]["timing"].append({"raw": "oops"})
+    assert any("malformed" in e for e in check(new, _record()))
+
+
+def test_vanished_launch_metric_fails():
+    """A refactor that stops emitting a launch metric must not slip past
+    the very gate that metric feeds."""
+    new = _record()
+    del new["sections"]["timing"][0]["derived"]["launches_batched"]
+    errors = check(new, _record())
+    assert any("launches_batched" in e and "missing" in e for e in errors)
+
+
+def test_launch_count_regression_fails_only_past_2x():
+    base = _record()
+    doubled = copy.deepcopy(base)   # exactly 2x: allowed (threshold is >2x)
+    doubled["sections"]["timing"][0]["derived"]["launches_batched"] = 2
+    assert check(doubled, base) == []
+    worse = copy.deepcopy(base)
+    worse["sections"]["timing"][0]["derived"]["launches_batched"] = 3
+    errors = check(worse, base)
+    assert any("launches_batched regressed 1 -> 3" in e for e in errors)
+
+
+def test_main_exit_codes(tmp_path, capsys):
+    import json
+    good = tmp_path / "good.json"
+    good.write_text(json.dumps(_record()))
+    main([str(good), str(good)])
+    assert "bench-regression: OK" in capsys.readouterr().out
+    bad = _record()
+    bad["schema"] = "nope"
+    bad_p = tmp_path / "bad.json"
+    bad_p.write_text(json.dumps(bad))
+    with pytest.raises(SystemExit):
+        main([str(bad_p), str(good)])

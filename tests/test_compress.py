@@ -19,6 +19,36 @@ def test_parse_flag():
     assert c.dims == (32, 16, 8) and c.bucket_elems == 32 * 16 * 8
 
 
+def test_parse_flag_order_field():
+    """order=N tensorizes the default bucket into N balanced pow2 modes
+    (the order-N kernel path); with dims= it only cross-checks."""
+    c = parse_compress_flag("tt:k=1024,rank=2,order=4")
+    assert c.dims == (32, 32, 32, 32) and c.bucket_elems == 128 * 128 * 64
+    c5 = parse_compress_flag("cp:order=5")
+    assert c5.dims == (16, 16, 16, 16, 16)
+    assert c5.bucket_elems == 128 * 128 * 64
+    # order=3 over the default bucket reproduces the classic tensorization
+    assert parse_compress_flag("tt:order=3").dims == (128, 128, 64)
+    # consistent/contradictory explicit dims
+    ok = parse_compress_flag("tt:dims=8x8x8x8,order=4")
+    assert ok.dims == (8, 8, 8, 8) and ok.bucket_elems == 8 ** 4
+    with pytest.raises(ValueError, match="contradicts"):
+        parse_compress_flag("tt:dims=32x16x8,order=4")
+    # nonsense orders get a clear error, not a ZeroDivision/shift traceback
+    for bad in ("order=0", "order=-2"):
+        with pytest.raises(ValueError, match="positive integer"):
+            parse_compress_flag(f"tt:{bad}")
+
+
+def test_parse_flag_order_shrinks_operator():
+    """Same bucket, higher order => strictly smaller TT/CP operator (core
+    params scale with the SUM of the modes) — the memory axis the order-N
+    kernel layer unlocks."""
+    params = [parse_compress_flag(f"tt:k=1024,rank=2,order={n}"
+                                  ).operator_params() for n in (2, 3, 4, 5)]
+    assert all(b < a for a, b in zip(params, params[1:])), params
+
+
 def test_shrunk_roundtrip_is_contractive():
     """||x - alpha*A^T A x|| < ||x|| on average (the EF requirement); the
     UNSHRUNK roundtrip is an expansion at this D/k — the paper's Thm-1

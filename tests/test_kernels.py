@@ -1,7 +1,7 @@
-"""Pallas kernels vs pure-jnp oracle (ref.py), interpret=True on CPU.
+"""Mode-sweep Pallas kernels vs pure-jnp oracle (ref.py), interpret=True.
 
-Sweeps shapes (aligned and ragged), k values (padding path), ranks, batch
-sizes (ragged B included), and the batched adjoint kernels.
+Sweeps orders 2-5, shapes (aligned and ragged), k values (padding path),
+ranks, batch sizes (ragged B included), both directions, and the planner.
 """
 import jax
 import jax.numpy as jnp
@@ -9,8 +9,9 @@ import numpy as np
 import pytest
 
 from repro.core import TTTensor, random_tt, sample_cp_rp, sample_tt_rp
-from repro.kernels import (cp_project, cp_reconstruct, pick_tiles, ref,
-                           tt_dot, tt_project, tt_reconstruct)
+from repro.kernels import (cp_project, cp_reconstruct, pick_tiles,
+                           plan_contraction, ref, tt_cores_squeezed, tt_dot,
+                           tt_project, tt_reconstruct)
 
 SHAPES = [
     (16, 32, 24),      # ragged-ish
@@ -18,6 +19,10 @@ SHAPES = [
     (32, 16, 16),
 ]
 KS = [64, 128, 200]
+
+# one ragged shape per order 2-5 (every mode-count hits the sweep loop
+# differently: no interior cores, one, two, three)
+ORDER_SHAPES = [(16, 24), (16, 32, 24), (8, 6, 4, 10), (4, 6, 4, 8, 4)]
 
 
 @pytest.mark.parametrize("dims", SHAPES)
@@ -27,10 +32,7 @@ def test_tt_project_kernel(dims, k, rank):
     op = sample_tt_rp(jax.random.PRNGKey(0), dims, k, rank)
     x = jax.random.normal(jax.random.PRNGKey(1), dims)
     got = tt_project(op, x)
-    g1 = op.cores[0][:, 0, :, :]
-    g2 = op.cores[1]
-    g3 = op.cores[2][:, :, :, 0]
-    want = ref.tt_project3_ref(x, g1, g2, g3) / jnp.sqrt(float(k))
+    want = ref.tt_project_ref(x, tt_cores_squeezed(op)) / jnp.sqrt(float(k))
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=3e-5, atol=3e-5)
     np.testing.assert_allclose(np.asarray(got), np.asarray(op.project(x)),
@@ -44,7 +46,7 @@ def test_cp_project_kernel(dims, k, rank):
     op = sample_cp_rp(jax.random.PRNGKey(0), dims, k, rank)
     x = jax.random.normal(jax.random.PRNGKey(1), dims)
     got = cp_project(op, x)
-    want = ref.cp_project3_ref(x, *op.factors) / jnp.sqrt(float(k))
+    want = ref.cp_project_ref(x, op.factors) / jnp.sqrt(float(k))
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=3e-5, atol=3e-5)
 
@@ -56,10 +58,7 @@ def test_tt_dot_kernel(dims, k, rx):
     op = sample_tt_rp(jax.random.PRNGKey(0), dims, k, 2)
     x = random_tt(jax.random.PRNGKey(2), dims, rx)
     got = tt_dot(op, x)
-    g1 = op.cores[0][:, 0, :, :]
-    g2 = op.cores[1]
-    g3 = op.cores[2][:, :, :, 0]
-    want = ref.tt_dot3_ref(*x.cores, g1, g2, g3) / jnp.sqrt(float(k))
+    want = ref.tt_dot3_ref(*x.cores, *tt_cores_squeezed(op)) / jnp.sqrt(float(k))
     # f32 accumulation-order differences reach ~1e-4 relative on the larger
     # (dims, rx) cells; 3e-5 was flaky on the seed.
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
@@ -69,25 +68,74 @@ def test_tt_dot_kernel(dims, k, rx):
 
 
 # ---------------------------------------------------------------------------
-# batched kernels vs vmap-of-reference (interpret mode)
+# order-N sweep: batched kernels vs vmap-of-reference (interpret mode)
 # ---------------------------------------------------------------------------
 
 BATCHES = [1, 3, 5, 16]   # ragged (3, 5) exercise batch-tile padding
+
+
+@pytest.mark.parametrize("b", [1, 3])
+@pytest.mark.parametrize("dims", ORDER_SHAPES)
+@pytest.mark.parametrize("k", [96, 200])
+def test_tt_sweep_all_orders_vs_refs(b, dims, k):
+    """Order 2-5 project AND reconstruct == references and the operator's
+    own einsum paths (non-power-of-two k covers the k-padding path)."""
+    op = sample_tt_rp(jax.random.PRNGKey(0), dims, k, 2)
+    cores = tt_cores_squeezed(op)
+    xb = jax.random.normal(jax.random.PRNGKey(1), (b,) + dims)
+    got = tt_project(op, xb)
+    assert got.shape == (b, k)
+    want = jax.vmap(lambda x: ref.tt_project_ref(x, cores))(xb)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(want) / np.sqrt(float(k)),
+                               rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(op.project(xb)),
+                               rtol=2e-4, atol=2e-4)
+    y = jax.random.normal(jax.random.PRNGKey(2), (b, k))
+    gr = tt_reconstruct(op, y)
+    assert gr.shape == (b,) + dims
+    wr = ref.tt_reconstruct_ref(y, cores) / np.sqrt(float(k))
+    np.testing.assert_allclose(np.asarray(gr), np.asarray(wr),
+                               rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(np.asarray(gr),
+                               np.asarray(jax.vmap(op.reconstruct)(y)),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("b", [1, 3])
+@pytest.mark.parametrize("dims", ORDER_SHAPES)
+@pytest.mark.parametrize("k", [96, 200])
+def test_cp_sweep_all_orders_vs_refs(b, dims, k):
+    op = sample_cp_rp(jax.random.PRNGKey(0), dims, k, 3)
+    xb = jax.random.normal(jax.random.PRNGKey(1), (b,) + dims)
+    got = cp_project(op, xb)
+    assert got.shape == (b, k)
+    want = jax.vmap(lambda x: ref.cp_project_ref(x, op.factors))(xb)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(want) / np.sqrt(float(k)),
+                               rtol=3e-5, atol=3e-5)
+    y = jax.random.normal(jax.random.PRNGKey(2), (b, k))
+    gr = cp_reconstruct(op, y)
+    assert gr.shape == (b,) + dims
+    wr = ref.cp_reconstruct_ref(y, op.factors) / np.sqrt(float(k))
+    np.testing.assert_allclose(np.asarray(gr), np.asarray(wr),
+                               rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(np.asarray(gr),
+                               np.asarray(jax.vmap(op.reconstruct)(y)),
+                               rtol=2e-4, atol=2e-4)
 
 
 @pytest.mark.parametrize("b", BATCHES)
 @pytest.mark.parametrize("dims,k", [((16, 32, 24), 200), ((8, 128, 64), 128)])
 def test_tt_project_batched_vs_vmap_ref(b, dims, k):
     """Batched kernel == vmap of the unbatched reference, with the fused
-    1/sqrt(k) scaling (non-power-of-two k=200 covers the k-padding path)."""
+    1/sqrt(k) scaling (ragged B exercises the batch-tile padding)."""
     op = sample_tt_rp(jax.random.PRNGKey(0), dims, k, 2)
+    cores = tt_cores_squeezed(op)
     xb = jax.random.normal(jax.random.PRNGKey(1), (b,) + dims)
     got = tt_project(op, xb)
     assert got.shape == (b, k)
-    g1 = op.cores[0][:, 0, :, :]
-    g2 = op.cores[1]
-    g3 = op.cores[2][:, :, :, 0]
-    want = jax.vmap(lambda x: ref.tt_project3_ref(x, g1, g2, g3))(xb)
+    want = jax.vmap(lambda x: ref.tt_project_ref(x, cores))(xb)
     np.testing.assert_allclose(np.asarray(got),
                                np.asarray(want) / np.sqrt(float(k)),
                                rtol=1e-5, atol=1e-5)
@@ -100,7 +148,7 @@ def test_cp_project_batched_vs_vmap_ref(b, dims, k):
     xb = jax.random.normal(jax.random.PRNGKey(1), (b,) + dims)
     got = cp_project(op, xb)
     assert got.shape == (b, k)
-    want = jax.vmap(lambda x: ref.cp_project3_ref(x, *op.factors))(xb)
+    want = jax.vmap(lambda x: ref.cp_project_ref(x, op.factors))(xb)
     np.testing.assert_allclose(np.asarray(got),
                                np.asarray(want) / np.sqrt(float(k)),
                                rtol=1e-5, atol=1e-5)
@@ -110,16 +158,13 @@ def test_cp_project_batched_vs_vmap_ref(b, dims, k):
 @pytest.mark.parametrize("dims", SHAPES)
 @pytest.mark.parametrize("k", [128, 200])
 def test_tt_reconstruct_batched_vs_vmap_ref(b, dims, k):
-    """Adjoint kernel == vmap of the reference einsum chain == vmap of
+    """Adjoint kernel == the reference einsum chain == vmap of
     op.reconstruct, ragged B and non-power-of-two k included."""
     op = sample_tt_rp(jax.random.PRNGKey(0), dims, k, 2)
     y = jax.random.normal(jax.random.PRNGKey(1), (b, k))
     got = tt_reconstruct(op, y)
     assert got.shape == (b,) + dims
-    g1 = op.cores[0][:, 0, :, :]
-    g2 = op.cores[1]
-    g3 = op.cores[2][:, :, :, 0]
-    want = ref.tt_reconstruct3_ref(y, g1, g2, g3) / np.sqrt(float(k))
+    want = ref.tt_reconstruct_ref(y, tt_cores_squeezed(op)) / np.sqrt(float(k))
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-5, atol=1e-5)
     np.testing.assert_allclose(np.asarray(got),
@@ -135,7 +180,7 @@ def test_cp_reconstruct_batched_vs_vmap_ref(b, dims, k):
     y = jax.random.normal(jax.random.PRNGKey(1), (b, k))
     got = cp_reconstruct(op, y)
     assert got.shape == (b,) + dims
-    want = ref.cp_reconstruct3_ref(y, *op.factors) / np.sqrt(float(k))
+    want = ref.cp_reconstruct_ref(y, op.factors) / np.sqrt(float(k))
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-5, atol=1e-5)
     np.testing.assert_allclose(np.asarray(got),
@@ -160,44 +205,79 @@ def test_reconstruct_unbatched_matches_op():
 def test_fused_scaling_matches_explicit():
     """The epilogue-fused 1/sqrt(k) equals the raw contraction scaled after —
     scaling each k-tile partial sum commutes with the d1 accumulation."""
-    from repro.kernels.tt_project import tt_project3
+    from repro.kernels.tt_sweep import tt_sweep_project
     dims, k = (16, 32, 24), 128
     op = sample_tt_rp(jax.random.PRNGKey(0), dims, k, 2)
+    cores = tt_cores_squeezed(op)
     xb = jax.random.normal(jax.random.PRNGKey(1), (4,) + dims)
-    g1 = op.cores[0][:, 0, :, :]
-    g2 = op.cores[1]
-    g3 = op.cores[2][:, :, :, 0]
-    raw = tt_project3(xb, g1, g2, g3, tk=64, tb=4, ba=8)
-    fused = tt_project3(xb, g1, g2, g3, tk=64, tb=4, ba=8,
-                        scale=1.0 / float(np.sqrt(k)))
+    steps = plan_contraction("tt", "project", k, 4, dims, 2).steps
+    raw = tt_sweep_project(xb, *cores, steps=steps, tk=64, tb=4, ba=8)
+    fused = tt_sweep_project(xb, *cores, steps=steps, tk=64, tb=4, ba=8,
+                             scale=1.0 / float(np.sqrt(k)))
     np.testing.assert_allclose(np.asarray(fused),
                                np.asarray(raw) / np.sqrt(float(k)),
                                rtol=1e-6, atol=1e-6)
 
 
+# ---------------------------------------------------------------------------
+# planner
+# ---------------------------------------------------------------------------
+
 def test_pick_tiles_respects_vmem_budget():
     """The selector shrinks tiles until the accounted footprint fits, and
     prefers shrinking the batch tile for project / the k tile for the
-    adjoint (whose m intermediate is batch-independent)."""
+    adjoint (whose fused transfer block is batch-independent)."""
     dims = (128, 128, 64)
     tk_p, tb_p, ba_p = pick_tiles(1024, 16, dims, 2, kind="project")
     assert tk_p == 128 and ba_p == 8 and 1 <= tb_p <= 8
     tk_r, tb_r, _ = pick_tiles(1024, 16, dims, 2, kind="reconstruct")
     assert tk_r < 128          # m = tk*R*d2*d3 floats forces a smaller tk
     assert tb_r >= tb_p        # batch tile survives on the adjoint
-    # tiny problems keep full-size tiles
+    # tiny problems keep full-size tiles, at every order
     assert pick_tiles(64, 2, (8, 8, 8), 2, kind="project") == (64, 2, 8)
+    assert pick_tiles(64, 2, (8, 8, 8, 8), 2, kind="project") == (64, 2, 8)
+    # order-4 adjoint with a big trailing product also sheds the k tile
+    tk_r4, tb_r4, _ = pick_tiles(1024, 16, (32, 32, 32, 32), 2,
+                                 kind="reconstruct")
+    assert tk_r4 < 128 and tb_r4 >= 1
     with pytest.raises(ValueError, match="unknown kind"):
         pick_tiles(64, 2, (8, 8, 8), 2, kind="nope")
 
 
-def test_kernel_fallback_non_order3():
-    """Orders != 3 fall back to the core einsum path."""
-    dims = (4, 5, 6, 7)
-    op = sample_tt_rp(jax.random.PRNGKey(0), dims, 32, 2)
-    x = jax.random.normal(jax.random.PRNGKey(1), dims)
+def test_plan_contraction_emits_order3_program():
+    """The planner's einsum program at order 3 is exactly the retired
+    hand-written order-3 kernel schedule."""
+    plan = plan_contraction("tt", "project", 256, 4, (8, 128, 64), 2)
+    assert plan.steps == ("nabc,kuc->knabu", "knabu,kvbu->knav",
+                          "knav,kav->nk")
+    assert plan.grid == (2, 1, 1) and plan.order == 3
+    m_steps, h_spec, out_spec = plan_contraction(
+        "tt", "reconstruct", 256, 4, (8, 128, 64), 2).steps
+    assert m_steps == (None, "kvbu,kuc->kvbc")
+    assert (h_spec, out_spec) == ("nk,kav->nakv", "nakv,kvbc->nabc")
+    cp_plan = plan_contraction("cp", "reconstruct", 256, 4, (8, 128, 64), 2)
+    assert cp_plan.steps[0][0] == "kcr->krc"   # CP layout transpose
+
+
+def test_plan_contraction_rejects_bad_requests():
+    with pytest.raises(ValueError, match="order >= 2"):
+        plan_contraction("tt", "project", 64, 1, (64,), 2)
+    with pytest.raises(ValueError, match="unknown family"):
+        plan_contraction("tucker", "project", 64, 1, (8, 8), 2)
+    with pytest.raises(ValueError, match="MAX_ORDER"):
+        plan_contraction("tt", "project", 64, 1, (2,) * 9, 2)
+
+
+def test_kernel_fallback_order1():
+    """Order-1 operators (classical Gaussian RP as TT) fall back to the
+    core einsum path — there is no mode to sweep."""
+    op = sample_tt_rp(jax.random.PRNGKey(0), (64,), 32, 1)
+    x = jax.random.normal(jax.random.PRNGKey(1), (64,))
     np.testing.assert_allclose(np.asarray(tt_project(op, x)),
                                np.asarray(op.project(x)), rtol=1e-5)
+    y = jax.random.normal(jax.random.PRNGKey(2), (32,))
+    np.testing.assert_allclose(np.asarray(tt_reconstruct(op, y)),
+                               np.asarray(op.reconstruct(y)), rtol=1e-5)
 
 
 def test_kernel_bf16_inputs():

@@ -258,6 +258,85 @@ def test_auto_skips_kernel_when_unaligned():
 
 
 # ---------------------------------------------------------------------------
+# order-N routing (acceptance: orders 4 and 5 take the mode-sweep kernels)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", ("tt", "cp"))
+@pytest.mark.parametrize("dims", [(16, 16), (8, 8, 8, 8), (8, 8, 8, 8, 8)])
+def test_order_n_kernel_routing_and_equality(family, dims):
+    """MXU-aligned dense inputs of orders 2/4/5 provably route through the
+    mode-sweep Pallas kernel under force_pallas (kernel_call_count, one
+    dispatch per batched direction) and match the einsum reference."""
+    op = _op(family, k=128, dims=dims)
+    xb = jax.random.normal(jax.random.PRNGKey(21), (3,) + dims)
+    with rp.dispatch_stats() as stats:
+        with rp.force_pallas():
+            y_kern = rp.project(op, xb, backend="auto")
+            assert stats.kernel_calls == 1
+            r_kern = rp.reconstruct(op, y_kern, backend="auto")
+            assert stats.kernel_calls == 2
+    y_xla = rp.project(op, xb, backend="xla")
+    r_xla = rp.reconstruct(op, y_xla, backend="xla")
+    assert y_kern.shape == (3, 128) and r_kern.shape == (3,) + dims
+    np.testing.assert_allclose(np.asarray(y_kern), np.asarray(y_xla),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(r_kern), np.asarray(r_xla),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_out_of_range_orders_stay_on_einsum():
+    """Operators outside the kernel-supported order range — order-1 (no
+    mode to sweep) and order > kernels.MAX_ORDER — take the einsum path
+    even under backend='pallas', without counting a kernel dispatch."""
+    from repro.core import sample_tt_rp
+    from repro.kernels import MAX_ORDER
+    for dims in ((64,), (2,) * (MAX_ORDER + 1)):
+        op = sample_tt_rp(jax.random.PRNGKey(22), dims, 128, 1)
+        x = jax.random.normal(jax.random.PRNGKey(23), dims)
+        with rp.dispatch_stats() as stats:
+            y = rp.project(op, x, backend="pallas")
+            r = rp.reconstruct(op, y, backend="pallas")
+            assert stats.kernel_calls == 0
+        np.testing.assert_allclose(np.asarray(y), np.asarray(op.project(x)),
+                                   rtol=1e-5, atol=1e-5)
+        assert r.shape == dims
+
+
+# ---------------------------------------------------------------------------
+# context-local dispatch instrumentation
+# ---------------------------------------------------------------------------
+
+def test_dispatch_stats_scopes_are_isolated():
+    """Counts inside a dispatch_stats() scope never leak to the enclosing
+    context (the old module-global counter did)."""
+    dims = (8, 128, 64)
+    op = _op("tt", k=128, dims=dims)
+    x = jax.random.normal(jax.random.PRNGKey(24), dims)
+    outer_before = rp.kernel_call_count()
+    with rp.dispatch_stats() as inner:
+        rp.project(op, x, backend="pallas")
+        assert inner.kernel_calls == 1
+        with rp.dispatch_stats() as innermost:
+            rp.project(op, x, backend="pallas")
+            assert innermost.kernel_calls == 1
+        assert inner.kernel_calls == 1      # inner scope didn't see it
+    assert rp.kernel_call_count() == outer_before
+    assert rp.current_stats() is not inner
+
+
+def test_force_pallas_nests_and_restores():
+    """force_pallas is depth-counted on the context-local stats: nested
+    scopes compose and the flag drops only when the LAST scope exits."""
+    with rp.dispatch_stats() as stats:
+        assert not stats.force_pallas
+        with rp.force_pallas():
+            with rp.force_pallas():
+                assert stats.force_depth == 2 and stats.force_pallas
+            assert stats.force_pallas       # still forced after inner exit
+        assert not stats.force_pallas
+
+
+# ---------------------------------------------------------------------------
 # SketchConfig family passthrough
 # ---------------------------------------------------------------------------
 

@@ -84,3 +84,23 @@ def test_required_k_ordering():
     for n in (3, 8, 16):
         assert (theory.required_k_tt(0.1, 100, n, 5)
                 < theory.required_k_cp(0.1, 100, n, 5))
+
+
+def test_order_dependent_tt_vs_cp_bound_ordering():
+    """The paper's headline ordering, as documented in theory.py: the
+    TT-vs-CP bound gap is 1 at N=2 (the maps' bounds coincide) and grows
+    STRICTLY and geometrically with every extra mode for R > 1 — the
+    prediction the order-N kernel layer / benchmark frontier charts."""
+    for R in (2, 5, 10):
+        assert abs(theory.variance_ratio_cp_to_tt(2, R) - 1.0) < 1e-12
+        ratios = [theory.variance_ratio_cp_to_tt(n, R) for n in range(2, 7)]
+        assert all(b > a for a, b in zip(ratios, ratios[1:])), (R, ratios)
+        # geometric growth rate approaches 3/(1+2/R) per extra mode
+        rate = ratios[-1] / ratios[-2]
+        assert 1.0 < rate < 3.0 / (1.0 + 2.0 / R) + 1e-9, (R, rate)
+    # R = 1: TT and CP draws coincide distribution-wise, bounds stay equal
+    for n in (2, 4, 6):
+        assert abs(theory.variance_ratio_cp_to_tt(n, 1) - 1.0) < 1e-12
+    # the same ordering reaches the Thm-2 embedding sizes at higher order
+    assert (theory.required_k_tt(0.1, 100, 5, 5)
+            < theory.required_k_cp(0.1, 100, 5, 5))
