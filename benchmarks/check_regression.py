@@ -4,9 +4,13 @@ baseline.
 Usage: python -m benchmarks.check_regression NEW.json BASELINE.json
 
 Fails (exit 1) on SCHEMA DRIFT — schema version string changed, a baseline
-section or named row disappeared, or a record lost the
-{name, us_per_call, derived} shape — and on a LAUNCH-COUNT REGRESSION: any
-row whose Pallas dispatch count (launches_batched / launches_project /
+section or named row disappeared, a record lost the
+{name, us_per_call, derived} shape, or a timing record stopped covering a
+gated subsystem entirely (REQUIRED_ROW_PREFIXES: the order-N dense frontier
+and the compressed-domain `struct/` carry-sweep rows — a refactor that
+silently drops a whole row family must not pass because the baseline diff
+has nothing to compare) — and on a LAUNCH-COUNT REGRESSION: any row whose
+Pallas dispatch count (launches_batched / launches_project /
 launches_reconstruct) grew to more than 2x the baseline, i.e. a batched
 path quietly decomposing back into per-bucket or vmap launches. Wall-clock
 deltas are deliberately NOT gated — CI machines are too noisy — only
@@ -19,6 +23,9 @@ import sys
 
 LAUNCH_KEYS = ("launches_batched", "launches_project", "launches_reconstruct")
 RECORD_KEYS = {"name", "us_per_call", "derived"}
+# Row families a timing record must keep emitting for the gate to mean
+# anything; checked on the NEW record whenever it has a timing section.
+REQUIRED_ROW_PREFIXES = ("time/order/", "struct/")
 
 
 def _rows_by_name(record: dict) -> dict:
@@ -41,6 +48,11 @@ def check(new: dict, base: dict) -> list[str]:
                 errors.append(f"malformed record in section {sec!r}: "
                               f"{str(r)[:80]}")
     new_rows, base_rows = _rows_by_name(new), _rows_by_name(base)
+    if "timing" in new.get("sections", {}):
+        for prefix in REQUIRED_ROW_PREFIXES:
+            if not any(name.startswith(prefix) for name in new_rows):
+                errors.append(f"no rows with required prefix {prefix!r} in "
+                              "new record: a gated row family vanished")
     gone = sorted(set(base_rows) - set(new_rows))
     if gone:
         errors.append(f"baseline rows missing from new record: {gone[:8]}")

@@ -83,10 +83,12 @@ def main(argv=None) -> None:
     if args.json:
         import jax
         record = {
-            # v2: order-N kernel layer — timing gains per-order
-            # time/order/{tt,cp}/N={2..5} rows (launch counts, operator
-            # params, Thm-1 variance factors)
-            "schema": "bench_rp/v2",
+            # v3: compressed-domain engine — timing gains the
+            # struct/{tt,cp}x{tt,cp}/N={3,4} carry-sweep rows (launch
+            # counts, carry bytes, analytic speedup). v2 added the
+            # time/order/{tt,cp}/N={2..5} frontier (launch counts, operator
+            # params, Thm-1 variance factors).
+            "schema": "bench_rp/v3",
             "unix_time": time.time(),
             "backend": jax.default_backend(),
             "fast": fast,

@@ -1,13 +1,16 @@
 """Paper Fig. 2 + App. B.2: embedding time for medium-order inputs given in
 TT or CP format, across the map family (TT/CP/sparse/dense) — plus the
 batched-vs-per-bucket kernel comparison that tracks the sketcher hot path
-(launch counts, wall time, analytic bytes moved) and the TT-vs-CP-vs-order
-frontier (time/order/* rows, N in {2,3,4,5}) into BENCH_rp.json."""
+(launch counts, wall time, analytic bytes moved), the TT-vs-CP-vs-order
+frontier (time/order/* rows, N in {2,3,4,5}), and the compressed-domain
+structured-input rows (struct/{tt,cp}x{tt,cp}/N={3,4}: carry-sweep launch
+counts, carry bytes, analytic speedup) into BENCH_rp.json."""
 import jax
 import jax.numpy as jnp
 
 from repro import rp
-from repro.core import random_cp, random_tt, theory
+from repro.core import (BatchedCPTensor, BatchedTTTensor, random_cp,
+                        random_tt, theory)
 
 from ._util import csv_row, time_call
 
@@ -94,6 +97,59 @@ def _order_frontier(rows, fast=True):
                 f"params={theory.params_rp(family, k, dims, rank)};"
                 f"var_factor={theory.variance_factor(family, N=n, R=rank):.2f};"
                 f"var_ratio_cp_tt={theory.variance_ratio_cp_to_tt(n, rank):.2f}"))
+
+
+def _struct_frontier(rows, fast=True):
+    """Compressed-domain engine rows: struct/{tt,cp}x{tt,cp}/N={3,4}.
+
+    One batched carry-sweep Pallas (interpret off-TPU) launch per
+    (operator family, input family, order) — the four structured pairings
+    `rp.project` routes through `kernels/struct/`. Each row records the
+    dispatch count (`launches_project`, must stay 1 per batched call — the
+    bench gate's launch keys cover it), the carried bond-state bytes
+    (`carry_bytes` = B·k·R·R~ floats, the memory that replaces the dense
+    sweep's (B, k, d2..dN) intermediates), operator `params`, and the
+    ANALYTIC dense/structured FLOP ratio (`analytic_speedup`,
+    `theory.struct_speedup`) so the record carries the model's prediction
+    next to measured wall-clock (meaningful on TPU, noisy in CPU interpret
+    mode).
+    """
+    del fast
+    k, r_op, r_in, b = 128, 2, 4, 4
+    dims_by_n = {3: (16, 16, 16), 4: (8, 8, 8, 8)}
+    key = jax.random.PRNGKey(11)
+    for n, dims in dims_by_n.items():
+        for in_family in ("tt", "cp"):
+            mk = random_tt if in_family == "tt" else random_cp
+            items = [mk(jax.random.fold_in(key, 100 * n + i), dims, r_in)
+                     for i in range(b)]
+            stack = (BatchedTTTensor.stack if in_family == "tt"
+                     else BatchedCPTensor.stack)
+            xb = stack(items)
+            for op_family in ("tt", "cp"):
+                op = rp.make_projector(
+                    rp.ProjectorSpec(family=op_family, k=k, dims=dims,
+                                     rank=r_op),
+                    jax.random.fold_in(key, 10 * n))
+
+                def project(x, op=op):
+                    return rp.project(op, x, backend="pallas")
+
+                f, launches = _compiled_with_dispatch_count(project, xb)
+                us = time_call(f, xb)
+                fl = theory.flops_project_struct(op_family, in_family, k,
+                                                 dims, r_op, r_in)
+                speedup = theory.struct_speedup(op_family, in_family, k,
+                                                dims, r_op, r_in)
+                rows.append(csv_row(
+                    f"struct/{op_family}x{in_family}/N={n}", us,
+                    f"dims={'x'.join(map(str, dims))};k={k};B={b};"
+                    f"r_op={r_op};r_in={r_in};"
+                    f"launches_project={launches};"
+                    f"carry_bytes={theory.mem_carry_struct(k, r_op, r_in, batch=b)};"
+                    f"params={theory.params_rp(op_family, k, dims, r_op)};"
+                    f"flops_struct={fl};"
+                    f"analytic_speedup={speedup:.1f}x"))
 
 
 def _batched_vs_per_bucket(rows, fast=True):
@@ -209,4 +265,5 @@ def run(fast=True):
 
     _batched_vs_per_bucket(rows, fast=fast)
     _order_frontier(rows, fast=fast)
+    _struct_frontier(rows, fast=fast)
     return rows

@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import rp
-from repro.core import random_tt, theory
+from repro.core import BatchedTTTensor, random_tt, theory
 
 key = jax.random.PRNGKey(0)
 
@@ -76,3 +76,21 @@ print(f"\norder-4 mode-sweep kernel matches reference: "
       f"{bool(jnp.allclose(y_kernel, y_ref, rtol=1e-4, atol=1e-4))}")
 print(f"operator params, same bucket: order-3 {op3.num_params():,} -> "
       f"order-4 {op4.num_params():,}")
+
+# -------------------------- compressed-domain engine (structured batch) ----
+# A BATCH of TT-format inputs projects in ONE carry-sweep kernel launch —
+# the paper's "apply efficiently to low-rank inputs given in CP or TT
+# format" claim, batched: nothing is ever densified, the carry is
+# (B, k, R·R~) floats instead of the d^N dense tensor, and the analytic
+# speedup over the dense path is theory.struct_speedup.
+xb = BatchedTTTensor.stack(
+    [random_tt(jax.random.fold_in(key, 10 + i), dims4, rank=4)
+     for i in range(8)])
+with rp.dispatch_stats() as stats, rp.force_pallas():
+    y_struct = rp.project(op4, xb, backend="auto")   # (8, 256), ONE dispatch
+y_struct_ref = rp.project(op4, xb, backend="xla")
+print(f"\nbatched TT-format projection: {y_struct.shape} from "
+      f"{stats.kernel_calls} kernel dispatch (matches einsum refs: "
+      f"{bool(jnp.allclose(y_struct, y_struct_ref, rtol=1e-4, atol=1e-4))})")
+print(f"analytic dense/struct FLOP ratio at R~=4: "
+      f"{theory.struct_speedup('tt', 'tt', 256, dims4, 2, 4):.1f}x")

@@ -13,7 +13,8 @@ methods) remain importable as thin shims for existing code and tests.
 """
 from .baselines import GaussianRP, VerySparseRP
 from .cp_rp import CPRP, sample_cp_rp, trp_average, trp_project
-from .formats import (CPTensor, TTTensor, auto_dims, cp_inner, dense_inner,
+from .formats import (STRUCT_TYPES, BatchedCPTensor, BatchedTTTensor,
+                      CPTensor, TTTensor, auto_dims, cp_inner, dense_inner,
                       pad_to_tensorizable, random_cp, random_tt, tensorize,
                       tt_cp_inner, tt_inner, tt_svd)
 from .sketch import PytreeSketcher, SketchConfig, SketchMonitor
@@ -21,6 +22,7 @@ from .tt_rp import TTRP, sample_tt_rp
 from . import theory
 
 __all__ = [
+    "BatchedCPTensor", "BatchedTTTensor", "STRUCT_TYPES",
     "CPRP", "CPTensor", "GaussianRP", "PytreeSketcher", "SketchConfig",
     "SketchMonitor", "TTRP", "TTTensor", "VerySparseRP", "auto_dims",
     "cp_inner", "dense_inner", "pad_to_tensorizable", "random_cp", "random_tt",

@@ -156,6 +156,169 @@ class CPTensor:
 
 
 # ---------------------------------------------------------------------------
+# Batched structured containers (the compressed-domain sketching subsystem's
+# input format: B same-structure tensors sharing one leading batch axis, so
+# a whole batch of TT/CP-format inputs projects in ONE kernel launch)
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class BatchedTTTensor:
+    """A batch of B same-structure TT tensors; cores[n]: (B, r_{n-1}, d_n, r_n).
+
+    Every tensor in the batch shares dims and bond ranks (a requirement of
+    the carry-sweep kernels, whose BlockSpecs tile the leading batch axis).
+    Build one with `stack` from a list of `TTTensor`s or directly from
+    batched cores; `unstack` recovers the per-item tensors.
+    """
+
+    cores: tuple[jnp.ndarray, ...]
+
+    def tree_flatten(self):
+        return tuple(self.cores), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(cores=tuple(children))
+
+    @classmethod
+    def stack(cls, tensors: Sequence[TTTensor]) -> "BatchedTTTensor":
+        first = tensors[0]
+        for t in tensors[1:]:
+            if t.dims != first.dims or t.ranks != first.ranks:
+                raise ValueError(
+                    f"cannot stack TT tensors with mismatched structure: "
+                    f"{(t.dims, t.ranks)} != {(first.dims, first.ranks)}")
+        return cls(tuple(jnp.stack([t.cores[n] for t in tensors])
+                         for n in range(first.order)))
+
+    def unstack(self) -> list[TTTensor]:
+        return [TTTensor(tuple(c[i] for c in self.cores))
+                for i in range(self.batch)]
+
+    def __getitem__(self, i: int) -> TTTensor:
+        return TTTensor(tuple(c[i] for c in self.cores))
+
+    @property
+    def batch(self) -> int:
+        return int(self.cores[0].shape[0])
+
+    @property
+    def order(self) -> int:
+        return len(self.cores)
+
+    @property
+    def dims(self) -> tuple[int, ...]:
+        return tuple(int(c.shape[2]) for c in self.cores)
+
+    @property
+    def ranks(self) -> tuple[int, ...]:
+        return tuple(int(c.shape[1]) for c in self.cores) + (
+            int(self.cores[-1].shape[3]),)
+
+    @property
+    def dtype(self):
+        return self.cores[0].dtype
+
+    def num_params(self) -> int:
+        return sum(_prod(c.shape) for c in self.cores)
+
+    def full(self) -> jnp.ndarray:
+        """Materialize the dense (B, *dims) batch (tests/small cases only)."""
+        return jax.vmap(lambda *cs: TTTensor(cs).full())(*self.cores)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class BatchedCPTensor:
+    """A batch of B same-rank CP tensors; factors[n]: (B, d_n, R).
+
+    Optional per-item component weights have shape (B, R); None means
+    all-ones. See `BatchedTTTensor` for the stack/unstack contract.
+    """
+
+    factors: tuple[jnp.ndarray, ...]
+    weights: jnp.ndarray | None = None
+
+    def tree_flatten(self):
+        if self.weights is None:
+            return tuple(self.factors), ("noweights",)
+        return tuple(self.factors) + (self.weights,), ("weights",)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        if aux[0] == "weights":
+            return cls(factors=tuple(children[:-1]), weights=children[-1])
+        return cls(factors=tuple(children), weights=None)
+
+    @classmethod
+    def stack(cls, tensors: Sequence[CPTensor]) -> "BatchedCPTensor":
+        first = tensors[0]
+        for t in tensors[1:]:
+            if t.dims != first.dims or t.rank != first.rank:
+                raise ValueError(
+                    f"cannot stack CP tensors with mismatched structure: "
+                    f"{(t.dims, t.rank)} != {(first.dims, first.rank)}")
+        has_w = [t.weights is not None for t in tensors]
+        if any(has_w) and not all(has_w):
+            raise ValueError("cannot stack CP tensors mixing weighted and "
+                             "unweighted components")
+        factors = tuple(jnp.stack([t.factors[n] for t in tensors])
+                        for n in range(first.order))
+        weights = (jnp.stack([t.weights for t in tensors])
+                   if all(has_w) else None)
+        return cls(factors, weights)
+
+    def unstack(self) -> list[CPTensor]:
+        return [self[i] for i in range(self.batch)]
+
+    def __getitem__(self, i: int) -> CPTensor:
+        w = None if self.weights is None else self.weights[i]
+        return CPTensor(tuple(f[i] for f in self.factors), w)
+
+    @property
+    def batch(self) -> int:
+        return int(self.factors[0].shape[0])
+
+    @property
+    def order(self) -> int:
+        return len(self.factors)
+
+    @property
+    def dims(self) -> tuple[int, ...]:
+        return tuple(int(f.shape[1]) for f in self.factors)
+
+    @property
+    def rank(self) -> int:
+        return int(self.factors[0].shape[2])
+
+    @property
+    def dtype(self):
+        return self.factors[0].dtype
+
+    def num_params(self) -> int:
+        n = sum(_prod(f.shape) for f in self.factors)
+        if self.weights is not None:
+            n += _prod(self.weights.shape)
+        return n
+
+    def full(self) -> jnp.ndarray:
+        """Materialize the dense (B, *dims) batch (tests/small cases only)."""
+        if self.weights is None:
+            return jax.vmap(lambda *fs: CPTensor(fs).full())(*self.factors)
+        return jax.vmap(lambda *a: CPTensor(a[:-1], a[-1]).full())(
+            *self.factors, self.weights)
+
+
+# The canonical structured-container tuple: everything that dispatches to
+# the compressed-domain (carry-sweep) projection path. Consumers (rp
+# dispatch, the sketcher, kernels.struct) import THIS rather than
+# hand-maintaining their own copies — a new container registers here once.
+STRUCT_TYPES = (TTTensor, CPTensor, BatchedTTTensor, BatchedCPTensor)
+
+
+# ---------------------------------------------------------------------------
 # Random constructions
 # ---------------------------------------------------------------------------
 

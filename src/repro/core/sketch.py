@@ -25,7 +25,14 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from .formats import _prod
+from .formats import STRUCT_TYPES, BatchedCPTensor, BatchedTTTensor, _prod
+
+
+def _is_struct_leaf(x) -> bool:
+    """Pytree leaves the sketcher treats as already-compressed inputs: they
+    are projected in the compressed domain (rp.project's carry-sweep route)
+    rather than bucketized — their dims must equal SketchConfig.dims."""
+    return isinstance(x, STRUCT_TYPES)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -112,6 +119,13 @@ def _constrain_buckets(x):
 class PytreeSketcher:
     """Sketches a fixed-structure pytree bucket-wise, PER LEAF.
 
+    Leaves may be dense arrays (bucketized and tensorized to `cfg.dims`) OR
+    already-compressed `TTTensor` / `CPTensor` / `BatchedTTTensor` /
+    `BatchedCPTensor` containers with dims == `cfg.dims`: structured leaves
+    are sketched in the compressed domain (the carry-sweep kernel route —
+    the paper's "project without densifying" claim as a sketcher feature)
+    and reconstruct to dense unbiased estimates.
+
     Per-leaf (vs one global ravel/concat) matters at production scale: a
     concatenated 67B-param flat vector forces XLA to materialize a replicated
     copy per device; per-leaf buckets reshape each (already sharded) tensor
@@ -128,12 +142,33 @@ class PytreeSketcher:
 
     def __init__(self, cfg: SketchConfig, example_tree: Any):
         self.cfg = cfg
-        leaves, treedef = jax.tree_util.tree_flatten(example_tree)
+        leaves, treedef = jax.tree_util.tree_flatten(
+            example_tree, is_leaf=_is_struct_leaf)
         self._treedef = treedef
-        self._shapes = [tuple(l.shape) for l in leaves]
-        self._sizes = [int(_prod(l.shape)) for l in leaves]
-        self._dtypes = [l.dtype for l in leaves]
-        self._nb = [max(1, -(-n // cfg.bucket_elems)) for n in self._sizes]
+        self._struct = [_is_struct_leaf(l) for l in leaves]
+        self._shapes, self._sizes, self._dtypes, self._nb = [], [], [], []
+        for leaf, is_struct in zip(leaves, self._struct):
+            if is_struct:
+                if tuple(leaf.dims) != tuple(cfg.dims):
+                    raise ValueError(
+                        f"structured leaf dims {tuple(leaf.dims)} != "
+                        f"SketchConfig.dims {tuple(cfg.dims)}; tensorize "
+                        "structured leaves to the sketch dims up front")
+                nb = leaf.batch if isinstance(
+                    leaf, (BatchedTTTensor, BatchedCPTensor)) else 1
+                # a structured leaf IS its own bucket(s): one per batch item;
+                # its dense estimate comes back in the leaf's own dtype,
+                # like dense leaves
+                self._shapes.append(((nb,) if nb > 1 else ()) + tuple(cfg.dims))
+                self._sizes.append(nb * cfg.bucket_elems)
+                self._dtypes.append(leaf.dtype)
+                self._nb.append(nb)
+            else:
+                self._shapes.append(tuple(leaf.shape))
+                self._sizes.append(int(_prod(leaf.shape)))
+                self._dtypes.append(leaf.dtype)
+                self._nb.append(
+                    max(1, -(-self._sizes[-1] // cfg.bucket_elems)))
         self.n = sum(self._sizes)
         self.n_buckets = sum(self._nb)
         self.padded = self.n_buckets * cfg.bucket_elems
@@ -157,12 +192,22 @@ class PytreeSketcher:
         the Pallas route that is a single kernel launch with a native batch
         grid axis (operator cores streamed once per k-tile, not once per
         bucket), instead of the old vmap of per-bucket launches.
+
+        Structured (TT/CP-format) leaves never densify: each one is
+        projected in the compressed domain by the carry-sweep route, a
+        batched container counting one bucket per batch item — still ONE
+        dispatch per leaf.
         """
         from repro import rp
         op = self.cfg.operator(key)
         flat_op = len(op.in_dims) == 1  # gaussian/sparse contract flat
         ys = []
-        for leaf, nb in zip(jax.tree_util.tree_leaves(tree), self._nb):
+        leaves = jax.tree_util.tree_leaves(tree, is_leaf=_is_struct_leaf)
+        for leaf, nb, is_struct in zip(leaves, self._nb, self._struct):
+            if is_struct:
+                y = rp.project(op, leaf, backend=self.cfg.backend)
+                ys.append(y.reshape(nb, self.cfg.k))
+                continue
             buckets = self._leaf_to_buckets(leaf, nb)
             if flat_op:
                 buckets = buckets.reshape(nb, -1)
@@ -173,7 +218,11 @@ class PytreeSketcher:
         """(n_buckets, k) -> unbiased pytree estimate (same key as sketch).
 
         One batched `rp.reconstruct` per leaf — the Pallas adjoint kernels
-        reconstruct every bucket of the leaf in a single launch.
+        reconstruct every bucket of the leaf in a single launch. Structured
+        leaves come back as DENSE unbiased estimates (`(*dims)` for a
+        single tensor, `(B, *dims)` for a batched container): the adjoint
+        of a sketch is a dense tensor, there is no exact TT/CP form to
+        return to.
         """
         from repro import rp
         op = self.cfg.operator(key)

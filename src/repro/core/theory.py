@@ -183,6 +183,63 @@ def flops_project_tt_tt(k: int, dims, R: int, R_in: int) -> int:
     return fl
 
 
+# ---------------------------------------------------------------------------
+# Structured-input (compressed-domain) cost model — the carry-sweep path
+# (`repro.kernels.struct`). Per-mode costs follow the einsum carry programs
+# exactly; dividing the dense-path FLOPs by these gives the analytic speedup
+# the benchmarks report next to measured wall-clock.
+# ---------------------------------------------------------------------------
+
+def flops_project_struct(op_family: str, in_family: str, k: int, dims,
+                         R: int, R_in: int) -> int:
+    """Carry-sweep FLOPs (x2 multiply-add) for one structured projection.
+
+    Per mode of size d, the (operator, input) pairing costs:
+      tt x tt : 2 k d R R~ (R + R~)   — two bond updates of the (R, R~) carry
+      tt x cp : 2 k d R R~ (R + 1)    — CP input has no bond to re-expand
+      cp x tt : 2 k d R R~ (R~ + 1)
+      cp x cp : 2 k d R R~  (+ k R R~ Hadamard, kept: exact, not just O())
+    vs the dense path's O(k R d^N) (`flops_project_dense_tt` / `_cp`) —
+    compressed-domain projection replaces the d^N dependence with N·d.
+    """
+    if op_family not in ("tt", "cp") or in_family not in ("tt", "cp"):
+        raise KeyError(f"no structured cost model for "
+                       f"{op_family!r} x {in_family!r}")
+    fl = 0
+    for d in dims:
+        if op_family == "tt" and in_family == "tt":
+            fl += 2 * k * d * R * R_in * (R + R_in)
+        elif op_family == "tt" and in_family == "cp":
+            fl += 2 * k * d * R * R_in * (R + 1)
+        elif op_family == "cp" and in_family == "tt":
+            fl += 2 * k * d * R * R_in * (R_in + 1)
+        else:
+            fl += 2 * k * d * R * R_in + k * R * R_in
+    return fl
+
+
+def mem_carry_struct(k: int, R: int, R_in: int, *, batch: int = 1) -> int:
+    """Peak carry-state bytes of the sweep: B * k * R * R~ f32 floats —
+    the (B, k, R_op·R_in) bond state that replaces the dense path's
+    (B, k, d_2..d_N) sweep intermediates (Iwen et al.'s memory argument)."""
+    return 4 * batch * k * R * R_in
+
+
+def struct_speedup(op_family: str, in_family: str, k: int, dims, R: int,
+                   R_in: int) -> float:
+    """Analytic dense-FLOPs / structured-FLOPs ratio for one projection.
+
+    > 1 while the input's rank is low (the paper's regime: compressed-domain
+    projection wins by ~d^{N-1} / (R~ (R + R~))); monotonically decreasing
+    in R~, crossing below 1 once R~(R + R~) outgrows the dense contraction —
+    the crossover `benchmarks/timing.py` reports per row.
+    """
+    dense = (flops_project_dense_tt(k, dims, R) if op_family == "tt"
+             else flops_project_dense_cp(k, dims, R))
+    return dense / flops_project_struct(op_family, in_family, k, dims,
+                                        R, R_in)
+
+
 def flops_project_dense_cp(k: int, dims, R: int) -> int:
     N = len(dims)
     D = 1

@@ -4,18 +4,25 @@ tt_project / cp_project: batched dense-input (tensorized flat vector)
 projections for ANY order N >= 2 — one launch per batch of buckets, JLT
 scaling fused — via the mode-sweep kernels (tt_sweep.py / cp_sweep.py).
 tt_reconstruct / cp_reconstruct: the batched adjoint reconstructions.
-tt_dot: structured TT-input projection (the paper's O(kNd max(R,R~)^3)
-path; order-3 kernel, transfer-matrix einsum elsewhere).
-plan_contraction / ContractionPlan: the mode-sweep contraction planner —
-einsum program + VMEM-budgeted tiles + grid for a static order.
+struct: the compressed-domain subsystem — batched structured-input
+(TT/CP-format) projections for all four (operator, input) pairings via
+carry-sweep kernels (`struct.struct_project`, the paper's
+O(k N d R R~ (R + R~)) path, any order 2..MAX_ORDER; replaces the retired
+order-3-only `tt_dot`).
+plan_contraction / ContractionPlan: the dense mode-sweep contraction
+planner — einsum program + VMEM-budgeted tiles + grid for a static order;
+`struct.plan_carry_sweep` is its structured-input counterpart.
 pick_tiles: the tile view of the planner, shared by all dense wrappers.
-Validated in interpret mode against ref.py; BlockSpecs target TPU VMEM.
+Validated in interpret mode against ref.py / struct/ref.py; BlockSpecs
+target TPU VMEM.
 """
-from . import ref
+from . import ref, struct
 from .ops import (MAX_ORDER, ContractionPlan, cp_project, cp_reconstruct,
                   kernel_order_supported, pick_tiles, plan_contraction,
-                  tt_cores_squeezed, tt_dot, tt_project, tt_reconstruct)
+                  tt_cores_squeezed, tt_project, tt_reconstruct)
+from .struct import plan_carry_sweep, struct_project
 
 __all__ = ["MAX_ORDER", "ContractionPlan", "cp_project", "cp_reconstruct",
-           "kernel_order_supported", "pick_tiles", "plan_contraction", "ref",
-           "tt_cores_squeezed", "tt_dot", "tt_project", "tt_reconstruct"]
+           "kernel_order_supported", "pick_tiles", "plan_carry_sweep",
+           "plan_contraction", "ref", "struct", "struct_project",
+           "tt_cores_squeezed", "tt_project", "tt_reconstruct"]

@@ -20,6 +20,10 @@ single input (`(*dims)` tensor / `(k,)` sketch) or a batch (`(B, *dims)` /
 axis — this is how `PytreeSketcher` sketches all buckets of a leaf per
 launch.
 
+Structured (TT/CP-format) inputs do NOT pass through here: they route to
+the compressed-domain carry-sweep subsystem in `repro.kernels.struct`
+(which has its own planner mirroring this one's conventions).
+
 `interpret` defaults to True because this container is CPU-only; on real
 TPU hardware pass interpret=False (the BlockSpecs are written for TPU VMEM).
 """
@@ -33,11 +37,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.cp_rp import CPRP
-from repro.core.formats import TTTensor, _prod
+from repro.core.formats import _prod
 from repro.core.tt_rp import TTRP
 
 from . import ref
-from .tt_dot import tt_dot3
 
 # Per-kernel-instance VMEM budget. Real TPU cores have ~16 MiB; half of it
 # leaves headroom for Pallas' double-buffered pipeline copies.
@@ -385,31 +388,7 @@ def cp_reconstruct(op: CPRP, y: jnp.ndarray, *, interpret: bool = True,
     return _sweep_reconstruct("cp", op, op.factors, y, interpret)
 
 
-# ---------------------------------------------------------------------------
-# structured input
-# ---------------------------------------------------------------------------
-
-def tt_dot(op: TTRP, x: TTTensor, *, interpret: bool = True,
-           use_kernel: bool = True) -> jnp.ndarray:
-    """f_TT(R)(X) for a TT-format order-3 input via the Pallas kernel.
-
-    (The TT-input kernel is still order-3 only; other orders take the
-    transfer-matrix einsum chain, which is already rank-bounded.)
-    """
-    if op.order != 3 or x.order != 3 or not use_kernel:
-        return op.project_tt(x)
-    k = op.k
-    g1, g2, g3 = tt_cores_squeezed(op)
-    tk = _lane_tile(k)
-    g1k = _pad_axis(g1, 0, tk)
-    g2k = _pad_axis(g2, 0, tk)
-    g3k = _pad_axis(g3, 0, tk)
-    y = tt_dot3(x.cores[0], x.cores[1], x.cores[2], g1k, g2k, g3k,
-                tk=tk, interpret=interpret)
-    return y[:k] / jnp.sqrt(jnp.asarray(k, y.dtype))
-
-
 __all__ = ["ContractionPlan", "MAX_ORDER", "VMEM_BUDGET_BYTES",
            "cp_project", "cp_reconstruct", "kernel_order_supported",
            "pick_tiles", "plan_contraction", "ref", "tt_cores_squeezed",
-           "tt_dot", "tt_project", "tt_reconstruct"]
+           "tt_project", "tt_reconstruct"]

@@ -5,9 +5,9 @@ einsum chains, order-generic — the mode-sweep kernels must match these to
 Layouts match the kernel layouts (`ops.tt_cores_squeezed` / `op.factors`):
   TT-RP cores:   g1 (k, d1, R), interior (k, R, d_n, R), gN (k, R, dN)
   CP-RP factors: f_n (k, d_n, R)
-  TT input cores: x1 (1, d1, Rx), x2 (Rx, d2, Rx), x3 (Rx, d3, 1)
 The 1/sqrt(k) JLT scaling is applied by ops.py, NOT here (kernels and refs
 compute the raw contraction so accumulation error is comparable).
+Structured-input oracles live in `struct/ref.py`.
 """
 from __future__ import annotations
 
@@ -55,17 +55,3 @@ def cp_reconstruct_ref(y: jnp.ndarray, factors) -> jnp.ndarray:
     for f in factors[1:-1]:
         w = jnp.einsum("nk...r,kdr->nk...dr", w, f)
     return jnp.einsum("nk...r,kdr->n...d", w, factors[-1])
-
-
-def tt_dot3_ref(x1: jnp.ndarray, x2: jnp.ndarray, x3: jnp.ndarray,
-                g1: jnp.ndarray, g2: jnp.ndarray, g3: jnp.ndarray) -> jnp.ndarray:
-    """Batched <TT_i, X_tt> via transfer matrices, order 3.
-
-    x1 (1,d1,Rx) x2 (Rx,d2,Rx) x3 (Rx,d3,1); g in the squeezed layout above.
-    """
-    xa = x1[0]                     # (d1, Rx)
-    t = jnp.einsum("kdr,de->kre", g1, xa)            # (k, R, Rx)
-    tmp = jnp.einsum("kre,krds->keds", t, g2)        # (k, Rx, d2, R)
-    t = jnp.einsum("keds,edf->ksf", tmp, x2)         # (k, R, Rx)
-    xc = x3[:, :, 0]               # (Rx, d3)
-    return jnp.einsum("ksf,ksd,fd->k", t, g3, xc)

@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: batched structured-input carry-sweep projection.
+
+Executes the einsum carry program emitted by `plan.plan_carry_sweep`
+verbatim, for all four (operator, input) family pairings at any static
+order 2..MAX_ORDER — the compressed-domain replacement for the retired
+order-3-only `tt_dot` kernel.
+
+Schedule:
+
+* grid = (k/TK, B/TB) — k-tile OUTERMOST: the operator cores' block index
+  depends only on ik, so one k-tile's cores are fetched once and stay
+  VMEM-resident while every batch tile of structured inputs streams
+  through them (the same core-residency argument as the dense projection
+  sweep, with the batch of inputs taking the place of the dense bucket
+  stream). The input cores' index depends only on ib.
+* No accumulation axis: unlike the dense sweep there is no d1 grid axis —
+  every mode is contracted in full inside the instance, carrying the
+  (TB, TK, R_op·R_in) bond state between steps — so each (TB, TK) output
+  block is written exactly once.
+* TK=128 puts k on the lane axis; every carry step is then a TK-batched
+  small contraction (MXU for the bond updates, VPU for the CPxCP
+  Hadamard). The JLT 1/sqrt(k) scaling is FUSED into the epilogue.
+
+Padding contract (enforced by `ops.struct_project`): the k axis of every
+operator core is zero-padded to TK (zero rows project to zero and are
+sliced away), the batch axis of every input core to TB (zero cores
+contribute zero rows). Bond/mode axes are never tiled.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _carry_kernel(*refs, program, n_op, scale):
+    op_refs = refs[:n_op]
+    x_refs = refs[n_op:-1]
+    o_ref = refs[-1]
+    env = {}
+
+    def operand(name):
+        if name in env:                       # 'c' or 't'
+            return env[name]
+        idx = int(name[1:])
+        return (op_refs[idx] if name[0] == "g" else x_refs[idx])[...]
+
+    for dst, spec, a, b in program:
+        env[dst] = jnp.einsum(spec, operand(a), operand(b),
+                              preferred_element_type=jnp.float32)
+    o_ref[...] = env["c"] * scale             # (TB, TK)
+
+
+def _imap2(*pattern):
+    """Index map over the 2-axis (ik, ib) grid: select an axis by position
+    or pin 0 (`None`) — the block stays put along that operand axis."""
+    def f(i0, i1):
+        prog = (i0, i1)
+        return tuple(prog[p] if p is not None else 0 for p in pattern)
+    return f
+
+
+@functools.partial(jax.jit, static_argnames=("n_op", "program", "tk", "tb",
+                                             "scale", "interpret"))
+def carry_sweep_project(*cores: jnp.ndarray, n_op: int, program,
+                        tk: int, tb: int, scale: float,
+                        interpret: bool) -> jnp.ndarray:
+    """ONE launch projecting a whole batch of structured inputs.
+
+    cores = (*op_cores, *in_cores): op cores lead with the (padded) k axis,
+    input cores lead with the (padded) batch axis; `n_op` splits the two
+    groups. Requires k % tk == 0 and B % tb == 0. Returns (B, k) float32.
+    """
+    op_cores, in_cores = cores[:n_op], cores[n_op:]
+    k = op_cores[0].shape[0]
+    b = in_cores[0].shape[0]
+    assert len(op_cores) == len(in_cores), (len(op_cores), len(in_cores))
+    assert k % tk == 0 and b % tb == 0, (k, tk, b, tb)
+    grid = (k // tk, b // tb)
+    in_specs = [pl.BlockSpec((tk,) + g.shape[1:],
+                             _imap2(0, *([None] * (g.ndim - 1))))
+                for g in op_cores]
+    in_specs += [pl.BlockSpec((tb,) + x.shape[1:],
+                              _imap2(1, *([None] * (x.ndim - 1))))
+                 for x in in_cores]
+    return pl.pallas_call(
+        functools.partial(_carry_kernel, program=program, n_op=n_op,
+                          scale=scale),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((tb, tk), _imap2(1, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, k), jnp.float32),
+        interpret=interpret,
+    )(*cores)

@@ -1,0 +1,203 @@
+"""Carry-sweep contraction planner for structured (TT/CP-format) inputs.
+
+This is the structured-input counterpart of `repro.kernels.ops.plan_contraction`
+(which plans the DENSE-input mode sweep): instead of streaming a dense
+`(B, d1..dN)` block and peeling one mode per step, the carry sweep contracts
+one mode of the OPERATOR against the same mode of the INPUT's compressed
+representation, carrying a small `(TB, TK, R_op·R_in)` bond state between
+steps — the paper's "project without ever densifying" formulation
+(Sec. 4.1; Feng et al.'s TT-input carry sweep; Iwen et al.'s modewise maps
+on compressed inputs). Cost is O(k N d R R~ (R + R~)) per item instead of
+the dense path's O(k R d^N) (`repro.core.theory.flops_project_struct`).
+
+All FOUR structured pairings share one program shape — a flat tuple of
+two-operand einsum steps `(dst, spec, src_a, src_b)` with sources in
+{'c' (carry), 't' (temp), 'g<n>' (operator core/factor n), 'x<n>' (input
+core/factor n)} — emitted by `_carry_program` for any static order
+2 <= N <= `MAX_ORDER`:
+
+  op   input  per-mode carry update                       carry axes
+  tt x tt     c,g -> t;  t,x -> c                          (b, k, R, R~)
+  tt x cp     c,g -> t;  t,a -> c                          (b, k, R, R~)
+  cp x tt     c,x -> t;  t,f -> c                          (b, k, R, R~)
+  cp x cp     f,a -> t;  c * t (Hadamard on the bond)      (b, k, R, R~)
+
+The program is static (strings), so it participates in the jit cache key
+and each (op_family, in_family, order, tiling) compiles exactly once.
+`plan_carry_sweep` additionally budgets VMEM — operator cores per k-tile,
+input cores per batch-tile, the carry/temp peak, and the `(TB, TK)` output
+block — and shrinks the batch tile first (TK=128 keeps k on the lane axis),
+then the k tile, mirroring the dense project planner.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from ..ops import MAX_ORDER, VMEM_BUDGET_BYTES, _lane_tile, _pow2_at_most
+
+_FAMILIES = ("tt", "cp")
+
+
+def _require_family(name: str, value: str) -> None:
+    if value not in _FAMILIES:
+        raise ValueError(f"unknown {name} {value!r}; expected {_FAMILIES}")
+
+
+def _carry_program(op_family: str, in_family: str, order: int) -> tuple:
+    """The einsum carry program for one (operator, input) family pairing.
+
+    Step letters are local to each spec: b batch, k sketch row, d the mode
+    being contracted, u/v the operator TT bond (in/out), e/f the input TT
+    bond (in/out), r the operator CP component, p the input CP component.
+    Operator operands use the squeezed kernel layouts
+    (`ops.tt_cores_squeezed` / `op.factors`); input operands the squeezed
+    batched layouts (TT: (B, d1, R~), (B, R~, d, R~), (B, R~, dN); CP:
+    (B, d, R~) with weights folded into factor 0).
+    """
+    _require_family("operator family", op_family)
+    _require_family("input family", in_family)
+    if not 2 <= order <= MAX_ORDER:
+        raise ValueError(
+            f"carry-sweep kernels need 2 <= order <= {MAX_ORDER}, "
+            f"got {order}")
+    steps: list[tuple] = []
+    last = order - 1
+    if op_family == "tt" and in_family == "tt":
+        steps.append(("c", "kdu,bde->bkue", "g0", "x0"))
+        for n in range(1, last):
+            steps.append(("t", "bkue,kudv->bkedv", "c", f"g{n}"))
+            steps.append(("c", "bkedv,bedf->bkvf", "t", f"x{n}"))
+        steps.append(("t", "bkue,kud->bked", "c", f"g{last}"))
+        steps.append(("c", "bked,bed->bk", "t", f"x{last}"))
+    elif op_family == "tt" and in_family == "cp":
+        steps.append(("c", "kdu,bdp->bkup", "g0", "x0"))
+        for n in range(1, last):
+            steps.append(("t", "bkup,kudv->bkpdv", "c", f"g{n}"))
+            steps.append(("c", "bkpdv,bdp->bkvp", "t", f"x{n}"))
+        steps.append(("t", "bkup,kud->bkpd", "c", f"g{last}"))
+        steps.append(("c", "bkpd,bdp->bk", "t", f"x{last}"))
+    elif op_family == "cp" and in_family == "tt":
+        steps.append(("c", "kdr,bde->bkre", "g0", "x0"))
+        for n in range(1, last):
+            steps.append(("t", "bkre,bedf->bkrdf", "c", f"x{n}"))
+            steps.append(("c", "bkrdf,kdr->bkrf", "t", f"g{n}"))
+        steps.append(("t", "bkre,bed->bkrd", "c", f"x{last}"))
+        steps.append(("c", "bkrd,kdr->bk", "t", f"g{last}"))
+    else:  # cp x cp: per-mode Hadamard on the (r, p) bond
+        steps.append(("c", "kdr,bdp->bkrp", "g0", "x0"))
+        for n in range(1, last):
+            steps.append(("t", "kdr,bdp->bkrp", f"g{n}", f"x{n}"))
+            steps.append(("c", "bkrp,bkrp->bkrp", "c", "t"))
+        steps.append(("t", "kdr,bdp->bkrp", f"g{last}", f"x{last}"))
+        steps.append(("c", "bkrp,bkrp->bk", "c", "t"))
+    return tuple(steps)
+
+
+@dataclasses.dataclass(frozen=True)
+class CarryPlan:
+    """A fully-resolved carry-sweep schedule for one structured launch.
+
+    `program` is the static einsum step tuple (`_carry_program`) the kernel
+    in `carry.py` executes verbatim. `vmem_bytes` is the accounted
+    per-instance footprint at the chosen `(tk, tb)` tiles.
+    """
+
+    op_family: str
+    in_family: str
+    k: int
+    b: int
+    dims: tuple[int, ...]
+    r_op: int
+    r_in: int
+    tk: int
+    tb: int
+    program: tuple
+    vmem_bytes: int
+
+    @property
+    def order(self) -> int:
+        return len(self.dims)
+
+    @property
+    def grid(self) -> tuple[int, int]:
+        """Grid for the padded problem: k-tile OUTERMOST (the operator
+        cores — indexed only by ik — stay VMEM-resident while the whole
+        batch of structured inputs streams through), batch tile inner."""
+        return (-(-self.k // self.tk), -(-self.b // self.tb))
+
+    @property
+    def carry_bytes(self) -> int:
+        """Peak bytes of the carried bond state for the FULL problem —
+        b * k * R_op * R_in floats, the `(B, k, R_op·R_in)` carry that
+        replaces the dense path's (B, k, d2..dN) sweep intermediates."""
+        return 4 * self.b * self.k * self.r_op * self.r_in
+
+
+def _core_elems(family: str, dims: tuple[int, ...], rank: int) -> int:
+    """Per-row (k or batch) element count of a squeezed core/factor list."""
+    if family == "tt":
+        if len(dims) == 1:
+            return dims[0]
+        return (dims[0] * rank + sum(rank * d * rank for d in dims[1:-1])
+                + rank * dims[-1])
+    return rank * sum(dims)
+
+
+def plan_carry_sweep(op_family: str, in_family: str, k: int, b: int,
+                     dims: tuple[int, ...], r_op: int, r_in: int, *,
+                     budget: int = VMEM_BUDGET_BYTES) -> CarryPlan:
+    """Plan a carry-sweep kernel launch for static order N = len(dims).
+
+    Accounts every per-instance VMEM buffer — the per-k-tile operator
+    cores, the per-batch-tile input cores, the carry + temp peak of the
+    sweep (both live simultaneously inside a step), and the `(TB, TK)`
+    output block — and shrinks tiles until the footprint fits `budget`,
+    batch tile first (TK=128 keeps k on the lane axis; the cores the k-tile
+    pins in VMEM are what the whole schedule exists to keep resident).
+    """
+    dims = tuple(int(d) for d in dims)
+    program = _carry_program(op_family, in_family, len(dims))  # validates
+    r_op, r_in = max(1, int(r_op)), max(1, int(r_in))
+    tk = _lane_tile(k)
+    tb = _pow2_at_most(max(1, b), 8)
+    op_elems = _core_elems(op_family, dims, r_op)
+    in_elems = _core_elems(in_family, dims, r_in)
+    # largest per-mode temp: the mode axis d is live between the two steps
+    # of a mode update for every pairing EXCEPT cp x cp, whose temp is the
+    # modeless (b, k, r, p) Hadamard operand
+    temp_d = 1 if (op_family, in_family) == ("cp", "cp") else max(dims)
+
+    def footprint(tk: int, tb: int) -> int:
+        carry = tb * tk * r_op * r_in
+        temp = tb * tk * r_op * r_in * temp_d
+        return 4 * (tk * op_elems + tb * in_elems + carry + temp + tb * tk)
+
+    for axis in ("tb", "tk"):
+        while footprint(tk, tb) > budget:
+            if axis == "tb" and tb > 1:
+                tb //= 2
+            elif axis == "tk" and tk > 8:
+                tk //= 2
+            else:
+                break
+    return CarryPlan(op_family=op_family, in_family=in_family, k=k, b=b,
+                     dims=dims, r_op=r_op, r_in=r_in, tk=tk, tb=tb,
+                     program=program, vmem_bytes=footprint(tk, tb))
+
+
+def struct_hbm_bytes(plan: CarryPlan) -> int:
+    """Grid-accurate analytic HBM traffic of one carry-sweep launch.
+
+    Follows the BlockSpec index maps in `carry.py`: operator cores are
+    indexed only by the outermost k-tile axis (fetched once each), input
+    cores by the batch axis (re-streamed once per k-tile), and each
+    `(TB, TK)` output block is written exactly once.
+    """
+    nk = -(-plan.k // plan.tk)
+    op_bytes = 4 * plan.k * _core_elems(plan.op_family, plan.dims, plan.r_op)
+    in_bytes = 4 * plan.b * _core_elems(plan.in_family, plan.dims, plan.r_in)
+    out_bytes = 4 * plan.b * plan.k
+    return op_bytes + nk * in_bytes + out_bytes
+
+
+__all__ = ["CarryPlan", "plan_carry_sweep", "struct_hbm_bytes"]

@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for the carry-sweep kernels: batched structured-input
+projections for all four (operator, input) family pairings, order-generic
+(N >= 2). Deliberately straightforward einsum chains — the Pallas kernels
+must match these to ~1e-5 in f32, and these must match the dense path
+(`op.project(x.full())`) exactly up to accumulation order.
+
+Layouts match the kernel layouts:
+  TT-RP cores      g1 (k, d1, R),  interior (k, R, d_n, R),  gN (k, R, dN)
+  CP-RP factors    f_n (k, d_n, R)
+  TT input cores   x1 (B, d1, R~), interior (B, R~, d_n, R~), xN (B, R~, dN)
+  CP input factors a_n (B, d_n, R~)   (weights already folded into a_1)
+
+The 1/sqrt(k) JLT scaling is applied by `ops.struct_project`, NOT here
+(kernels and refs compute the raw contraction so accumulation error is
+comparable).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def tt_tt_ref(op_cores, in_cores) -> jnp.ndarray:
+    """y[b, i] = < <<G_i^1..G_i^N>>, <<X_b^1..X_b^N>> >, carry (b,k,R,R~)."""
+    c = jnp.einsum("kdu,bde->bkue", op_cores[0], in_cores[0])
+    for g, x in zip(op_cores[1:-1], in_cores[1:-1]):
+        t = jnp.einsum("bkue,kudv->bkedv", c, g)
+        c = jnp.einsum("bkedv,bedf->bkvf", t, x)
+    t = jnp.einsum("bkue,kud->bked", c, op_cores[-1])
+    return jnp.einsum("bked,bed->bk", t, in_cores[-1])
+
+
+def tt_cp_ref(op_cores, in_factors) -> jnp.ndarray:
+    """TT operator x CP-format input; carry (b, k, R, R~)."""
+    c = jnp.einsum("kdu,bdp->bkup", op_cores[0], in_factors[0])
+    for g, a in zip(op_cores[1:-1], in_factors[1:-1]):
+        t = jnp.einsum("bkup,kudv->bkpdv", c, g)
+        c = jnp.einsum("bkpdv,bdp->bkvp", t, a)
+    t = jnp.einsum("bkup,kud->bkpd", c, op_cores[-1])
+    return jnp.einsum("bkpd,bdp->bk", t, in_factors[-1])
+
+
+def cp_tt_ref(op_factors, in_cores) -> jnp.ndarray:
+    """CP operator x TT-format input; carry (b, k, R, R~)."""
+    c = jnp.einsum("kdr,bde->bkre", op_factors[0], in_cores[0])
+    for f, x in zip(op_factors[1:-1], in_cores[1:-1]):
+        t = jnp.einsum("bkre,bedf->bkrdf", c, x)
+        c = jnp.einsum("bkrdf,kdr->bkrf", t, f)
+    t = jnp.einsum("bkre,bed->bkrd", c, in_cores[-1])
+    return jnp.einsum("bkrd,kdr->bk", t, op_factors[-1])
+
+
+def cp_cp_ref(op_factors, in_factors) -> jnp.ndarray:
+    """CP operator x CP-format input: per-mode Hadamard on the (r, p) bond."""
+    c = jnp.einsum("kdr,bdp->bkrp", op_factors[0], in_factors[0])
+    for f, a in zip(op_factors[1:-1], in_factors[1:-1]):
+        c = c * jnp.einsum("kdr,bdp->bkrp", f, a)
+    t = jnp.einsum("kdr,bdp->bkrp", op_factors[-1], in_factors[-1])
+    return jnp.einsum("bkrp,bkrp->bk", c, t)
+
+
+REFS = {("tt", "tt"): tt_tt_ref, ("tt", "cp"): tt_cp_ref,
+        ("cp", "tt"): cp_tt_ref, ("cp", "cp"): cp_cp_ref}

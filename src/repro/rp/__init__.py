@@ -15,6 +15,9 @@ Quickstart::
     spec = rp.ProjectorSpec(family="tt", k=256, dims=(8, 128, 64), rank=2)
     op = rp.make_projector(spec, jax.random.PRNGKey(0))
     y = rp.project(op, x)                      # dense, flat, TT or CP input
+                                               # (or a BatchedTTTensor /
+                                               # BatchedCPTensor batch: one
+                                               # carry-sweep launch)
     x_hat = rp.reconstruct(op, y)              # unbiased adjoint
 
 The four built-in families are 'tt', 'cp', 'gaussian', 'sparse'; new ones

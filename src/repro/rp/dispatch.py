@@ -2,9 +2,21 @@
 
 `project(op, x)` is the single entry point replacing the old
 `project` / `project_tt` / `project_cp` method zoo: it inspects the input's
-structure (dense tensor, flat vector, `TTTensor`, `CPTensor`) and the
+structure (dense tensor, flat vector, `TTTensor` / `CPTensor`, or the
+batched `BatchedTTTensor` / `BatchedCPTensor` containers) and the
 operator's family, and routes to the cheapest contraction path, raising a
 typed `FormatMismatchError` on incompatible shapes.
+
+Dispatch matrix (input format x operator family -> route):
+
+  dense/flat x tt/cp (2<=N<=MAX_ORDER)  mode-sweep kernel | einsum
+  (*batch, k) sketch x tt/cp            mode-sweep adjoint kernel | einsum
+  (Batched)TT/CP x tt/cp (2<=N)         carry-sweep kernel
+                                        (`kernels.struct.struct_project`,
+                                        all four pairings, ONE launch per
+                                        batched call) | batched einsum refs
+  (Batched)TT/CP x gaussian/sparse      densified (`x.full()`) flat einsum
+  order outside [2, MAX_ORDER] x any    einsum, even under 'pallas'
 
 Backend policy (`backend='auto' | 'pallas' | 'xla'`)
 ---------------------------------------------------
@@ -13,8 +25,10 @@ order (2 <= N <= `repro.kernels.MAX_ORDER`) have batched mode-sweep Pallas
 kernels (`repro.kernels.tt_project` / `cp_project` — `(*batch, *dims)`
 inputs run in ONE launch with a native batch grid axis, never vmap); the
 adjoints route the same way through `tt_reconstruct` / `cp_reconstruct`
-for `(*batch, k)` sketches; structured TT input has `tt_dot` (order 3).
-Routing:
+for `(*batch, k)` sketches; structured (TT/CP-format) inputs — single or
+batched, any pairing with a TT/CP operator — route to the carry-sweep
+kernels in `repro.kernels.struct` (compressed-domain projection,
+O(k N d R R~ (R + R~)), never densifying). Routing:
 
 * 'xla'    — always the einsum path.
 * 'pallas' — always the kernel (operators outside the supported order
@@ -40,12 +54,14 @@ from __future__ import annotations
 import contextlib
 import contextvars
 import dataclasses
+import warnings
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.cp_rp import CPRP
-from repro.core.formats import CPTensor, TTTensor, _prod
+from repro.core.formats import (STRUCT_TYPES, BatchedCPTensor,
+                                BatchedTTTensor, _prod)
 from repro.core.tt_rp import TTRP
 
 from .protocol import FormatMismatchError, RPOperator
@@ -158,8 +174,17 @@ def _coerce_dense(op: RPOperator, x: jnp.ndarray) -> jnp.ndarray:
     """Reshape/pad a dense array to `(*batch, *op.in_dims)`.
 
     Accepts: exact `(*batch, *in_dims)` tensors; `(*batch, D)` flat vectors
-    with D == prod(in_dims); short 1-D vectors (zero-padded — harmless under
-    a linear map); any unbatched tensorization with the right element count.
+    with D == prod(in_dims); any unbatched tensorization with the right
+    element count; and `(*batch, D)` SHORT flat vectors with
+    D < prod(in_dims), whose last axis is zero-padded up to prod(in_dims) —
+    harmless under a linear map, and the batched case (e.g. a batch of
+    ragged tail buckets) pads exactly like the 1-D case.
+
+    Rejected with a typed error: trailing axes exceeding prod(in_dims)
+    without matching `in_dims`, and NEAR-MISS tensors that match `in_dims`
+    on every mode but the last — those are overwhelmingly truncated buckets
+    (off-by-one slice bugs), not flat-vector batches, and padding them
+    would silently project garbage.
     """
     dims = tuple(op.in_dims)
     n = len(dims)
@@ -169,14 +194,26 @@ def _coerce_dense(op: RPOperator, x: jnp.ndarray) -> jnp.ndarray:
         return x
     if x.ndim >= 1 and x.shape[-1] == size:
         return x.reshape(x.shape[:-1] + dims)
-    if x.ndim == 1 and x.size < size:
-        pad = jnp.zeros((size - x.size,), x.dtype)
-        return jnp.concatenate([x, pad]).reshape(dims)
     if x.ndim >= n and x.size == size:
         # alternate tensorization of a single input (e.g. a gradient bucket
-        # shaped for a tensorized family, fed to a flat baseline); ndim < n
-        # would more likely be a mis-shaped batch — reject those below
+        # shaped for a tensorized family, fed to a flat baseline); checked
+        # BEFORE the short-vector branch so the total-size match keeps
+        # meaning "one input", not "a batch of padded ones"
         return x.reshape(dims)
+    if (x.ndim >= n and n > 1 and tuple(x.shape[-n:-1]) == dims[:-1]
+            and x.shape[-1] != dims[-1]):
+        # near-miss dense tensor: every mode but the last matches in_dims —
+        # far more likely a truncated/over-long bucket (an off-by-one slice
+        # bug) than a batch of flat vectors that happens to be stacked in
+        # the operator's own mode sizes; refuse rather than pad garbage
+        raise FormatMismatchError(
+            f"dense input of shape {tuple(x.shape)} matches in_dims={dims} "
+            f"on every mode but the last ({x.shape[-1]} != {dims[-1]}) — "
+            "refusing to reinterpret a near-miss tensor as flat vectors")
+    if x.ndim >= 1 and x.shape[-1] < size:
+        # short flat vector(s): zero-pad the trailing axis, batched or not
+        widths = [(0, 0)] * (x.ndim - 1) + [(0, size - x.shape[-1])]
+        return jnp.pad(x, widths).reshape(x.shape[:-1] + dims)
     raise FormatMismatchError(
         f"dense input of shape {tuple(x.shape)} is incompatible with "
         f"operator in_dims={dims} (flat size {size})")
@@ -213,40 +250,50 @@ def _project_dense(op: RPOperator, x: jnp.ndarray, backend: str) -> jnp.ndarray:
     return op.project(xt)
 
 
+def _project_struct(op: RPOperator, x, backend: str) -> jnp.ndarray:
+    """Structured (TT/CP-format) input(s), single or batched.
+
+    TT/CP operators project in the compressed domain — the carry-sweep
+    kernel subsystem (`repro.kernels.struct`) under the kernel policy, its
+    batched einsum oracles otherwise; either way a batched container is ONE
+    dispatch, never a vmap. Flat-vector families (gaussian/sparse)
+    densify first — only viable at small prod(dims), which is exactly the
+    regime the paper could run those baselines in.
+    """
+    if not isinstance(op, (TTRP, CPRP)):
+        full = x.full()
+        if isinstance(x, (BatchedTTTensor, BatchedCPTensor)):
+            return _project_dense(op, full.reshape(full.shape[0], -1),
+                                  backend)
+        return _project_dense(op, full.reshape(-1), backend)
+    _check_struct_dims(op, x)
+    # local import: repro.kernels is deliberately not a module-level dep
+    from repro.kernels import struct as kstruct
+    supported = _kernel_order_ok(op.order)
+    if _use_kernel(backend, supported=supported, aligned=_mxu_aligned(op)):
+        _count_kernel()
+        return kstruct.struct_project(op, x, interpret=not _on_tpu())
+    return kstruct.struct_project(op, x, use_kernel=False)
+
+
 def project(op: RPOperator, x, *, backend: str = "auto") -> jnp.ndarray:
     """Project `x` with `op`, dispatching on the input's structure.
 
     x may be:
       * a dense array `(*batch, *op.in_dims)` — any operator order,
-      * a flat vector (auto-tensorized; short vectors are zero-padded),
-      * a `TTTensor` (TT-format fast path for tensorized families),
-      * a `CPTensor` (CP-format fast path for tensorized families).
+      * a flat vector or a `(*batch, D)` stack of them (auto-tensorized;
+        short vectors are zero-padded, batched or not),
+      * a `TTTensor` / `CPTensor` (compressed-domain fast path for
+        tensorized families — never densified),
+      * a `BatchedTTTensor` / `BatchedCPTensor` — a whole batch of
+        structured inputs in ONE dispatch (the carry-sweep kernels put the
+        batch on a native grid axis; there is no vmap on any route).
 
-    Flat-vector families (gaussian/sparse) accept structured inputs too by
-    densifying them first — only viable at small prod(dims), which is
-    exactly the regime the paper could run those baselines in.
-
-    Returns the `(*batch, k)` sketch (structured inputs are unbatched).
+    Returns the `(*batch, k)` sketch ((k,) for single structured inputs,
+    (B, k) for batched containers).
     """
-    if isinstance(x, TTTensor):
-        if isinstance(op, TTRP):
-            _check_struct_dims(op, x)
-            supported = op.order == 3 and x.order == 3
-            if _use_kernel(backend, supported=supported,
-                           aligned=_mxu_aligned(op)):
-                from repro.kernels import ops as kops
-                _count_kernel()
-                return kops.tt_dot(op, x, interpret=not _on_tpu())
-            return op.project_tt(x)
-        if isinstance(op, CPRP):
-            _check_struct_dims(op, x)
-            return op.project_tt(x)
-        return _project_dense(op, x.full().reshape(-1), backend)
-    if isinstance(x, CPTensor):
-        if isinstance(op, (TTRP, CPRP)):
-            _check_struct_dims(op, x)
-            return op.project_cp(x)
-        return _project_dense(op, x.full().reshape(-1), backend)
+    if isinstance(x, STRUCT_TYPES):
+        return _project_struct(op, x, backend)
     return _project_dense(op, x, backend)
 
 
@@ -259,8 +306,15 @@ def reconstruct(op: RPOperator, y: jnp.ndarray, *, chunk: int | None = None,
     kernels (`tt_sweep_reconstruct` / `cp_sweep_reconstruct`, any order
     N >= 2) under the same backend policy as `project` — ONE launch for the
     whole batch, no vmap — and otherwise fall back to a vmap of the
-    operator's einsum adjoint. `chunk` bounds the k-sized intermediate on
-    the einsum path (kernels tile k instead).
+    operator's einsum adjoint.
+
+    `chunk` precedence: `chunk` bounds the k-sized intermediate on the
+    EINSUM path only. The kernel route tiles k internally (the planner's
+    VMEM budget already bounds the intermediate), so when backend policy
+    selects a kernel, a user-supplied `chunk` is ignored — with a
+    `UserWarning`, since the caller asked for a memory bound the kernel
+    honors by different means. Pass `backend='xla'` to make `chunk`
+    authoritative.
     """
     y = jnp.asarray(y)
     if y.ndim < 1 or y.shape[-1] != op.k:
@@ -270,6 +324,13 @@ def reconstruct(op: RPOperator, y: jnp.ndarray, *, chunk: int | None = None,
     supported = is_tn and _kernel_order_ok(op.order)
     if _use_kernel(backend, supported=supported, aligned=_mxu_aligned(op)):
         from repro.kernels import ops as kops  # local: avoids import cycle
+        if chunk is not None:
+            warnings.warn(
+                f"reconstruct(chunk={chunk}) routed to a Pallas kernel, "
+                "which tiles k internally under its own VMEM budget; the "
+                "chunk argument is ignored on this route. Pass "
+                "backend='xla' to honor it on the einsum path.",
+                UserWarning, stacklevel=2)
         _count_kernel()
         interpret = not _on_tpu()
         kern = (kops.tt_reconstruct if isinstance(op, TTRP)

@@ -8,9 +8,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import TTTensor, random_tt, sample_cp_rp, sample_tt_rp
+from repro.core import sample_cp_rp, sample_tt_rp
 from repro.kernels import (cp_project, cp_reconstruct, pick_tiles,
-                           plan_contraction, ref, tt_cores_squeezed, tt_dot,
+                           plan_contraction, ref, tt_cores_squeezed,
                            tt_project, tt_reconstruct)
 
 SHAPES = [
@@ -51,21 +51,9 @@ def test_cp_project_kernel(dims, k, rank):
                                rtol=3e-5, atol=3e-5)
 
 
-@pytest.mark.parametrize("dims", SHAPES)
-@pytest.mark.parametrize("k", [64, 200])
-@pytest.mark.parametrize("rx", [1, 4])
-def test_tt_dot_kernel(dims, k, rx):
-    op = sample_tt_rp(jax.random.PRNGKey(0), dims, k, 2)
-    x = random_tt(jax.random.PRNGKey(2), dims, rx)
-    got = tt_dot(op, x)
-    want = ref.tt_dot3_ref(*x.cores, *tt_cores_squeezed(op)) / jnp.sqrt(float(k))
-    # f32 accumulation-order differences reach ~1e-4 relative on the larger
-    # (dims, rx) cells; 3e-5 was flaky on the seed.
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                               rtol=2e-4, atol=2e-4)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(op.project_tt(x)),
-                               rtol=2e-4, atol=2e-4)
-
+# (the structured-input TT x TT kernel coverage that lived here moved to
+# tests/test_struct.py with the carry-sweep subsystem, which replaced the
+# order-3-only tt_dot kernel)
 
 # ---------------------------------------------------------------------------
 # order-N sweep: batched kernels vs vmap-of-reference (interpret mode)

@@ -126,6 +126,31 @@ def test_flat_vector_zero_padding():
                                rtol=1e-5, atol=1e-5)
 
 
+def test_batched_flat_vector_zero_padding():
+    """Regression: BATCHED short flat vectors `(*batch, D < prod(dims))`
+    zero-pad the trailing axis exactly like the 1-D case (the old coercion
+    only padded unbatched vectors and raised on batches of ragged tail
+    buckets)."""
+    op = _op("tt")
+    xb = jax.random.normal(KEY, (4, 100))   # prod(DIMS) = 120
+    yb = rp.project(op, xb)
+    assert yb.shape == (4, 64)
+    for i in range(4):
+        np.testing.assert_allclose(np.asarray(yb[i]),
+                                   np.asarray(rp.project(op, xb[i])),
+                                   rtol=1e-5, atol=1e-5)
+    # multi-axis batches pad the same way
+    y2 = rp.project(op, xb.reshape(2, 2, 100))
+    np.testing.assert_allclose(np.asarray(y2.reshape(4, -1)), np.asarray(yb),
+                               rtol=1e-6, atol=1e-6)
+    # flat families too
+    g = _op("gaussian")
+    yg = rp.project(g, xb)
+    np.testing.assert_allclose(np.asarray(yg[2]),
+                               np.asarray(rp.project(g, xb[2])),
+                               rtol=1e-5, atol=1e-5)
+
+
 def test_batched_inputs():
     op = _op("tt")
     xb = jax.random.normal(KEY, (7,) + DIMS)
@@ -191,18 +216,42 @@ def test_batched_input_is_one_kernel_dispatch():
 
 def test_format_mismatch_typed_errors():
     op = _op("tt")
+    # a trailing axis LONGER than prod(dims) cannot be padded or reshaped
     with pytest.raises(rp.FormatMismatchError):
-        rp.project(op, jnp.zeros((3, 3)))
-    # a mis-shaped batch whose total size matches prod(dims) must NOT be
-    # silently collapsed into a single tensor
+        rp.project(op, jnp.zeros((121,)))
     with pytest.raises(rp.FormatMismatchError):
-        rp.project(op, jnp.zeros((4, 30)))
+        rp.project(op, jnp.zeros((4, 121)))
     with pytest.raises(rp.FormatMismatchError):
         rp.project(op, random_tt(KEY, (2, 2, 2), 2))
     with pytest.raises(rp.FormatMismatchError):
         rp.reconstruct(op, jnp.zeros((65,)))
     with pytest.raises(ValueError, match="unknown backend"):
         rp.project(op, jnp.zeros(DIMS), backend="cuda")
+
+
+def test_short_batch_treated_as_batch_of_flat_vectors():
+    """`(B, D < prod(dims))` is a batch of short flat vectors (each padded),
+    NOT collapsed into a single tensor of B*D elements — the output keeps
+    the batch axis."""
+    op = _op("tt")
+    y = rp.project(op, jnp.ones((4, 30)))   # 4 * 30 == prod(DIMS) == 120
+    assert y.shape == (4, 64)
+    np.testing.assert_allclose(
+        np.asarray(y[0]),
+        np.asarray(rp.project(op, jnp.ones((30,)))), rtol=1e-5, atol=1e-5)
+
+
+def test_near_miss_dense_tensor_is_rejected_not_padded():
+    """A tensor matching in_dims on every mode but the last (a truncated /
+    over-long bucket, the classic off-by-one slice bug) must raise, not be
+    silently reinterpreted as a batch of short flat vectors."""
+    op = _op("tt")                              # DIMS = (4, 5, 6)
+    with pytest.raises(rp.FormatMismatchError, match="near-miss"):
+        rp.project(op, jnp.zeros((4, 5, 5)))    # truncated last mode
+    with pytest.raises(rp.FormatMismatchError, match="near-miss"):
+        rp.project(op, jnp.zeros((2, 4, 5, 5)))  # batched truncation
+    # but a SHORT trailing axis under different leading modes still pads
+    assert rp.project(op, jnp.zeros((3, 5, 5))).shape == (3, 5, 64)
 
 
 @pytest.mark.parametrize("family", FAMILIES)
@@ -246,6 +295,33 @@ def test_auto_routes_through_pallas_kernel_when_aligned():
     assert rp.kernel_call_count() == before + 1
     np.testing.assert_allclose(np.asarray(y_plain), np.asarray(y_kern),
                                rtol=2e-4, atol=2e-4)
+
+
+def test_reconstruct_chunk_warns_on_kernel_route():
+    """`chunk=` bounds the einsum path's intermediate; when backend policy
+    picks a kernel (which tiles k internally) the argument is ignored WITH
+    a UserWarning, and the result still matches the chunked einsum path."""
+    dims = (8, 128, 64)
+    op = _op("tt", k=128, dims=dims)
+    y = jax.random.normal(jax.random.PRNGKey(30), (128,))
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        r_kern = rp.reconstruct(op, y, chunk=32, backend="pallas")
+    assert any("chunk" in str(x.message) and "ignored" in str(x.message)
+               for x in w if issubclass(x.category, UserWarning))
+    r_xla = rp.reconstruct(op, y, chunk=32, backend="xla")
+    np.testing.assert_allclose(np.asarray(r_kern), np.asarray(r_xla),
+                               rtol=2e-4, atol=2e-4)
+    # the einsum route honors chunk silently
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        rp.reconstruct(op, y, chunk=32, backend="xla")
+    assert not any(issubclass(x.category, UserWarning) for x in w)
+    # no chunk, kernel route: no warning
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        rp.reconstruct(op, y, backend="pallas")
+    assert not any(issubclass(x.category, UserWarning) for x in w)
 
 
 def test_auto_skips_kernel_when_unaligned():

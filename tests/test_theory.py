@@ -86,6 +86,33 @@ def test_required_k_ordering():
                 < theory.required_k_cp(0.1, 100, n, 5))
 
 
+def test_struct_flop_model_and_crossover():
+    """The compressed-domain cost model: structured projection beats dense
+    by ~d^{N-1}/(R~(R+R~)) at low input rank, the speedup is monotonically
+    DECREASING in the input rank, and it crosses below 1 once the carry
+    outgrows the dense contraction — the analytic speedup the benchmark
+    rows report."""
+    k, dims, R = 128, (64, 64, 64), 2
+    for op_family, in_family in (("tt", "tt"), ("tt", "cp"),
+                                 ("cp", "tt"), ("cp", "cp")):
+        sp = [theory.struct_speedup(op_family, in_family, k, dims, R, r)
+              for r in (1, 2, 10, 40, 2000)]
+        assert all(b < a for a, b in zip(sp, sp[1:])), (op_family, in_family,
+                                                        sp)
+        assert sp[0] > 1.0, (op_family, in_family, sp[0])   # paper's regime
+        assert sp[-1] < 1.0, (op_family, in_family, sp[-1])  # crossover
+    # FLOP ordering at equal ranks: the TTxTT carry pays both bonds, CPxCP
+    # only the Hadamard — the interleaved pairings sit between
+    f = {p: theory.flops_project_struct(*p, k, dims, 4, 4)
+         for p in (("tt", "tt"), ("tt", "cp"), ("cp", "tt"), ("cp", "cp"))}
+    assert f[("cp", "cp")] < f[("tt", "cp")] <= f[("tt", "tt")]
+    assert f[("cp", "cp")] < f[("cp", "tt")] <= f[("tt", "tt")]
+    # memory model: the carry is B*k*R*R~ floats, linear in every factor
+    assert theory.mem_carry_struct(k, 2, 3, batch=4) == 4 * 4 * k * 2 * 3
+    with pytest.raises(KeyError):
+        theory.flops_project_struct("tucker", "tt", k, dims, 2, 2)
+
+
 def test_order_dependent_tt_vs_cp_bound_ordering():
     """The paper's headline ordering, as documented in theory.py: the
     TT-vs-CP bound gap is 1 at N=2 (the maps' bounds coincide) and grows
