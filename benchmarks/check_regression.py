@@ -6,10 +6,11 @@ Usage: python -m benchmarks.check_regression NEW.json BASELINE.json
 Fails (exit 1) on SCHEMA DRIFT — schema version string changed, a baseline
 section or named row disappeared, a record lost the
 {name, us_per_call, derived} shape, or a timing record stopped covering a
-gated subsystem entirely (REQUIRED_ROW_PREFIXES: the order-N dense frontier
-and the compressed-domain `struct/` carry-sweep rows — a refactor that
-silently drops a whole row family must not pass because the baseline diff
-has nothing to compare) — and on a LAUNCH-COUNT REGRESSION: any row whose
+gated subsystem entirely (REQUIRED_ROW_PREFIXES: the order-N dense frontier,
+the compressed-domain `struct/` carry-sweep rows, and the sharded-engine
+`shard/` collective rows — a refactor that silently drops a whole row family
+must not pass because the baseline diff has nothing to compare) — and on a
+LAUNCH-COUNT REGRESSION: any row whose
 Pallas dispatch count (launches_batched / launches_project /
 launches_reconstruct) grew to more than 2x the baseline, i.e. a batched
 path quietly decomposing back into per-bucket or vmap launches. Wall-clock
@@ -25,7 +26,7 @@ LAUNCH_KEYS = ("launches_batched", "launches_project", "launches_reconstruct")
 RECORD_KEYS = {"name", "us_per_call", "derived"}
 # Row families a timing record must keep emitting for the gate to mean
 # anything; checked on the NEW record whenever it has a timing section.
-REQUIRED_ROW_PREFIXES = ("time/order/", "struct/")
+REQUIRED_ROW_PREFIXES = ("time/order/", "struct/", "shard/")
 
 
 def _rows_by_name(record: dict) -> dict:

@@ -83,12 +83,14 @@ def main(argv=None) -> None:
     if args.json:
         import jax
         record = {
-            # v3: compressed-domain engine — timing gains the
-            # struct/{tt,cp}x{tt,cp}/N={3,4} carry-sweep rows (launch
-            # counts, carry bytes, analytic speedup). v2 added the
-            # time/order/{tt,cp}/N={2..5} frontier (launch counts, operator
-            # params, Thm-1 variance factors).
-            "schema": "bench_rp/v3",
+            # v4: sharded engine — timing gains the shard/* rows
+            # (compress_collective wire bytes per sync mode, measured HLO
+            # all-reduce bytes, project_sharded per-device bucket counts;
+            # device-count-independent names + launch counts so the 1- and
+            # 8-device CI jobs diff against one baseline). v3 added the
+            # struct/{tt,cp}x{tt,cp}/N={3,4} carry-sweep rows; v2 the
+            # time/order/{tt,cp}/N={2..5} frontier.
+            "schema": "bench_rp/v4",
             "unix_time": time.time(),
             "backend": jax.default_backend(),
             "fast": fast,

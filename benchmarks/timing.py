@@ -2,9 +2,12 @@
 TT or CP format, across the map family (TT/CP/sparse/dense) — plus the
 batched-vs-per-bucket kernel comparison that tracks the sketcher hot path
 (launch counts, wall time, analytic bytes moved), the TT-vs-CP-vs-order
-frontier (time/order/* rows, N in {2,3,4,5}), and the compressed-domain
+frontier (time/order/* rows, N in {2,3,4,5}), the compressed-domain
 structured-input rows (struct/{tt,cp}x{tt,cp}/N={3,4}: carry-sweep launch
-counts, carry bytes, analytic speedup) into BENCH_rp.json."""
+counts, carry bytes, analytic speedup), and the sharded-engine rows
+(shard/*: compress_collective wire bytes per sync mode + measured HLO
+all-reduce bytes, project_sharded per-device bucket counts) into
+BENCH_rp.json."""
 import jax
 import jax.numpy as jnp
 
@@ -15,10 +18,10 @@ from repro.core import (BatchedCPTensor, BatchedTTTensor, random_cp,
 from ._util import csv_row, time_call
 
 
-def _compiled_with_dispatch_count(fn, arg):
-    """(compiled executable, Pallas dispatches traced) for fn(arg)."""
+def _compiled_with_dispatch_count(fn, *args):
+    """(compiled executable, Pallas dispatches traced) for fn(*args)."""
     c0 = rp.kernel_call_count()
-    compiled = jax.jit(fn).lower(arg).compile()
+    compiled = jax.jit(fn).lower(*args).compile()
     return compiled, rp.kernel_call_count() - c0
 
 
@@ -152,6 +155,76 @@ def _struct_frontier(rows, fast=True):
                     f"analytic_speedup={speedup:.1f}x"))
 
 
+def _shard_rows(rows, fast=True):
+    """Sharded sketching engine rows (shard/*).
+
+    Runs the `compress_collective` cross-pod compressed all-reduce and the
+    `project_sharded` bucket-axis path on a pod mesh over EVERY available
+    device (1 on the plain CI job, 8 under the multi-device job's
+    XLA_FLAGS=--xla_force_host_platform_device_count=8). Row names and the
+    gated trace-time launch counts are device-count-independent, so
+    `check_regression` can diff records across both jobs; per-device bucket
+    counts, npod, the analytic wire bytes of the active sync mode, and the
+    MEASURED HLO all-reduce bytes (the pmean's channel all-reduce op is
+    retained even on a 1-device mesh, so the bytes match across jobs; only
+    the replica-group size differs) land in `derived` for the record.
+    """
+    del fast
+    from repro.core.sketch import PytreeSketcher, SketchConfig
+    from repro.launch.roofline import parse_collectives
+    from repro.optim.compress import SketchCompressor
+
+    ndev = len(jax.devices())
+    mesh = jax.make_mesh((ndev,), ("pod",))
+    cfg = SketchConfig(family="tt", k=128, rank=2, bucket_elems=8 * 16 * 16,
+                       dims=(8, 16, 16))
+    key = jax.random.PRNGKey(23)
+    g = {"w": jax.random.normal(jax.random.fold_in(key, 0), (ndev, 4096)),
+         "b": jax.random.normal(jax.random.fold_in(key, 1), (ndev, 100))}
+    state = {"residual": jax.tree.map(jnp.zeros_like, g)}
+    sk = PytreeSketcher(cfg, jax.tree.map(lambda x: x[0], g))
+    for sync in ("sketch-mean", "local-mean"):
+        comp = SketchCompressor(cfg, sync=sync, pod_axis="pod")
+
+        def run_step(gg, ss, step, comp=comp):
+            # metrics dropped so their telemetry reductions DCE away and
+            # the HLO collective count is exactly the sync pmean
+            with rp.force_pallas():
+                return comp.compress_collective(gg, ss, step=step,
+                                                mesh=mesh)[:2]
+
+        f, launches = _compiled_with_dispatch_count(run_step, g, state, 0)
+        us = time_call(f, g, state, 0)
+        ar = parse_collectives(f.as_text())["per_type"].get(
+            "all-reduce", {"count": 0, "bytes": 0.0})
+        wire = (sk.sketch_bytes() if sync == "sketch-mean"
+                else sk.dense_bytes())
+        rows.append(csv_row(
+            f"shard/collective/sync={sync}", us,
+            f"npod={ndev};n_buckets={sk.n_buckets};k={cfg.k};"
+            f"launches_project={launches};"
+            f"wire_bytes={wire};"
+            f"hlo_allreduce_bytes={int(ar['bytes'])};"
+            f"hlo_allreduce_count={ar['count']}"))
+
+    nb = 16
+    op = rp.make_projector(
+        rp.ProjectorSpec(family="tt", k=128, dims=(8, 16, 16), rank=2),
+        jax.random.fold_in(key, 2))
+    xb = jax.random.normal(jax.random.fold_in(key, 3), (nb, 8, 16, 16))
+
+    def proj(x):
+        with rp.force_pallas():
+            return rp.project_sharded(op, x, mesh=mesh)
+
+    f_p, launches_p = _compiled_with_dispatch_count(proj, xb)
+    us_p = time_call(f_p, xb)
+    rows.append(csv_row(
+        f"shard/project/B={nb}", us_p,
+        f"npod={ndev};buckets_per_device={nb // ndev};"
+        f"launches_project={launches_p};k=128"))
+
+
 def _batched_vs_per_bucket(rows, fast=True):
     """One batched launch per leaf vs the per-bucket formulations.
 
@@ -266,4 +339,5 @@ def run(fast=True):
     _batched_vs_per_bucket(rows, fast=fast)
     _order_frontier(rows, fast=fast)
     _struct_frontier(rows, fast=fast)
+    _shard_rows(rows, fast=fast)
     return rows

@@ -54,7 +54,14 @@ class SketchConfig:
             warnings.warn("SketchConfig(fmt=...) is deprecated; use "
                           "family=...", DeprecationWarning, stacklevel=2)
             object.__setattr__(self, "family", fmt)
-        assert _prod(self.dims) == self.bucket_elems, (self.dims, self.bucket_elems)
+        if _prod(self.dims) != self.bucket_elems:
+            # a typed error (not an assert): survives `python -O` and tells
+            # the caller which knob to fix
+            raise ValueError(
+                f"prod(dims) = {_prod(self.dims)} for dims={self.dims} does "
+                f"not equal bucket_elems={self.bucket_elems}; pass "
+                f"bucket_elems={_prod(self.dims)} or retensorize dims to "
+                "cover the bucket")
         from repro import rp  # function-level: core <-> rp import cycle
         rp.get_family(self.family)  # fail fast on unknown families
 
@@ -97,9 +104,11 @@ SketchConfig.fmt = property(lambda self: self.family)
 
 
 def _constrain_buckets(x):
-    """Shard the bucket dim over every available (non-manual) mesh axis —
-    without this the ravel/concat path replicates the full flat gradient on
-    every device at production scale."""
+    """LEGACY best-effort hint: shard the bucket dim over every available
+    (non-manual) mesh axis from the global model-settings context — without
+    this the ravel/concat path replicates the full flat gradient on every
+    device at production scale. Sketchers constructed with an explicit
+    `mesh`/`bucket_spec` (the sharded-engine path) never consult this."""
     from repro.models import settings as msettings  # runtime import: no cycle
     mesh = msettings.get().mesh
     if mesh is None:
@@ -138,10 +147,29 @@ class PytreeSketcher:
     independent of bucket size, while sketch FLOPs = R*D*Db/r shrink linearly
     with smaller buckets — prefer the smallest MXU-aligned bucket that keeps
     k reasonable.
+
+    Sharding: pass `mesh` (and optionally `bucket_spec`, a PartitionSpec
+    whose first entry names the mesh axes for the bucket dim) to pin the
+    `(n_buckets, ...)` bucket arrays to an explicit layout — the
+    sharded-engine contract used by `rp.sketch_tree_sharded` and
+    `SketchCompressor.compress_collective`. Without a mesh the sketcher
+    falls back to the legacy `_constrain_buckets` global-settings hint.
+    Per-leaf divisibility is checked at constrain time: a leaf whose bucket
+    count the spec's axes do not divide stays unconstrained rather than
+    erroring.
     """
 
-    def __init__(self, cfg: SketchConfig, example_tree: Any):
+    def __init__(self, cfg: SketchConfig, example_tree: Any, *,
+                 mesh=None, bucket_spec=None, constrain: bool = True):
         self.cfg = cfg
+        self.mesh = mesh
+        self.bucket_spec = bucket_spec
+        # constrain=False disables ALL bucket-layout constraints, including
+        # the legacy global-settings hint — required inside shard_map bodies
+        # (compress_collective), where a with_sharding_constraint in a
+        # partially-manual region aborts XLA even when it comes from the
+        # ambient model-settings mesh rather than an explicit mesh=
+        self.constrain = constrain
         leaves, treedef = jax.tree_util.tree_flatten(
             example_tree, is_leaf=_is_struct_leaf)
         self._treedef = treedef
@@ -173,19 +201,47 @@ class PytreeSketcher:
         self.n_buckets = sum(self._nb)
         self.padded = self.n_buckets * cfg.bucket_elems
 
+    # -- bucket-axis sharding --------------------------------------------
+    def _constrain(self, x):
+        """Pin the bucket dim of `x` to the explicit mesh/spec when the
+        sketcher was constructed with one; legacy global hint otherwise;
+        nothing at all when constrain=False (shard_map bodies)."""
+        if not self.constrain:
+            return x
+        if self.mesh is None:
+            return _constrain_buckets(x)
+        # runtime import: no cycle — and reuse the shard module's spec
+        # normalization so the pjit layout and the shard_map entry points
+        # can never disagree on what an entry/axes-size means
+        from repro.rp.shard import bucket_pspec, shard_entry
+        from jax.sharding import NamedSharding, PartitionSpec
+        spec = self.bucket_spec
+        if spec is None:
+            spec = bucket_pspec(self.mesh, x.shape[0])
+        entry, _, size = shard_entry(self.mesh, spec)
+        if size <= 1 or x.shape[0] % size:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh,
+                             PartitionSpec(entry, *([None] * (x.ndim - 1)))))
+
     # -- per-leaf shaping -------------------------------------------------
     def _leaf_to_buckets(self, leaf, nb: int) -> jnp.ndarray:
         flat = leaf.reshape(-1).astype(jnp.float32)
         pad = nb * self.cfg.bucket_elems - flat.size
         if pad:
-            flat = jnp.pad(flat, (0, pad))
-        return _constrain_buckets(flat.reshape((nb,) + self.cfg.dims))
+            # concatenate, NOT jnp.pad: a pad op inside a partially-manual
+            # shard_map body (the compress_collective path) trips an XLA
+            # SPMD-partitioner CHECK (hlo_sharding_util IsManualSubgroup)
+            # and aborts the process; concatenate partitions cleanly
+            flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+        return self._constrain(flat.reshape((nb,) + self.cfg.dims))
 
     def _leaf_from_buckets(self, buckets, size: int, shape, dtype):
         return buckets.reshape(-1)[:size].reshape(shape).astype(dtype)
 
     # -- sketch / unsketch -----------------------------------------------
-    def sketch(self, tree: Any, key) -> jnp.ndarray:
+    def sketch(self, tree: Any, key, *, project_fn=None) -> jnp.ndarray:
         """tree -> (n_buckets, k) sketch (buckets concatenated over leaves).
 
         All buckets of a leaf go through ONE batched `rp.project` call — on
@@ -197,9 +253,17 @@ class PytreeSketcher:
         projected in the compressed domain by the carry-sweep route, a
         batched container counting one bucket per batch item — still ONE
         dispatch per leaf.
+
+        `project_fn(op, buckets) -> (nb, k)` overrides the dense-bucket
+        projection call (the sharded engine passes a shard_map-wrapping
+        closure — `rp.sketch_tree_sharded`); structured leaves always take
+        the plain single-dispatch route.
         """
         from repro import rp
         op = self.cfg.operator(key)
+        if project_fn is None:
+            def project_fn(o, buckets):
+                return rp.project(o, buckets, backend=self.cfg.backend)
         flat_op = len(op.in_dims) == 1  # gaussian/sparse contract flat
         ys = []
         leaves = jax.tree_util.tree_leaves(tree, is_leaf=_is_struct_leaf)
@@ -211,7 +275,7 @@ class PytreeSketcher:
             buckets = self._leaf_to_buckets(leaf, nb)
             if flat_op:
                 buckets = buckets.reshape(nb, -1)
-            ys.append(rp.project(op, buckets, backend=self.cfg.backend))
+            ys.append(project_fn(op, buckets))
         return jnp.concatenate(ys, axis=0)
 
     def unsketch(self, y: jnp.ndarray, key) -> Any:
@@ -230,7 +294,7 @@ class PytreeSketcher:
         off = 0
         for nb, size, shape, dtype in zip(self._nb, self._sizes,
                                           self._shapes, self._dtypes):
-            buckets = rp.reconstruct(op, _constrain_buckets(y[off:off + nb]),
+            buckets = rp.reconstruct(op, self._constrain(y[off:off + nb]),
                                      backend=self.cfg.backend)
             out.append(self._leaf_from_buckets(buckets, size, shape, dtype))
             off += nb

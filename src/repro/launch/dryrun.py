@@ -77,6 +77,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
              out_dir: str | None, remat: str = "nothing",
              seq_parallel: bool = True, verbose: bool = True,
              tag: str = "", compress: str | None = None,
+             compress_sync: str = "local-mean",
              cfg_override=None, opts: dict | None = None) -> dict:
     cfg = cfg_override or get_config(arch)
     shape = cfg.shape(shape_name)
@@ -93,7 +94,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
     if compress:
         from repro.optim.compress import SketchCompressor, parse_compress_flag
         compressor = SketchCompressor(parse_compress_flag(compress),
-                                      pod_axis="pod" if multi_pod else None)
+                                      pod_axis="pod" if multi_pod else None,
+                                      sync=compress_sync)
     n_dev = mesh.devices.size
     opts = opts or {}
     with mesh, settings.override(**opts):
@@ -154,6 +156,9 @@ def main(argv=None) -> int:
     ap.add_argument("--no-seq-parallel", action="store_true")
     ap.add_argument("--compress", default=None,
                     help="e.g. tt:k=4096,rank=2 — sketched grad all-reduce")
+    ap.add_argument("--compress-sync", default="local-mean",
+                    choices=["local-mean", "sketch-mean"],
+                    help="compress_collective sync mode on the pod axis")
     ap.add_argument("--cast-once", action="store_true",
                     help="perf: bf16 param cast before the scan")
     ap.add_argument("--flash-bf16", action="store_true",
@@ -194,7 +199,8 @@ def main(argv=None) -> int:
     cell = run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
                     out_dir=args.out, remat=args.remat,
                     seq_parallel=not args.no_seq_parallel, tag=args.tag,
-                    compress=args.compress, opts=opts)
+                    compress=args.compress,
+                    compress_sync=args.compress_sync, opts=opts)
     return 0 if cell["status"] in ("ok", "skip") else 1
 
 

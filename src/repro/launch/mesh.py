@@ -33,7 +33,13 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh(model: int = 1):
     """Small mesh over whatever devices exist (tests / CPU examples)."""
     n = len(jax.devices())
-    assert n % model == 0, (n, model)
+    if model < 1 or n % model != 0:
+        # typed error (not an assert): survives `python -O` and names the fix
+        raise ValueError(
+            f"model={model} must be a positive divisor of the {n} available "
+            f"device(s); pick a model-parallel size that divides {n} (or "
+            "force more host devices via "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=N)")
     return jax.make_mesh((n // model, model), ("data", "model"))
 
 

@@ -103,6 +103,19 @@ def param_specs(cfg: ArchConfig, axes_tree, mesh, shapes_tree,
             isinstance(a, (str, type(None))) for a in x))
 
 
+def bucket_specs(mesh, *, exclude: tuple = ()) -> P:
+    """PartitionSpec template for `(n_buckets, ...)` sketch-bucket arrays.
+
+    Shards the bucket dim over the mesh's data axes (the same axes
+    `axis_rules` uses for FSDP), minus any axes under shard_map manual
+    control (`exclude`, e.g. the 'pod' axis inside `compress_collective`).
+    The sketcher applies per-leaf divisibility fallbacks, so a template
+    whose axes don't divide some leaf's bucket count is safe.
+    """
+    axes = tuple(a for a in data_axes(mesh) if a not in exclude)
+    return P(axes) if axes else P(None)
+
+
 def batch_spec(shape: tuple[int, ...], mesh) -> P:
     """Shard dim 0 (global batch) over as many data axes as divide it."""
     dp = data_axes(mesh)

@@ -83,7 +83,13 @@ def build_train_step(model: Model, mesh, shape: ShapeSpec, *,
     fsdp_axes = ("data",) if (compressing and has_pod) else None
     pod_axis = "pod" if (compressing and has_pod) else None
     if compressing:
-        compressor = dataclasses.replace(compressor, pod_axis=pod_axis)
+        # explicit bucket-axis layout for the sketcher: data axes minus the
+        # manual pod axis (replaces the legacy global _constrain_buckets
+        # hint), and the mesh the collective shard_map runs on
+        compressor = dataclasses.replace(
+            compressor, pod_axis=pod_axis, mesh=mesh,
+            bucket_spec=sh.bucket_specs(
+                mesh, exclude=(pod_axis,) if pod_axis else ()))
     param_shapes = jax.eval_shape(
         lambda: model.init(jax.random.PRNGKey(0), dtype=pol["param_dtype"]))
     axes = model.param_axes()
@@ -179,7 +185,10 @@ def build_train_step(model: Model, mesh, shape: ShapeSpec, *,
                 grads_pp, pspecs,
                 is_leaf=lambda x: hasattr(x, "shape") and not isinstance(x, P))
             loss = jnp.mean(loss_pp)
-            grads, new_state["ef"], cmet = compressor.compress_per_pod(
+            # REAL collective sync: shard_map manual over 'pod' — the only
+            # cross-pod traffic is the pmean inside compress_collective
+            # ((buckets, k) floats under sync='sketch-mean')
+            grads, new_state["ef"], cmet = compressor.compress_collective(
                 grads_pp, state["ef"], step=state["opt"]["count"])
             metrics.update(cmet)
         metrics["loss"] = loss

@@ -63,6 +63,11 @@ def main(argv=None) -> int:
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--compress", default=None,
                     help="tt:k=...,rank=...[,dims=AxBxC][,order=N]")
+    ap.add_argument("--compress-sync", default="local-mean",
+                    choices=["local-mean", "sketch-mean"],
+                    help="cross-pod sync of compress_collective: pmean the "
+                         "dense reconstructions (one adjoint pass) or the "
+                         "(buckets, k) sketches (k-sized wire bytes)")
     ap.add_argument("--remat", default="nothing")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--crash-at", type=int, default=None,
@@ -82,9 +87,10 @@ def main(argv=None) -> int:
 
     compressor = None
     if args.compress:
-        compressor = SketchCompressor(parse_compress_flag(args.compress))
-        print(f"[compress] {args.compress} shrinkage="
-              f"{compressor.cfg.shrinkage():.4f}")
+        compressor = SketchCompressor(parse_compress_flag(args.compress),
+                                      sync=args.compress_sync)
+        print(f"[compress] {args.compress} sync={args.compress_sync} "
+              f"shrinkage={compressor.cfg.shrinkage():.4f}")
 
     lr_fn = functools.partial(schedule.cosine_with_warmup, peak_lr=args.lr,
                               warmup_steps=args.warmup,

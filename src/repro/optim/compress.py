@@ -24,19 +24,32 @@ wire bytes) at the cost of every worker redundantly computing Unsketch_t(y);
 FSDP-sharded *within* a pod and replicated *across* pods (DiLoCo-style
 DDP-of-FSDP), so the pod axis syncs via this compressed all-reduce.
 
+Two formulations of the cross-pod sync coexist:
+
+  * `compress_collective` — the REAL collective: a `shard_map` manual over
+    the pod axis (auto over the rest) whose only cross-pod traffic is one
+    `lax.pmean` (of the (buckets, k) sketches under sync='sketch-mean', of
+    the dense reconstructions under 'local-mean'). This is what
+    launch/steps.py wires into the train step on pod meshes.
+  * `compress_per_pod` — the pure-pjit simulation of the same math via a
+    leading npod dim (vmap(spmd_axis_name)); kept as the reference the
+    collective is equivalence-tested against.
+
 Fidelity/convergence are exercised in tests/benchmarks (CPU, small meshes);
 the dry-run lowers the same code on the production mesh.
 """
 from __future__ import annotations
 
 import dataclasses
-import re
 from typing import Any
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
-from repro.core.sketch import PytreeSketcher, SketchConfig
+from repro.core.formats import BatchedCPTensor, BatchedTTTensor
+from repro.core.sketch import PytreeSketcher, SketchConfig, _is_struct_leaf
 
 
 def _balanced_pow2_dims(elems: int, order: int) -> tuple[int, ...]:
@@ -59,6 +72,9 @@ def _balanced_pow2_dims(elems: int, order: int) -> tuple[int, ...]:
     return tuple(1 << (base + (1 if i < extra else 0)) for i in range(order))
 
 
+_FLAG_KEYS = ("dims", "k", "rank", "order")
+
+
 def parse_compress_flag(flag: str) -> SketchConfig:
     """'<family>:k=4096,rank=2[,dims=128x128x64][,order=4]' -> SketchConfig.
 
@@ -67,13 +83,25 @@ def parse_compress_flag(flag: str) -> SketchConfig:
     `order=N` without `dims=` tensorizes the default bucket into N balanced
     power-of-two modes (the order-N kernel path: same bucket/compression,
     smaller operator); with `dims=` it just cross-checks len(dims) == N.
+
+    Unknown or malformed keys raise `ValueError` naming the bad key and the
+    accepted set — a misspelled `rnak=4` must not silently ship the default
+    rank to a production launch.
     """
     family, _, rest = flag.partition(":")
     kw: dict[str, Any] = {"family": family}
     order: int | None = None
     if rest:
         for part in rest.split(","):
-            key, _, val = part.partition("=")
+            key, eq, val = part.partition("=")
+            if not eq:
+                raise ValueError(
+                    f"malformed part {part!r} in compress flag {flag!r}: "
+                    f"expected key=value with key in {_FLAG_KEYS}")
+            if key not in _FLAG_KEYS:
+                raise ValueError(
+                    f"unknown key {key!r} in compress flag {flag!r}; "
+                    f"accepted keys: {', '.join(_FLAG_KEYS)}")
             if key == "dims":
                 dims = tuple(int(x) for x in val.split("x"))
                 kw["dims"] = dims
@@ -82,7 +110,7 @@ def parse_compress_flag(flag: str) -> SketchConfig:
                     kw["bucket_elems"] *= d
             elif key in ("k", "rank"):
                 kw[key] = int(val)
-            elif key == "order":
+            else:  # "order"
                 order = int(val)
     if order is not None:
         if "dims" in kw:
@@ -112,6 +140,13 @@ class SketchCompressor:
     #                   (second adjoint pass). Prefer when the pod link is
     #                   bandwidth-bound.
     sync: str = "local-mean"
+    # Explicit bucket-axis layout for the sketcher (the sharded-engine path):
+    # `mesh` + `bucket_spec` (a PartitionSpec whose first entry names the
+    # mesh axes for the (n_buckets, ...) dim) replace the legacy global
+    # `_constrain_buckets` guess. launch/steps.py fills these from
+    # launch/sharding.py::bucket_specs; None keeps single-host behavior.
+    mesh: Any = dataclasses.field(default=None, compare=False)
+    bucket_spec: Any = dataclasses.field(default=None, compare=False)
 
     def __post_init__(self):
         if self.sync not in ("local-mean", "sketch-mean"):
@@ -123,13 +158,37 @@ class SketchCompressor:
     _sk_cache: tuple | None = dataclasses.field(
         default=None, init=False, repr=False, compare=False)
 
-    def _sketcher(self, tree) -> PytreeSketcher:
-        leaves, treedef = jax.tree_util.tree_flatten(tree)
-        key = (treedef, tuple(tuple(l.shape) for l in leaves),
-               tuple(jnp.dtype(l.dtype).name for l in leaves))
+    @staticmethod
+    def _leaf_memo_key(leaf):
+        if _is_struct_leaf(leaf):
+            # structured leaves key on the CONTAINER contract the sketcher
+            # validates (type, dims, bucket count, dtype) — not on the
+            # flattened core/factor shapes, which vary with the input rank
+            # even though the sketcher bookkeeping is rank-independent
+            nb = leaf.batch if isinstance(
+                leaf, (BatchedTTTensor, BatchedCPTensor)) else 1
+            return (type(leaf).__name__, tuple(leaf.dims), nb,
+                    jnp.dtype(leaf.dtype).name)
+        return (tuple(leaf.shape), jnp.dtype(leaf.dtype).name)
+
+    def _sketcher(self, tree, *, plain: bool = False) -> PytreeSketcher:
+        """Memoized PytreeSketcher for `tree`. `plain=True` disables ALL
+        bucket-layout constraints (explicit mesh/spec AND the legacy global
+        hint) — required inside shard_map bodies, where any sharding
+        constraint on a partially-manual mesh hard-crashes XLA's SPMD
+        partitioner (sharding.IsManualSubgroup check)."""
+        mesh = None if plain else self.mesh
+        spec = None if plain else self.bucket_spec
+        # flatten with the sketcher's own leaf predicate so the memo key
+        # matches what PytreeSketcher validates (TT/CP containers are leaves)
+        leaves, treedef = jax.tree_util.tree_flatten(
+            tree, is_leaf=_is_struct_leaf)
+        key = (treedef, tuple(self._leaf_memo_key(l) for l in leaves),
+               mesh, spec, plain)
         if self._sk_cache is not None and self._sk_cache[0] == key:
             return self._sk_cache[1]
-        sk = PytreeSketcher(self.cfg, tree)
+        sk = PytreeSketcher(self.cfg, tree, mesh=mesh, bucket_spec=spec,
+                            constrain=not plain)
         self._sk_cache = (key, sk)
         return sk
 
@@ -159,7 +218,11 @@ class SketchCompressor:
         return g_out, {"residual": new_residual}, self._metrics(sk, new_residual)
 
     def compress_per_pod(self, grads_pp, state, *, step):
-        """Cross-pod compressed all-reduce, pure-pjit formulation.
+        """Cross-pod compressed all-reduce, pure-pjit SIMULATION.
+
+        The vmap(spmd_axis_name) formulation `compress_collective` replaces
+        on real pod meshes — kept as the reference implementation the
+        shard_map collective is equivalence-tested against.
 
         grads_pp / state['residual']: every leaf has a leading npod dim
         (produced by jax.vmap(..., spmd_axis_name='pod') so the dim is
@@ -198,14 +261,105 @@ class SketchCompressor:
                                     p, g_hat_local)
         g_out = jax.tree.map(lambda gh, g: gh.astype(g.dtype),
                              g_hat, example)
-        metrics = self._metrics(sk, new_residual)
-        # actual per-step cross-pod wire bytes of the ACTIVE sync mode —
-        # sketch_bytes/dense_bytes alone describe the sketch-mean
-        # formulation and would misreport 'local-mean' comm on dashboards.
+        return g_out, {"residual": new_residual}, self._pod_metrics(
+            sk, new_residual)
+
+    def compress_collective(self, grads_pp, state, *, step, mesh=None):
+        """Cross-pod compressed all-reduce as a REAL `shard_map` collective.
+
+        The production formulation of `compress_per_pod` (which simulates
+        the pod axis with `jax.vmap(..., spmd_axis_name)`): leaves of
+        `grads_pp` / `state['residual']` carry a leading npod dim laid out
+        over the mesh's pod axis; the shard_map is MANUAL over that axis
+        (`auto` over every other mesh axis, so FSDP/TP layouts inside the
+        body stay with the partitioner). Each pod sees only its local
+        slice, regenerates the operator from `fold_in(key, step)` — the
+        operator itself NEVER crosses the network — sketches its error-fed
+        gradient, and the only cross-pod collective is one `lax.pmean`:
+
+          sync='sketch-mean' — pmean of the (n_buckets, k) sketches:
+              n_buckets * k floats on the wire, every pod redundantly
+              unsketches the mean (second adjoint pass);
+          sync='local-mean'  — pmean of the dense local reconstructions:
+              dense bytes on the wire, ONE adjoint pass per pod.
+
+        Equal to `compress_per_pod` to fp32 tolerance by linearity of the
+        adjoint. Returns (synced grads WITHOUT the pod dim — replicated
+        across pods —, new_state, metrics); metrics are computed OUTSIDE
+        the shard_map so no extra scalar collectives dilute the wire-bytes
+        claim.
+        """
+        mesh = mesh if mesh is not None else self.mesh
+        if mesh is None:
+            raise ValueError("compress_collective needs a mesh (pass mesh= "
+                             "or construct SketchCompressor(mesh=...))")
+        axis = self.pod_axis or "pod"
+        if axis not in mesh.axis_names:
+            raise ValueError(f"pod axis {axis!r} not in mesh axes "
+                             f"{mesh.axis_names}")
+        npod = mesh.shape[axis]
+        for path, leaf in jax.tree_util.tree_flatten_with_path(grads_pp)[0]:
+            # the body keeps local row 0 of each shard, so a leading dim
+            # that is a LARGER multiple of npod would shard_map cleanly but
+            # silently drop every other pod's gradient
+            if leaf.shape[:1] != (npod,):
+                raise ValueError(
+                    f"grads_pp leaf {jax.tree_util.keystr(path)} has "
+                    f"leading dim {leaf.shape[0] if leaf.ndim else None}, "
+                    f"expected the pod-axis size {npod}; one row per pod")
+        example = jax.tree.map(lambda g: jax.ShapeDtypeStruct(g.shape[1:],
+                                                              g.dtype),
+                               grads_pp)
+        # plain sketcher: inside the (partially) manual shard_map body the
+        # bucket layout over the auto axes belongs to the partitioner — an
+        # explicit NamedSharding constraint there trips an XLA SPMD
+        # partitioner CHECK (IsManualSubgroup) and aborts the process
+        sk = self._sketcher(example, plain=True)
+        key = self._key(step)
+        alpha = self.cfg.shrinkage()
+
+        def body(g_pp, e_pp):
+            g = jax.tree.map(lambda a: a[0], g_pp)    # local (1, ...) slice
+            e = jax.tree.map(lambda a: a[0], e_pp)
+            p = jax.tree.map(lambda gg, ee: gg.astype(jnp.float32) + ee,
+                             g, e)
+            y = sk.sketch(p, key)                     # (n_buckets, k) local
+            # the local adjoint pass is needed for the EF residual anyway
+            h_local = jax.tree.map(lambda x: alpha * x, sk.unsketch(y, key))
+            if self.sync == "sketch-mean":
+                y_mean = jax.lax.pmean(y, axis)       # the ONLY wire bytes
+                g_hat = jax.tree.map(lambda x: alpha * x,
+                                     sk.unsketch(y_mean, key))
+            else:  # 'local-mean' (sync validated in __post_init__)
+                g_hat = jax.tree.map(lambda h: jax.lax.pmean(h, axis),
+                                     h_local)
+            resid = jax.tree.map(
+                lambda pp, h: (pp - h.astype(jnp.float32))[None], p, h_local)
+            g_out = jax.tree.map(lambda gh, gref: gh.astype(gref.dtype),
+                                 g_hat, g)
+            return g_out, resid
+
+        pod_specs = jax.tree.map(lambda _: P(axis), grads_pp)
+        res_specs = jax.tree.map(lambda _: P(axis), state["residual"])
+        out_specs = (jax.tree.map(lambda _: P(), example), res_specs)
+        f = shard_map(body, mesh=mesh,
+                      in_specs=(pod_specs, res_specs), out_specs=out_specs,
+                      check_rep=False,
+                      auto=frozenset(mesh.axis_names) - {axis})
+        g_out, new_residual = f(grads_pp, state["residual"])
+        return g_out, {"residual": new_residual}, self._pod_metrics(
+            sk, new_residual)
+
+    def _pod_metrics(self, sk: PytreeSketcher, residual) -> dict:
+        """Cross-pod metrics: the base set plus the per-step pod-link bytes
+        of the ACTIVE sync mode — sketch_bytes/dense_bytes alone describe
+        the sketch-mean formulation and would misreport 'local-mean' comm
+        on dashboards."""
+        metrics = self._metrics(sk, residual)
         metrics["wire_bytes"] = jnp.asarray(
             sk.sketch_bytes() if self.sync == "sketch-mean"
             else sk.dense_bytes(), jnp.float32)
-        return g_out, {"residual": new_residual}, metrics
+        return metrics
 
     def _metrics(self, sk: PytreeSketcher, residual) -> dict:
         return {

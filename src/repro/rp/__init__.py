@@ -5,7 +5,10 @@ registry (`register_family` / `make_projector`), and a structure-dispatched
 functional entry point (`project` / `reconstruct`) with backend routing
 ('auto' | 'pallas' | 'xla') to the order-N mode-sweep Pallas TPU kernels.
 Dispatch instrumentation is context-local (`DispatchStats` /
-`dispatch_stats()` / `kernel_call_count()`).
+`dispatch_stats()` / `kernel_call_count()`). Mesh-aware sharded entry
+points (`project_sharded` / `reconstruct_sharded` / `sketch_tree_sharded`
+/ `bucket_pspec`) lay the bucket axis out over a `jax.sharding.Mesh` with
+`shard_map` — one kernel dispatch per shard, operator replicated.
 
 Quickstart::
 
@@ -36,10 +39,13 @@ from .dispatch import (DispatchStats, current_stats, dispatch_stats,
 from .protocol import FormatMismatchError, ProjectorSpec, RPOperator
 from .registry import (get_family, list_families, make_projector,
                        register_family)
+from .shard import (bucket_pspec, project_sharded, reconstruct_sharded,
+                    sketch_tree_sharded)
 
 __all__ = [
     "DispatchStats", "FormatMismatchError", "ProjectorSpec", "RPOperator",
-    "current_stats", "dispatch_stats", "force_pallas", "get_family",
-    "kernel_call_count", "list_families", "make_projector", "project",
-    "reconstruct", "register_family",
+    "bucket_pspec", "current_stats", "dispatch_stats", "force_pallas",
+    "get_family", "kernel_call_count", "list_families", "make_projector",
+    "project", "project_sharded", "reconstruct", "reconstruct_sharded",
+    "register_family", "sketch_tree_sharded",
 ]

@@ -9,7 +9,7 @@ from benchmarks.check_regression import check, main
 
 def _record():
     return {
-        "schema": "bench_rp/v3",
+        "schema": "bench_rp/v4",
         "sections": {
             "timing": [
                 {"name": "time/batched/tt/project/B=16", "us_per_call": 10.0,
@@ -20,6 +20,9 @@ def _record():
                              "launches_reconstruct": 1}},
                 {"name": "struct/ttxcp/N=3", "us_per_call": 4.0,
                  "derived": {"launches_project": 1, "carry_bytes": 16384}},
+                {"name": "shard/collective/sync=sketch-mean",
+                 "us_per_call": 7.0,
+                 "derived": {"launches_project": 6, "wire_bytes": 1536}},
             ],
             "smoke": [
                 {"name": "smoke/tt", "us_per_call": 1.0, "derived": {"k": 64}},
@@ -40,15 +43,16 @@ def test_wall_clock_noise_is_not_gated():
 
 def test_schema_drift_fails():
     new = _record()
-    new["schema"] = "bench_rp/v4"
+    new["schema"] = "bench_rp/v5"
     assert any("schema drift" in e for e in check(new, _record()))
 
 
 def test_required_row_prefixes_cover_struct_subsystem():
     """A timing record that stops emitting a whole gated row family — the
-    order-N frontier or the compressed-domain struct/ rows — fails even if
-    the baseline ALSO lost them (row-by-row diffing alone can't see that)."""
-    for prefix in ("struct/", "time/order/"):
+    order-N frontier, the compressed-domain struct/ rows, or the
+    sharded-engine shard/ rows — fails even if the baseline ALSO lost them
+    (row-by-row diffing alone can't see that)."""
+    for prefix in ("struct/", "time/order/", "shard/"):
         new = _record()
         new["sections"]["timing"] = [
             r for r in new["sections"]["timing"]
@@ -57,7 +61,7 @@ def test_required_row_prefixes_cover_struct_subsystem():
         assert any("required prefix" in e and prefix in e
                    for e in check(new, base))
     # records without a timing section (e.g. --only smoke) are not gated
-    smoke_only = {"schema": "bench_rp/v3",
+    smoke_only = {"schema": "bench_rp/v4",
                   "sections": {"smoke": _record()["sections"]["smoke"]}}
     assert not any("required prefix" in e
                    for e in check(smoke_only, copy.deepcopy(smoke_only)))

@@ -40,6 +40,85 @@ def test_parse_flag_order_field():
             parse_compress_flag(f"tt:{bad}")
 
 
+def test_parse_flag_rejects_unknown_keys():
+    """A misspelled key must not silently ship a default config."""
+    with pytest.raises(ValueError, match="rnak"):
+        parse_compress_flag("tt:rnak=4")
+    with pytest.raises(ValueError, match="accepted keys"):
+        parse_compress_flag("tt:k=128,dim=4x8x16")
+    # a bare key with no '=' is malformed, not a silent no-op
+    with pytest.raises(ValueError, match="key=value"):
+        parse_compress_flag("tt:k=128,rank")
+    with pytest.raises(ValueError, match="key=value"):
+        parse_compress_flag("tt:k=128,")
+    # good flags still parse
+    assert parse_compress_flag("tt:k=128,rank=3").rank == 3
+
+
+def test_validation_survives_python_O():
+    """SketchConfig dims/bucket_elems and make_host_mesh divisibility raise
+    typed ValueErrors, not asserts — they must still fire under python -O."""
+    import os
+    import subprocess
+    import sys
+    code = """
+import jax
+from repro.core.sketch import SketchConfig
+try:
+    SketchConfig(dims=(4, 8), bucket_elems=999)
+except ValueError as e:
+    assert "bucket_elems" in str(e), e
+else:
+    raise SystemExit("SketchConfig mismatch not caught under -O")
+from repro.launch.mesh import make_host_mesh
+for bad in (0, len(jax.devices()) + 1):
+    try:
+        make_host_mesh(model=bad)
+    except ValueError as e:
+        assert "divisor" in str(e), e
+    else:
+        raise SystemExit(f"make_host_mesh(model={bad}) not caught under -O")
+print("O_SAFE_OK")
+"""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(repo, "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    res = subprocess.run([sys.executable, "-O", "-c", code], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert res.returncode == 0 and "O_SAFE_OK" in res.stdout, (
+        res.stdout, res.stderr)
+
+
+def test_sketcher_memo_structured_leaves():
+    """The memo key flattens with the sketcher's own struct-leaf predicate:
+    structured leaves key on the container contract (type/dims/buckets/
+    dtype), so a rank change HITS the memo (the sketcher bookkeeping is
+    rank-independent) while a dims change MISSES and re-validates."""
+    from repro.core import random_tt
+    cfg = SketchConfig(family="tt", k=64, rank=2, bucket_elems=4 * 8 * 16,
+                       dims=(4, 8, 16))
+    comp = SketchCompressor(cfg)
+    d = jnp.zeros((100,))
+    t_r2 = {"s": random_tt(jax.random.PRNGKey(0), (4, 8, 16), 2), "d": d}
+    t_r5 = {"s": random_tt(jax.random.PRNGKey(1), (4, 8, 16), 5), "d": d}
+    sk1 = comp._sketcher(t_r2)
+    assert comp._sketcher(t_r5) is sk1          # rank change: memo HIT
+    assert comp._sketcher(t_r2) is sk1
+    # dims change: memo MISS -> PytreeSketcher re-validates and rejects
+    t_bad = {"s": random_tt(jax.random.PRNGKey(2), (8, 8, 8), 2), "d": d}
+    with pytest.raises(ValueError, match="structured leaf dims"):
+        comp._sketcher(t_bad)
+    # dense-shape change also misses (fresh sketcher, not the cached one)
+    t_dense = {"s": jnp.zeros((4, 8, 16)), "d": d}
+    assert comp._sketcher(t_dense) is not sk1
+
+
+def test_sketch_config_dims_mismatch_is_typed():
+    with pytest.raises(ValueError, match="bucket_elems"):
+        SketchConfig(family="tt", dims=(4, 8, 16), bucket_elems=12345)
+
+
 def test_parse_flag_order_shrinks_operator():
     """Same bucket, higher order => strictly smaller TT/CP operator (core
     params scale with the SUM of the modes) — the memory axis the order-N
