@@ -7,9 +7,10 @@ Fails (exit 1) on SCHEMA DRIFT — schema version string changed, a baseline
 section or named row disappeared, a record lost the
 {name, us_per_call, derived} shape, or a timing record stopped covering a
 gated subsystem entirely (REQUIRED_ROW_PREFIXES: the order-N dense frontier,
-the compressed-domain `struct/` carry-sweep rows, and the sharded-engine
-`shard/` collective rows — a refactor that silently drops a whole row family
-must not pass because the baseline diff has nothing to compare) — and on a
+the compressed-domain `struct/` carry-sweep rows, the sharded-engine
+`shard/` collective rows, and the serving-engine `serve/` rows — a refactor
+that silently drops a whole row family must not pass because the baseline
+diff has nothing to compare) — and on a
 LAUNCH-COUNT REGRESSION: any row whose
 Pallas dispatch count (launches_batched / launches_project /
 launches_reconstruct) grew to more than 2x the baseline, i.e. a batched
@@ -26,7 +27,9 @@ LAUNCH_KEYS = ("launches_batched", "launches_project", "launches_reconstruct")
 RECORD_KEYS = {"name", "us_per_call", "derived"}
 # Row families a timing record must keep emitting for the gate to mean
 # anything; checked on the NEW record whenever it has a timing section.
-REQUIRED_ROW_PREFIXES = ("time/order/", "struct/", "shard/")
+# serve/ rides along: the CI bench invocations that produce a timing
+# section always run the serving section too (--only smoke,timing,serve).
+REQUIRED_ROW_PREFIXES = ("time/order/", "struct/", "shard/", "serve/")
 
 
 def _rows_by_name(record: dict) -> dict:

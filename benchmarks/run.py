@@ -57,17 +57,17 @@ def main(argv=None) -> None:
                     help="one tiny config per registered rp family (CI)")
     ap.add_argument("--only", default=None,
                     help="comma list: distortion,timing,pairwise,memory,"
-                         "variance,gradcomp,rooflines,smoke")
+                         "variance,gradcomp,rooflines,smoke,serve")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write a structured perf record (BENCH_rp.json)")
     args = ap.parse_args(argv)
     fast = not args.full
-    from . import (distortion, gradcomp, memory, pairwise, rooflines, smoke,
-                   timing, variance)
+    from . import (distortion, gradcomp, memory, pairwise, rooflines, serve,
+                   smoke, timing, variance)
     mods = {
         "memory": memory, "variance": variance, "distortion": distortion,
         "timing": timing, "pairwise": pairwise, "gradcomp": gradcomp,
-        "rooflines": rooflines, "smoke": smoke,
+        "rooflines": rooflines, "smoke": smoke, "serve": serve,
     }
     if args.smoke:
         wanted = ["smoke"]
@@ -83,14 +83,16 @@ def main(argv=None) -> None:
     if args.json:
         import jax
         record = {
-            # v4: sharded engine — timing gains the shard/* rows
-            # (compress_collective wire bytes per sync mode, measured HLO
-            # all-reduce bytes, project_sharded per-device bucket counts;
-            # device-count-independent names + launch counts so the 1- and
-            # 8-device CI jobs diff against one baseline). v3 added the
-            # struct/{tt,cp}x{tt,cp}/N={3,4} carry-sweep rows; v2 the
-            # time/order/{tt,cp}/N={2..5} frontier.
-            "schema": "bench_rp/v4",
+            # v5: serving engine — the serve/* section (trace replay with
+            # the gated one-dispatch-per-tick launches_project, operator
+            # cache hit/regen, store retrieval sweep). v4: sharded engine —
+            # timing gains the shard/* rows (compress_collective wire bytes
+            # per sync mode, measured HLO all-reduce bytes, project_sharded
+            # per-device bucket counts; device-count-independent names +
+            # launch counts so the 1- and 8-device CI jobs diff against one
+            # baseline). v3 added the struct/{tt,cp}x{tt,cp}/N={3,4}
+            # carry-sweep rows; v2 the time/order/{tt,cp}/N={2..5} frontier.
+            "schema": "bench_rp/v5",
             "unix_time": time.time(),
             "backend": jax.default_backend(),
             "fast": fast,

@@ -15,8 +15,9 @@ from .baselines import GaussianRP, VerySparseRP
 from .cp_rp import CPRP, sample_cp_rp, trp_average, trp_project
 from .formats import (STRUCT_TYPES, BatchedCPTensor, BatchedTTTensor,
                       CPTensor, TTTensor, auto_dims, cp_inner, dense_inner,
-                      pad_to_tensorizable, random_cp, random_tt, tensorize,
-                      tt_cp_inner, tt_inner, tt_svd)
+                      pad_cp_rank, pad_to_tensorizable, pad_tt_rank,
+                      random_cp, random_tt, stack_ragged_cp, stack_ragged_tt,
+                      tensorize, tt_cp_inner, tt_inner, tt_svd)
 from .sketch import PytreeSketcher, SketchConfig, SketchMonitor
 from .tt_rp import TTRP, sample_tt_rp
 from . import theory
@@ -25,7 +26,8 @@ __all__ = [
     "BatchedCPTensor", "BatchedTTTensor", "STRUCT_TYPES",
     "CPRP", "CPTensor", "GaussianRP", "PytreeSketcher", "SketchConfig",
     "SketchMonitor", "TTRP", "TTTensor", "VerySparseRP", "auto_dims",
-    "cp_inner", "dense_inner", "pad_to_tensorizable", "random_cp", "random_tt",
-    "sample_cp_rp", "sample_tt_rp", "tensorize", "theory", "trp_average",
-    "trp_project", "tt_cp_inner", "tt_inner", "tt_svd",
+    "cp_inner", "dense_inner", "pad_cp_rank", "pad_to_tensorizable",
+    "pad_tt_rank", "random_cp", "random_tt", "sample_cp_rp", "sample_tt_rp",
+    "stack_ragged_cp", "stack_ragged_tt", "tensorize", "theory",
+    "trp_average", "trp_project", "tt_cp_inner", "tt_inner", "tt_svd",
 ]

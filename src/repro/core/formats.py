@@ -319,6 +319,91 @@ STRUCT_TYPES = (TTTensor, CPTensor, BatchedTTTensor, BatchedCPTensor)
 
 
 # ---------------------------------------------------------------------------
+# Rank-ragged coalescing: zero-pad structural ranks so SAME-dims tensors of
+# DIFFERENT ranks stack into one batched container (the serving batcher's
+# lane assembly — heterogeneous in-flight requests, one kernel dispatch).
+# EXACT, not approximate: a zero-padded bond/component channel contributes a
+# term with at least one zero factor to every entry of the full tensor, so
+# `pad_*_rank(t, ...).full() == t.full()` bitwise up to the usual float
+# contraction order.
+# ---------------------------------------------------------------------------
+
+def pad_tt_rank(t: TTTensor, ranks: Sequence[int]) -> TTTensor:
+    """Zero-pad a TT tensor's INTERIOR bond ranks up to `ranks` (len N+1).
+
+    Boundary ranks (r_0, r_N) must match the target exactly — `full()` and
+    the kernels rely on them, and padding a boundary would change the
+    tensor's meaning (extra outer slices), not embed it.
+    """
+    cur = t.ranks
+    ranks = tuple(int(r) for r in ranks)
+    if len(ranks) != t.order + 1:
+        raise ValueError(f"target ranks {ranks} must have length "
+                         f"order+1 = {t.order + 1}")
+    if ranks[0] != cur[0] or ranks[-1] != cur[-1]:
+        raise ValueError(f"cannot pad TT boundary ranks {cur[0], cur[-1]} "
+                         f"to {ranks[0], ranks[-1]}")
+    if any(r < c for r, c in zip(ranks, cur)):
+        raise ValueError(f"target ranks {ranks} below current {cur}")
+    cores = tuple(
+        jnp.pad(c, ((0, ranks[n] - cur[n]), (0, 0),
+                    (0, ranks[n + 1] - cur[n + 1])))
+        for n, c in enumerate(t.cores))
+    return TTTensor(cores)
+
+
+def pad_cp_rank(t: CPTensor, rank: int) -> CPTensor:
+    """Zero-pad a CP tensor's component rank up to `rank` (exact)."""
+    if rank < t.rank:
+        raise ValueError(f"target rank {rank} below current {t.rank}")
+    if rank == t.rank:
+        return t
+    factors = tuple(jnp.pad(f, ((0, 0), (0, rank - t.rank)))
+                    for f in t.factors)
+    weights = (None if t.weights is None
+               else jnp.pad(t.weights, (0, rank - t.rank)))
+    return CPTensor(factors, weights)
+
+
+def stack_ragged_tt(tensors: Sequence[TTTensor]) -> BatchedTTTensor:
+    """Stack same-dims TT tensors of possibly DIFFERENT bond ranks.
+
+    Interior ranks are zero-padded to the per-bond max (exact); dims (and
+    boundary ranks) must agree — that is a structural mismatch no padding
+    can hide, and raises a ValueError naming it.
+    """
+    first = tensors[0]
+    for t in tensors[1:]:
+        if t.dims != first.dims:
+            raise ValueError(f"cannot coalesce TT tensors with mismatched "
+                             f"dims: {t.dims} != {first.dims}")
+    ranks = tuple(max(t.ranks[n] for t in tensors)
+                  for n in range(first.order + 1))
+    return BatchedTTTensor.stack([pad_tt_rank(t, ranks) for t in tensors])
+
+
+def stack_ragged_cp(tensors: Sequence[CPTensor]) -> BatchedCPTensor:
+    """Stack same-dims CP tensors of possibly DIFFERENT component ranks.
+
+    Ranks are zero-padded to the max (exact). A mix of weighted and
+    unweighted tensors is coalesced by materializing all-ones weights for
+    the unweighted ones BEFORE padding (ones on real components, zeros on
+    padded ones — exact either way).
+    """
+    first = tensors[0]
+    for t in tensors[1:]:
+        if t.dims != first.dims:
+            raise ValueError(f"cannot coalesce CP tensors with mismatched "
+                             f"dims: {t.dims} != {first.dims}")
+    rank = max(t.rank for t in tensors)
+    if any(t.weights is not None for t in tensors):
+        tensors = [t if t.weights is not None
+                   else CPTensor(t.factors, jnp.ones((t.rank,), t.dtype))
+                   for t in tensors]
+    return BatchedCPTensor.stack([pad_cp_rank(t, rank) for t in tensors])
+
+
+# ---------------------------------------------------------------------------
 # Random constructions
 # ---------------------------------------------------------------------------
 

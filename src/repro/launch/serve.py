@@ -52,16 +52,32 @@ class SlotServer:
             lambda p, c, t, pos: model.decode_step(p, c, t, pos))
 
     def _feed_prompt(self, slot: int, req: Request) -> None:
-        # token-by-token prefill through the decode path (exactly correct,
-        # simplest for heterogeneous families; batched prefill is an
-        # optimization layer on top).
-        for t in req.prompt:
-            tok = self.cur_tok.copy()
-            tok[slot] = t
+        """Whole-prompt prefill, batched onto the device in one transfer.
+
+        Builds the (S, slots) token/position matrices the token-by-token
+        loop would have fed step by step — other slots repeat their current
+        token at their current position, an idempotent cache write — ships
+        them to the device once, and enqueues S async dispatches of the
+        SAME jitted decode step the generation loop runs, syncing the host
+        only for the final argmax. Reusing that one compiled executable
+        (rather than a separately-jitted scan over the prompt) is what
+        makes greedy decode bit-identical to token-by-token stepping: XLA
+        gives no cross-program determinism guarantee, and ulp-level logit
+        differences between two compilations can flip a near-tie argmax.
+        """
+        S = len(req.prompt)
+        if S == 0:
+            raise ValueError(f"request {req.rid} has an empty prompt")
+        toks = np.broadcast_to(self.cur_tok, (S, self.slots)).copy()
+        toks[:, slot] = np.asarray(req.prompt, np.int32)
+        poss = np.broadcast_to(self.pos, (S, self.slots)).copy()
+        poss[:, slot] = self.pos[slot] + np.arange(S, dtype=np.int32)
+        toks_d, poss_d = jnp.asarray(toks), jnp.asarray(poss)
+        logits = None
+        for i in range(S):
             logits, self.cache = self._step(
-                self.params, self.cache, jnp.asarray(tok),
-                jnp.asarray(self.pos))
-            self.pos[slot] += 1
+                self.params, self.cache, toks_d[i], poss_d[i])
+        self.pos[slot] += S
         self.cur_tok[slot] = int(jnp.argmax(logits[slot]))
 
     def submit(self, req: Request) -> bool:

@@ -4,7 +4,10 @@ One protocol (`RPOperator`), one declarative spec (`ProjectorSpec`), a
 registry (`register_family` / `make_projector`), and a structure-dispatched
 functional entry point (`project` / `reconstruct`) with backend routing
 ('auto' | 'pallas' | 'xla') to the order-N mode-sweep Pallas TPU kernels.
-Dispatch instrumentation is context-local (`DispatchStats` /
+`project_many` fans a heterogeneous list of payloads (dense / TT / CP,
+rank-ragged) out to those paths in one dispatch per structure group — the
+serving engine's batch entry. Dispatch instrumentation is context-local
+(`DispatchStats` /
 `dispatch_stats()` / `kernel_call_count()`). Mesh-aware sharded entry
 points (`project_sharded` / `reconstruct_sharded` / `sketch_tree_sharded`
 / `bucket_pspec`) lay the bucket axis out over a `jax.sharding.Mesh` with
@@ -36,6 +39,7 @@ of `rp.project` and kept for one release.
 from . import families as _families  # noqa: F401  (registers built-ins)
 from .dispatch import (DispatchStats, current_stats, dispatch_stats,
                        force_pallas, kernel_call_count, project, reconstruct)
+from .many import project_many
 from .protocol import FormatMismatchError, ProjectorSpec, RPOperator
 from .registry import (get_family, list_families, make_projector,
                        register_family)
@@ -46,6 +50,6 @@ __all__ = [
     "DispatchStats", "FormatMismatchError", "ProjectorSpec", "RPOperator",
     "bucket_pspec", "current_stats", "dispatch_stats", "force_pallas",
     "get_family", "kernel_call_count", "list_families", "make_projector",
-    "project", "project_sharded", "reconstruct", "reconstruct_sharded",
-    "register_family", "sketch_tree_sharded",
+    "project", "project_many", "project_sharded", "reconstruct",
+    "reconstruct_sharded", "register_family", "sketch_tree_sharded",
 ]

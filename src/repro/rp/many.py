@@ -1,0 +1,138 @@
+"""Mixed-structure batch projection: the serving engine's fan-out entry.
+
+`project_many(op, inputs)` takes a heterogeneous LIST of single-item
+payloads — dense tensors / flat vectors (ragged lengths, zero-padded),
+`TTTensor`s (rank-ragged: interior bond ranks zero-padded, exact) and
+`CPTensor`s (rank-ragged likewise) — and projects ALL of them with the
+fewest possible kernel dispatches: the inputs are grouped by structure,
+each group is coalesced into one batched container (`(B, prod(in_dims))`
+for dense payloads, `BatchedTTTensor` / `BatchedCPTensor` for structured
+ones) and fanned out to the EXISTING dispatch paths of `rp.project` — the
+batched mode-sweep kernels for the dense group, the carry-sweep kernels
+for the structured ones. One dispatch per non-empty structure group; a
+structurally homogeneous list (what the serving batcher's lanes deliver)
+is exactly ONE dispatch regardless of per-item ranks or flat lengths.
+
+Results come back as a `(len(inputs), k)` sketch stack in input order.
+
+Shape bucketing (`bucket=True`, the default): the coalesced batch size is
+zero-padded up to a power of two (floor 8) and structured interior ranks
+up to powers of two before dispatch, the padding sliced away afterwards.
+Padding is EXACT (zero rows / zero rank channels contribute nothing) and
+exists purely so a serving loop's per-tick shapes REPEAT: without it every
+ragged (B, ranks) combination traces and compiles its own kernel — a
+compile storm — while bucketed ticks hit the jit cache after the first.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.formats import (BatchedCPTensor, BatchedTTTensor, CPTensor,
+                                TTTensor, _prod, stack_ragged_cp,
+                                stack_ragged_tt)
+
+from .dispatch import project
+from .protocol import FormatMismatchError, RPOperator
+
+
+def _pow2ceil(n: int, floor: int = 1) -> int:
+    """Smallest power of two >= max(n, floor)."""
+    out = 1
+    while out < max(int(n), floor):
+        out *= 2
+    return out
+
+
+def _pad_batch_tt(xb: BatchedTTTensor, b_pad: int) -> BatchedTTTensor:
+    """Zero-pad batch to `b_pad` rows and interior bond ranks to powers of
+    two (exact; see module docstring)."""
+    rk = xb.ranks
+    tgt = (rk[0],) + tuple(_pow2ceil(r) for r in rk[1:-1]) + (rk[-1],)
+    cores = tuple(
+        jnp.pad(c, ((0, b_pad - xb.batch), (0, tgt[n] - rk[n]), (0, 0),
+                    (0, tgt[n + 1] - rk[n + 1])))
+        for n, c in enumerate(xb.cores))
+    return BatchedTTTensor(cores)
+
+
+def _pad_batch_cp(xb: BatchedCPTensor, b_pad: int) -> BatchedCPTensor:
+    """Zero-pad batch to `b_pad` rows and the component rank to a power of
+    two (exact)."""
+    r_pad = _pow2ceil(xb.rank)
+    factors = tuple(
+        jnp.pad(f, ((0, b_pad - xb.batch), (0, 0), (0, r_pad - xb.rank)))
+        for f in xb.factors)
+    weights = (None if xb.weights is None else jnp.pad(
+        xb.weights, ((0, b_pad - xb.batch), (0, r_pad - xb.rank))))
+    return BatchedCPTensor(factors, weights)
+
+
+def _flat_payload(op: RPOperator, x) -> jnp.ndarray:
+    """One dense payload -> a `(prod(in_dims),)` flat vector, zero-padded.
+
+    Accepts an `in_dims`-shaped tensor, any tensorization with the right
+    element count, or a 1-D flat vector no longer than prod(in_dims) —
+    padding a SHORT vector is harmless under a linear map. Anything bigger
+    (including an already-batched array) is a typed error: `project_many`
+    is a per-request fan-out, one payload = one sketch row.
+    """
+    x = jnp.asarray(x)
+    size = _prod(op.in_dims)
+    if x.size == size:
+        return x.reshape(-1)
+    if x.ndim == 1 and x.size < size:
+        return jnp.pad(x, (0, size - x.size))
+    raise FormatMismatchError(
+        f"dense payload of shape {tuple(x.shape)} is not a single input for "
+        f"operator in_dims={tuple(op.in_dims)} (flat size {size}); "
+        "project_many takes one payload per sketch row")
+
+
+def project_many(op: RPOperator, inputs, *, backend: str = "auto",
+                 bucket: bool = True) -> jnp.ndarray:
+    """Project a heterogeneous list of payloads in the fewest dispatches.
+
+    inputs : sequence of dense arrays / flat vectors / `TTTensor`s /
+             `CPTensor`s (each a SINGLE item — batched containers already
+             are one dispatch via `rp.project` and are rejected here).
+    bucket : pad batch size / interior ranks to powers of two before
+             dispatch (exact; keeps repeat-call shapes stable so jit
+             caches hit — see module docstring). Disable to dispatch the
+             tight ragged shapes as-is.
+    Returns the `(len(inputs), k)` sketches in input order. Dispatch count
+    equals the number of distinct structure groups present (<= 3), counted
+    by the usual `rp.dispatch_stats()` instrumentation.
+    """
+    inputs = list(inputs)
+    if not inputs:
+        return jnp.zeros((0, op.k), jnp.float32)
+    groups: dict[str, tuple[list[int], list]] = {}
+    for i, x in enumerate(inputs):
+        if isinstance(x, (BatchedTTTensor, BatchedCPTensor)):
+            raise FormatMismatchError(
+                f"project_many got a {type(x).__name__}; batched containers "
+                "are already one dispatch — call rp.project directly")
+        tag = ("tt" if isinstance(x, TTTensor)
+               else "cp" if isinstance(x, CPTensor) else "dense")
+        idxs, xs = groups.setdefault(tag, ([], []))
+        idxs.append(i)
+        xs.append(x)
+    rows: list = [None] * len(inputs)
+    for tag, (idxs, xs) in groups.items():
+        b_pad = _pow2ceil(len(xs), 8) if bucket else len(xs)
+        if tag == "dense":
+            xb = jnp.stack([_flat_payload(op, x) for x in xs])
+            if b_pad > len(xs):
+                xb = jnp.pad(xb, ((0, b_pad - len(xs)), (0, 0)))
+        elif tag == "tt":
+            xb = stack_ragged_tt(xs)
+            if bucket:
+                xb = _pad_batch_tt(xb, b_pad)
+        else:
+            xb = stack_ragged_cp(xs)
+            if bucket:
+                xb = _pad_batch_cp(xb, b_pad)
+        y = project(op, xb, backend=backend)        # ONE dispatch per group
+        for j, idx in enumerate(idxs):
+            rows[idx] = y[j]
+    return jnp.stack(rows)

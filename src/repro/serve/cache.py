@@ -1,0 +1,93 @@
+"""LRU operator cache: (ProjectorSpec, seed) -> sampled RPOperator.
+
+The paper's operators are a few small random cores FULLY determined by
+(spec, PRNG seed) — `rp.make_projector` is deterministic in both — so a
+cache hit means ZERO regeneration work and an evicted entry can always be
+re-materialized bitwise-identical later. That makes an LRU keyed on the
+declarative spec the entire "model registry" a sketch-serving deployment
+needs: no weights on disk, no versioned artifacts, just specs.
+
+`CacheStats` records hits / misses / evictions and the cumulative
+regeneration time so the serving report can show what the cache saved.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict
+
+import jax
+
+from repro.rp import ProjectorSpec, RPOperator, make_projector
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    regen_s: float = 0.0     # cumulative operator-sampling wall time
+
+    @property
+    def gets(self) -> int:
+        return self.hits + self.misses
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.gets if self.gets else 0.0
+
+    def as_dict(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions, "regen_s": self.regen_s,
+                "hit_rate": self.hit_rate}
+
+
+class OperatorCache:
+    """LRU of sampled operators keyed on (ProjectorSpec, seed).
+
+    `ProjectorSpec` is a frozen dataclass, so equality/hashing covers every
+    field (family, k, dims, rank, dtype, backend) — two requests share an
+    operator iff their declarative descriptions AND seed agree. Eviction is
+    least-recently-USED (a `get` refreshes recency, hit or miss).
+    """
+
+    def __init__(self, capacity: int = 8):
+        if capacity < 1:
+            raise ValueError(f"cache capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self.stats = CacheStats()
+        self._entries: "OrderedDict[tuple, RPOperator]" = OrderedDict()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key) -> bool:
+        spec, seed = key
+        return (spec, int(seed)) in self._entries
+
+    def get(self, spec: ProjectorSpec, seed: int = 0) -> RPOperator:
+        """The operator for (spec, seed): cached, or sampled-and-cached.
+
+        A miss samples via `make_projector(spec, PRNGKey(seed))` and times
+        it into `stats.regen_s`; determinism of the factory guarantees a
+        re-materialized post-eviction operator equals the original bitwise.
+        """
+        key = (spec, int(seed))
+        op = self._entries.get(key)
+        if op is not None:
+            self._entries.move_to_end(key)
+            self.stats.hits += 1
+            return op
+        self.stats.misses += 1
+        t0 = time.perf_counter()
+        op = make_projector(spec, jax.random.PRNGKey(int(seed)))
+        self.stats.regen_s += time.perf_counter() - t0
+        self._entries[key] = op
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+            self.stats.evictions += 1
+        return op
+
+    def keys(self) -> list[tuple]:
+        """Cached (spec, seed) keys, least-recently-used first."""
+        return list(self._entries)

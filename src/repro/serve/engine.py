@@ -1,0 +1,135 @@
+"""The sketch-serving engine: queue -> batcher -> one dispatch -> store.
+
+`SketchServer` ties the subsystem together: requests enter through
+`submit`, the `DynamicBatcher` coalesces them into lanes, and every `tick`
+flushes ONE lane through `rp.project_many` — exactly one kernel dispatch
+per tick, with the operator fetched from the LRU `OperatorCache` (a hit
+skips regeneration entirely). Completed sketches whose spec matches the
+attached `SketchStore`'s are ingested, making them immediately queryable
+through the JL similarity endpoints (`query` / `pairwise`).
+
+The engine is synchronous and clock-explicit (`now` in trace-clock
+microseconds): the load generator / trace replayer owns time, so latency
+percentiles are a deterministic function of the trace and the flush
+policy. An async front-end is a transport detail on top of `submit`/`tick`.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro import rp
+from repro.core.formats import CPTensor, TTTensor
+
+from .batcher import DynamicBatcher, SketchRequest
+from .cache import OperatorCache
+from .config import ServeConfig
+from .store import PairwiseResult, QueryResult, SketchStore
+
+
+class SketchServer:
+    """RP-as-a-service: continuously batched sketching + JL retrieval."""
+
+    def __init__(self, cfg: ServeConfig | None = None,
+                 store: SketchStore | None = None):
+        self.cfg = cfg if cfg is not None else ServeConfig()
+        self.batcher = DynamicBatcher(self.cfg)
+        self.cache = OperatorCache(self.cfg.cache_capacity)
+        self.store = store
+        self.done: list[SketchRequest] = []
+        self.ticks = 0
+        self.occupancy: list[float] = []
+        self._next_rid = 0
+
+    # -- intake ----------------------------------------------------------
+    def submit(self, payload, spec: rp.ProjectorSpec, *, seed: int = 0,
+               now: float = 0.0) -> SketchRequest:
+        """Queue one payload for sketching under (spec, seed).
+
+        Structured payloads are validated against the spec's dims HERE —
+        failing at submit time with a typed error beats poisoning a whole
+        batch at dispatch time.
+        """
+        if isinstance(payload, (TTTensor, CPTensor)):
+            if tuple(payload.dims) != tuple(spec.dims):
+                raise rp.FormatMismatchError(
+                    f"{type(payload).__name__} payload dims "
+                    f"{tuple(payload.dims)} != spec dims {tuple(spec.dims)}")
+        req = SketchRequest(rid=self._next_rid, payload=payload, spec=spec,
+                            seed=seed, t_submit=float(now))
+        self._next_rid += 1
+        self.batcher.submit(req)
+        return req
+
+    # -- the serving loop ------------------------------------------------
+    def tick(self, now: float, *, force: bool = False) -> int:
+        """Flush one lane: ONE `rp.project_many` dispatch. Returns #served."""
+        got = self.batcher.next_batch(now, force=force)
+        if got is None:
+            return 0
+        key, batch = got
+        op = self.cache.get(key.spec, key.seed)
+        ys = rp.project_many(op, [r.payload for r in batch],
+                             backend=self.cfg.backend)
+        self.ticks += 1
+        self.occupancy.append(len(batch) / self.cfg.max_batch)
+        ingest = (self.store is not None and self.cfg.ingest
+                  and key.spec == self.store.spec)
+        ids = self.store.add(np.asarray(ys)) if ingest else None
+        for i, req in enumerate(batch):
+            req.sketch = ys[i]
+            req.t_done = float(now)
+            if ids is not None:
+                req.store_id = int(ids[i])
+            req.payload = None      # the engine's point: drop the original
+        self.done.extend(batch)
+        return len(batch)
+
+    def drain(self, now: float) -> int:
+        """Flush everything still queued (end of trace). Returns #served.
+
+        Advances the clock lane by lane to each flush DEADLINE (so drained
+        requests still pay the latency the policy promises), never earlier
+        than `now`.
+        """
+        served = 0
+        while self.batcher.pending():
+            deadline = self.batcher.next_deadline()
+            t = max(float(now), deadline if deadline is not None else now)
+            n = self.tick(t, force=True)
+            if n == 0:      # defensive: force=True always pops when pending
+                break
+            served += n
+        return served
+
+    # -- retrieval (straight to the store; no batching needed: a query is
+    # -- one tiled matmul sweep, not a kernel dispatch) -------------------
+    def query(self, q, top_m: int, *, delta: float | None = None
+              ) -> QueryResult:
+        if self.store is None:
+            raise ValueError("this server has no sketch store attached")
+        return self.store.query(q, top_m, delta=delta)
+
+    def pairwise(self, ids_a, ids_b, *, delta: float | None = None
+                 ) -> PairwiseResult:
+        if self.store is None:
+            raise ValueError("this server has no sketch store attached")
+        return self.store.pairwise(ids_a, ids_b, delta=delta)
+
+    # -- telemetry -------------------------------------------------------
+    def stats(self) -> dict:
+        """Serving report: latency percentiles, occupancy, cache stats."""
+        lat = np.asarray([r.latency_us for r in self.done], np.float64)
+        out = {
+            "requests_done": len(self.done),
+            "pending": self.batcher.pending(),
+            "ticks": self.ticks,
+            "occupancy_mean": float(np.mean(self.occupancy))
+            if self.occupancy else 0.0,
+            "p50_us": float(np.percentile(lat, 50)) if lat.size else 0.0,
+            "p99_us": float(np.percentile(lat, 99)) if lat.size else 0.0,
+            "cache": self.cache.stats.as_dict(),
+        }
+        if self.store is not None:
+            out["store_size"] = len(self.store)
+            out["store_bytes"] = self.store.nbytes()
+        return out

@@ -35,3 +35,22 @@ def run_subprocess(code: str, devices: int = 8, timeout: int = 900):
 @pytest.fixture
 def subproc():
     return run_subprocess
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_per_module():
+    """Drop compiled XLA executables after each test module.
+
+    Every jitted executable holds mmapped JIT code pages; across the full
+    suite the process accumulates ~60k anonymous maps and crosses the
+    kernel's vm.max_map_count (65530 by default), at which point the next
+    backend_compile segfaults. Clearing per module keeps the peak bounded
+    by the hungriest single module instead of the suite-wide sum.
+    """
+    yield
+    import gc
+
+    import jax
+
+    jax.clear_caches()
+    gc.collect()

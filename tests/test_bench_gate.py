@@ -9,7 +9,7 @@ from benchmarks.check_regression import check, main
 
 def _record():
     return {
-        "schema": "bench_rp/v4",
+        "schema": "bench_rp/v5",
         "sections": {
             "timing": [
                 {"name": "time/batched/tt/project/B=16", "us_per_call": 10.0,
@@ -23,6 +23,9 @@ def _record():
                 {"name": "shard/collective/sync=sketch-mean",
                  "us_per_call": 7.0,
                  "derived": {"launches_project": 6, "wire_bytes": 1536}},
+                {"name": "serve/trace/mixed/B=64", "us_per_call": 900.0,
+                 "derived": {"launches_project": 28, "ticks": 28,
+                             "hit_rate": 0.96}},
             ],
             "smoke": [
                 {"name": "smoke/tt", "us_per_call": 1.0, "derived": {"k": 64}},
@@ -43,16 +46,17 @@ def test_wall_clock_noise_is_not_gated():
 
 def test_schema_drift_fails():
     new = _record()
-    new["schema"] = "bench_rp/v5"
+    new["schema"] = "bench_rp/v6"
     assert any("schema drift" in e for e in check(new, _record()))
 
 
 def test_required_row_prefixes_cover_struct_subsystem():
     """A timing record that stops emitting a whole gated row family — the
-    order-N frontier, the compressed-domain struct/ rows, or the
-    sharded-engine shard/ rows — fails even if the baseline ALSO lost them
-    (row-by-row diffing alone can't see that)."""
-    for prefix in ("struct/", "time/order/", "shard/"):
+    order-N frontier, the compressed-domain struct/ rows, the
+    sharded-engine shard/ rows, or the serving-engine serve/ rows — fails
+    even if the baseline ALSO lost them (row-by-row diffing alone can't
+    see that)."""
+    for prefix in ("struct/", "time/order/", "shard/", "serve/"):
         new = _record()
         new["sections"]["timing"] = [
             r for r in new["sections"]["timing"]
@@ -61,7 +65,7 @@ def test_required_row_prefixes_cover_struct_subsystem():
         assert any("required prefix" in e and prefix in e
                    for e in check(new, base))
     # records without a timing section (e.g. --only smoke) are not gated
-    smoke_only = {"schema": "bench_rp/v4",
+    smoke_only = {"schema": "bench_rp/v5",
                   "sections": {"smoke": _record()["sections"]["smoke"]}}
     assert not any("required prefix" in e
                    for e in check(smoke_only, copy.deepcopy(smoke_only)))

@@ -1,0 +1,497 @@
+"""The sketch-serving engine end to end: project_many fan-out, rank-ragged
+coalescing, the dynamic batcher's flush policy, the LRU operator cache,
+the JL similarity store, the trace replayer's acceptance criteria, and the
+SlotServer batched-prefill equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import rp
+from repro.core.formats import (pad_cp_rank, pad_tt_rank, random_cp,
+                                random_tt, stack_ragged_cp, stack_ragged_tt)
+from repro.serve import (DynamicBatcher, OperatorCache, ServeConfig,
+                         SketchRequest, SketchServer, SketchStore, replay,
+                         synth_trace)
+
+SPEC = rp.ProjectorSpec(family="tt", k=128, dims=(4, 8, 8), rank=2)
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# rank-ragged coalescing (core.formats)
+# ---------------------------------------------------------------------------
+
+def test_pad_tt_rank_is_exact():
+    t = random_tt(KEY, (4, 6, 5), 2)
+    padded = pad_tt_rank(t, (1, 5, 4, 1))
+    assert padded.ranks == (1, 5, 4, 1)
+    np.testing.assert_allclose(np.asarray(padded.full()),
+                               np.asarray(t.full()), rtol=1e-6)
+
+
+def test_pad_tt_rank_rejects_boundary_and_shrink():
+    t = random_tt(KEY, (4, 6, 5), 3)
+    with pytest.raises(ValueError, match="boundary"):
+        pad_tt_rank(t, (2, 4, 4, 1))
+    with pytest.raises(ValueError, match="below current"):
+        pad_tt_rank(t, (1, 2, 4, 1))
+    with pytest.raises(ValueError, match="length"):
+        pad_tt_rank(t, (1, 4, 1))
+
+
+def test_pad_cp_rank_is_exact():
+    t = random_cp(KEY, (4, 6, 5), 2)
+    padded = pad_cp_rank(t, 6)
+    assert padded.rank == 6
+    np.testing.assert_allclose(np.asarray(padded.full()),
+                               np.asarray(t.full()), rtol=1e-6)
+    with pytest.raises(ValueError, match="below current"):
+        pad_cp_rank(t, 1)
+
+
+def test_stack_ragged_tt_preserves_each_item():
+    ts = [random_tt(jax.random.fold_in(KEY, i), (4, 6, 5), r)
+          for i, r in enumerate((2, 4, 3))]
+    xb = stack_ragged_tt(ts)
+    assert xb.batch == 3 and xb.ranks == (1, 4, 4, 1)
+    full = np.asarray(xb.full())
+    for i, t in enumerate(ts):
+        np.testing.assert_allclose(full[i], np.asarray(t.full()), rtol=1e-5)
+    with pytest.raises(ValueError, match="mismatched"):
+        stack_ragged_tt([ts[0], random_tt(KEY, (4, 6, 4), 2)])
+
+
+def test_stack_ragged_cp_mixes_weighted_and_unweighted():
+    a = random_cp(jax.random.fold_in(KEY, 0), (4, 6, 5), 2)
+    w = jnp.asarray([2.0, 0.5, 1.5])
+    b_t = random_cp(jax.random.fold_in(KEY, 1), (4, 6, 5), 3)
+    b_t = type(b_t)(b_t.factors, w)
+    xb = stack_ragged_cp([a, b_t])
+    assert xb.batch == 2 and xb.rank == 3 and xb.weights is not None
+    full = np.asarray(xb.full())
+    np.testing.assert_allclose(full[0], np.asarray(a.full()), rtol=1e-5)
+    np.testing.assert_allclose(full[1], np.asarray(b_t.full()), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# project_many (rp fan-out entry)
+# ---------------------------------------------------------------------------
+
+def test_project_many_matches_per_item_project():
+    op = rp.make_projector(SPEC, KEY)
+    inputs = [
+        jax.random.normal(jax.random.fold_in(KEY, 1), SPEC.dims),
+        jax.random.normal(jax.random.fold_in(KEY, 2), (100,)),  # short flat
+        random_tt(jax.random.fold_in(KEY, 3), SPEC.dims, 2),
+        random_tt(jax.random.fold_in(KEY, 4), SPEC.dims, 4),    # ragged rank
+        random_cp(jax.random.fold_in(KEY, 5), SPEC.dims, 3),
+    ]
+    ys = rp.project_many(op, inputs)
+    assert ys.shape == (5, SPEC.k)
+    for i, x in enumerate(inputs):
+        ref = rp.project(op, x)
+        np.testing.assert_allclose(np.asarray(ys[i]), np.asarray(ref),
+                                   rtol=2e-4, atol=1e-5)
+
+
+def test_project_many_one_dispatch_per_structure_group():
+    # MXU-aligned spec (k % 128 == 0, dims % 8 == 0): force_pallas only
+    # routes aligned shapes to the kernels, and only kernel dispatches
+    # are counted by dispatch_stats.
+    spec = rp.ProjectorSpec(family="tt", k=128, dims=(8, 16, 16), rank=2)
+    op = rp.make_projector(spec, KEY)
+    tts = [random_tt(jax.random.fold_in(KEY, i), spec.dims, 2 + i % 2)
+           for i in range(4)]
+    with rp.dispatch_stats() as st, rp.force_pallas():
+        rp.project_many(op, tts)                      # homogeneous lane
+    assert st.kernel_calls == 1
+    mixed = [tts[0], random_cp(KEY, spec.dims, 2),
+             jax.random.normal(KEY, spec.dims)]
+    with rp.dispatch_stats() as st, rp.force_pallas():
+        rp.project_many(op, mixed)
+    assert st.kernel_calls == 3                       # one per structure
+
+
+def test_project_many_rejects_batched_and_oversize():
+    op = rp.make_projector(SPEC, KEY)
+    tts = [random_tt(KEY, SPEC.dims, 2)] * 2
+    batched = stack_ragged_tt(tts)
+    with pytest.raises(rp.FormatMismatchError, match="Batched"):
+        rp.project_many(op, [batched])
+    too_big = jax.random.normal(KEY, (2, SPEC.input_size))
+    with pytest.raises(rp.FormatMismatchError, match="one payload"):
+        rp.project_many(op, [too_big])
+    assert rp.project_many(op, []).shape == (0, SPEC.k)
+
+
+# ---------------------------------------------------------------------------
+# ServeConfig / store typed errors (and python -O survival)
+# ---------------------------------------------------------------------------
+
+def test_serve_config_typed_errors():
+    with pytest.raises(ValueError, match="flush window"):
+        ServeConfig(flush_us=0.0)
+    with pytest.raises(ValueError, match="flush window"):
+        ServeConfig(flush_us=-5.0)
+    with pytest.raises(ValueError, match="max_batch"):
+        ServeConfig(max_batch=0)
+    with pytest.raises(ValueError, match="backend"):
+        ServeConfig(backend="tpu")
+    with pytest.raises(ValueError, match="cache_capacity"):
+        ServeConfig(cache_capacity=0)
+    with pytest.raises(ValueError, match="delta"):
+        ServeConfig(delta=1.5)
+
+
+def test_store_typed_errors():
+    store = SketchStore(SPEC)
+    with pytest.raises(ValueError, match="empty store"):
+        store.query(np.zeros(SPEC.k, np.float32), 1)
+    store.add(np.zeros((4, SPEC.k), np.float32))
+    with pytest.raises(ValueError, match="top_m"):
+        store.query(np.zeros(SPEC.k, np.float32), 5)   # > store size
+    with pytest.raises(ValueError, match="top_m"):
+        store.query(np.zeros(SPEC.k, np.float32), 0)
+    with pytest.raises(ValueError, match="mixed-dtype"):
+        store.add(np.zeros((1, SPEC.k), np.float64))
+    with pytest.raises(ValueError, match="out of range"):
+        store.pairwise([0], [7])
+    with pytest.raises(ValueError, match="k ="):
+        store.query(np.zeros(SPEC.k + 1, np.float32), 1)
+
+
+def test_serve_errors_survive_python_O():
+    """The config/store misuse checks are typed ValueErrors, not asserts —
+    they must still fire under python -O."""
+    import os
+    import subprocess
+    import sys
+    code = """
+import numpy as np
+from repro.serve import ServeConfig, SketchStore
+from repro.rp import ProjectorSpec
+try:
+    ServeConfig(flush_us=0.0)
+except ValueError as e:
+    assert "flush window" in str(e), e
+else:
+    raise SystemExit("flush_us=0 not caught under -O")
+spec = ProjectorSpec(family="tt", k=64, dims=(4, 8), rank=2)
+store = SketchStore(spec)
+store.add(np.zeros((2, 64), np.float32))
+try:
+    store.query(np.zeros(64, np.float32), 3)
+except ValueError as e:
+    assert "top_m" in str(e), e
+else:
+    raise SystemExit("top_m overflow not caught under -O")
+try:
+    store.add(np.zeros((1, 64), np.float64))
+except ValueError as e:
+    assert "mixed-dtype" in str(e), e
+else:
+    raise SystemExit("mixed-dtype ingest not caught under -O")
+print("O_SAFE_OK")
+"""
+    env = dict(os.environ, PYTHONPATH="src", JAX_PLATFORMS="cpu")
+    res = subprocess.run([sys.executable, "-O", "-c", code], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert res.returncode == 0 and "O_SAFE_OK" in res.stdout, (
+        res.stdout, res.stderr)
+
+
+# ---------------------------------------------------------------------------
+# operator cache
+# ---------------------------------------------------------------------------
+
+def test_cache_hit_iff_every_spec_field_and_seed_match():
+    cache = OperatorCache(capacity=32)
+    base = dict(family="tt", k=128, dims=(4, 8, 8), rank=2)
+    cache.get(rp.ProjectorSpec(**base), seed=0)
+    assert cache.stats.misses == 1
+    cache.get(rp.ProjectorSpec(**base), seed=0)
+    assert cache.stats.hits == 1                      # identical spec: hit
+    variants = [
+        dict(base, family="cp"),
+        dict(base, k=256),
+        dict(base, dims=(8, 4, 8)),
+        dict(base, rank=3),
+        dict(base, dtype=jnp.bfloat16),
+        dict(base, backend="xla"),
+    ]
+    for i, kw in enumerate(variants):
+        cache.get(rp.ProjectorSpec(**kw), seed=0)
+        assert cache.stats.misses == 2 + i, kw        # every field keys
+    cache.get(rp.ProjectorSpec(**base), seed=7)       # seed keys too
+    assert cache.stats.misses == 2 + len(variants)
+    assert cache.stats.hits == 1
+
+
+def test_cache_lru_eviction_order():
+    cache = OperatorCache(capacity=2)
+    a = rp.ProjectorSpec(family="tt", k=64, dims=(4, 8), rank=2)
+    b = rp.ProjectorSpec(family="tt", k=64, dims=(4, 8), rank=3)
+    c = rp.ProjectorSpec(family="tt", k=64, dims=(4, 8), rank=4)
+    cache.get(a)
+    cache.get(b)
+    cache.get(a)                   # refresh a: b is now least-recent
+    cache.get(c)                   # evicts b
+    assert cache.stats.evictions == 1
+    assert (a, 0) in cache and (c, 0) in cache and (b, 0) not in cache
+    assert [k[0] for k in cache.keys()] == [a, c]     # LRU-first ordering
+
+
+def test_cache_regenerates_bitwise_identical_after_eviction():
+    cache = OperatorCache(capacity=1)
+    a = rp.ProjectorSpec(family="tt", k=64, dims=(4, 8), rank=2)
+    b = rp.ProjectorSpec(family="cp", k=64, dims=(4, 8), rank=2)
+    x = jax.random.normal(KEY, (4, 8))
+    y_first = np.asarray(rp.project(cache.get(a, seed=3), x))
+    cache.get(b)                                      # evicts a
+    assert (a, 3) not in cache
+    y_again = np.asarray(rp.project(cache.get(a, seed=3), x))
+    assert cache.stats.evictions >= 1
+    np.testing.assert_array_equal(y_first, y_again)   # bitwise
+
+
+# ---------------------------------------------------------------------------
+# dynamic batcher flush policy
+# ---------------------------------------------------------------------------
+
+def _req(rid, payload, t, spec=SPEC, seed=0):
+    return SketchRequest(rid=rid, payload=payload, spec=spec, seed=seed,
+                         t_submit=t)
+
+
+def test_batcher_max_batch_flush():
+    cfg = ServeConfig(max_batch=3, flush_us=1e9)
+    bat = DynamicBatcher(cfg)
+    x = np.zeros(SPEC.dims, np.float32)
+    for i in range(3):
+        bat.submit(_req(i, x, t=float(i)))
+    assert bat.ready(now=2.0)                         # full, age irrelevant
+    key, batch = bat.next_batch(now=2.0)
+    assert [r.rid for r in batch] == [0, 1, 2]
+    assert bat.pending() == 0 and bat.lanes() == 0
+
+
+def test_batcher_latency_flush_at_exact_deadline():
+    """Regression: readiness must use the SAME float expression as
+    next_deadline (t_submit + flush_us); computing `now - t_submit >=
+    flush_us` can round the other way and spin the replay loop forever."""
+    cfg = ServeConfig(max_batch=64, flush_us=1000.0)
+    bat = DynamicBatcher(cfg)
+    x = np.zeros(SPEC.dims, np.float32)
+    t0 = 3337.3333333333335                           # adversarial float
+    bat.submit(_req(0, x, t=t0))
+    deadline = bat.next_deadline()
+    assert deadline == t0 + 1000.0
+    assert not bat.ready(now=deadline - 1e-6)
+    assert bat.ready(now=deadline)                    # ready AT deadline
+    got = bat.next_batch(now=deadline)
+    assert got is not None and len(got[1]) == 1
+
+
+def test_batcher_lanes_split_by_structure_and_seed():
+    cfg = ServeConfig(max_batch=8, flush_us=1000.0)
+    bat = DynamicBatcher(cfg)
+    bat.submit(_req(0, np.zeros(SPEC.dims, np.float32), t=0.0))
+    bat.submit(_req(1, random_tt(KEY, SPEC.dims, 2), t=0.0))
+    bat.submit(_req(2, random_cp(KEY, SPEC.dims, 2), t=0.0))
+    bat.submit(_req(3, np.zeros(SPEC.dims, np.float32), t=0.0, seed=1))
+    assert bat.lanes() == 4
+    # FIFO across lanes; fullness breaks the four-way t_submit tie
+    bat.submit(_req(4, np.zeros(SPEC.dims, np.float32), t=1.0))
+    key, batch = bat.next_batch(now=1e6, force=True)
+    assert key.structure == "dense" and len(batch) == 2
+
+
+def test_batcher_force_flush_and_empty():
+    cfg = ServeConfig(max_batch=8, flush_us=1e9)
+    bat = DynamicBatcher(cfg)
+    assert bat.next_batch(now=0.0, force=True) is None
+    assert bat.next_deadline() is None
+    bat.submit(_req(0, np.zeros(SPEC.dims, np.float32), t=0.0))
+    assert not bat.ready(now=10.0)
+    assert bat.next_batch(now=10.0) is None           # not ready, no force
+    got = bat.next_batch(now=10.0, force=True)        # drain path
+    assert got is not None and len(got[1]) == 1
+
+
+# ---------------------------------------------------------------------------
+# the serving engine (acceptance criteria)
+# ---------------------------------------------------------------------------
+
+def test_mixed_trace_one_dispatch_per_tick():
+    """>= 64 mixed dense/TT/CP requests complete, with exactly ONE
+    rp.project dispatch per batcher tick (rp.dispatch_stats-asserted)."""
+    spec = rp.ProjectorSpec(family="tt", k=128, dims=(8, 16, 16), rank=2)
+    server = SketchServer(ServeConfig(max_batch=8, flush_us=1000.0),
+                          SketchStore(spec))
+    trace = synth_trace(64, [(spec, 0)], seed=3)
+    with rp.dispatch_stats() as st, rp.force_pallas():
+        rep = replay(server, trace)
+    assert rep["requests_done"] == 64 and rep["pending"] == 0
+    assert st.kernel_calls == rep["ticks"] > 0
+    assert all(r.done and r.sketch.shape == (spec.k,) for r in server.done)
+    assert all(r.payload is None for r in server.done)  # originals dropped
+    assert rep["store_size"] == 64                      # everything ingested
+    # flush policy bounds every queueing latency by the flush window
+    assert 0.0 < rep["p50_us"] <= rep["p99_us"] <= 1000.0 + 1e-6
+    assert 0.0 < rep["occupancy_mean"] <= 1.0
+
+
+def test_repeated_spec_trace_cache_hit_rate():
+    """Acceptance: >= 90% operator-cache hit rate on a repeated-spec
+    trace."""
+    server = SketchServer(ServeConfig(max_batch=4, flush_us=500.0))
+    trace = synth_trace(96, [(SPEC, 0)], mix=(1.0, 0.0, 0.0), seed=5)
+    rep = replay(server, trace)
+    assert rep["requests_done"] == 96
+    assert rep["cache"]["misses"] == 1
+    assert rep["cache"]["hit_rate"] >= 0.9
+
+
+def test_engine_submit_validates_structured_dims():
+    server = SketchServer(ServeConfig())
+    bad = random_tt(KEY, (4, 8, 4), 2)                # != SPEC.dims
+    with pytest.raises(rp.FormatMismatchError, match="dims"):
+        server.submit(bad, SPEC)
+    with pytest.raises(ValueError, match="no sketch store"):
+        server.query(np.zeros(SPEC.k, np.float32), 1)
+    with pytest.raises(ValueError, match="no sketch store"):
+        server.pairwise([0], [0])
+
+
+def test_store_spec_gates_ingestion():
+    other = rp.ProjectorSpec(family="tt", k=128, dims=(4, 8, 8), rank=3)
+    server = SketchServer(ServeConfig(max_batch=2, flush_us=10.0),
+                          SketchStore(SPEC))
+    x = np.ones(SPEC.dims, np.float32)
+    server.submit(x, SPEC, now=0.0)
+    server.submit(x, other, now=0.0)
+    server.drain(0.0)
+    assert len(server.store) == 1                     # only SPEC ingested
+    matching = [r for r in server.done if r.spec == SPEC]
+    assert matching[0].store_id == 0
+    assert [r.store_id for r in server.done if r.spec == other] == [None]
+
+
+# ---------------------------------------------------------------------------
+# JL similarity retrieval vs exact dense distances
+# ---------------------------------------------------------------------------
+
+def test_query_top_m_within_thm1_bound_of_exact_distances():
+    """Seeded acceptance: the similarity endpoint's top-m answers agree
+    with exact dense distances to within the Thm-1 distortion bound."""
+    spec = rp.ProjectorSpec(family="tt", k=512, dims=(4, 8, 8), rank=2)
+    op = rp.make_projector(spec, jax.random.PRNGKey(1))
+    n, m = 40, 5
+    xs = [jax.random.normal(jax.random.fold_in(KEY, i), spec.dims)
+          for i in range(n)]
+    store = SketchStore(spec, query_tile=7)           # force multi-tile
+    ys = rp.project_many(op, xs)
+    store.add(np.asarray(ys))
+    dense = np.stack([np.asarray(x).ravel() for x in xs])
+    res = store.query(np.asarray(ys[:3]), m, delta=0.05)
+    assert res.ids.shape == res.dist2.shape == (3, m)
+    assert res.eps == pytest.approx(store.eps_bound(0.05))
+    sk = np.asarray(store.get(np.arange(n)), np.float64)
+    for qi in range(3):
+        # endpoint == brute force over the same sketches, in order
+        d2_all = ((sk - sk[qi]) ** 2).sum(1)
+        np.testing.assert_array_equal(
+            np.sort(res.ids[qi]), np.sort(np.argsort(d2_all,
+                                                     kind="stable")[:m]))
+        np.testing.assert_allclose(res.dist2[qi], np.sort(d2_all)[:m],
+                                   rtol=1e-4, atol=1e-3)
+        # each reported distance estimates the TRUE dense distance within
+        # the Thm-1 relative-error bound (self-match excluded: d2 = 0)
+        for j in range(m):
+            sid = int(res.ids[qi][j])
+            if sid == qi:
+                assert res.dist2[qi][j] < 1e-3
+                continue
+            true_d2 = float(((dense[qi] - dense[sid]) ** 2).sum())
+            assert abs(res.dist2[qi][j] - true_d2) <= res.eps * true_d2
+            assert res.dist2_lo[qi][j] <= true_d2
+            if np.isfinite(res.dist2_hi[qi][j]):
+                assert true_d2 <= res.dist2_hi[qi][j]
+
+
+def test_query_tiling_is_transparent():
+    store_a = SketchStore(SPEC, query_tile=3)
+    store_b = SketchStore(SPEC, query_tile=4096)
+    rng = np.random.default_rng(0)
+    sk = rng.standard_normal((33, SPEC.k)).astype(np.float32)
+    store_a.add(sk)
+    store_b.add(sk)
+    q = sk[:2]
+    ra, rb = store_a.query(q, 7), store_b.query(q, 7)
+    np.testing.assert_array_equal(ra.ids, rb.ids)
+    np.testing.assert_allclose(ra.dist2, rb.dist2, rtol=1e-5, atol=1e-4)
+
+
+def test_pairwise_matches_stored_sketch_distances():
+    store = SketchStore(SPEC)
+    rng = np.random.default_rng(1)
+    sk = rng.standard_normal((8, SPEC.k)).astype(np.float32)
+    store.add(sk)
+    res = store.pairwise([0, 1, 2], [3, 4, 5], delta=0.1)
+    want = ((sk[[0, 1, 2]] - sk[[3, 4, 5]]) ** 2).sum(1)
+    np.testing.assert_allclose(res.dist2, want, rtol=1e-5)
+    assert res.eps == pytest.approx(store.eps_bound(0.1))
+    assert (res.dist2_lo <= res.dist2 + 1e-9).all()
+
+
+# ---------------------------------------------------------------------------
+# SlotServer batched prefill (launch.serve satellite)
+# ---------------------------------------------------------------------------
+
+def test_slot_server_batched_prefill_matches_token_loop():
+    """The batched whole-prompt prefill must reproduce the old
+    token-by-token decode-path prefill: same greedy tokens, same
+    positions, for every request. Both paths run the same jitted step
+    executable, so this is bitwise identity, not tolerance-based."""
+    from repro.configs import get_config, reduced
+    from repro.launch.serve import Request, SlotServer
+    from repro.models import build_model
+
+    cfg = reduced(get_config("llama3.2-3b"))
+    model = build_model(cfg)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, cfg.vocab, size=(6 + i % 3,))
+               for i in range(4)]
+
+    def run(feed_loop):
+        srv = SlotServer(model, slots=2, max_seq=32, eos=None, max_gen=5)
+        if feed_loop:
+            def _loop_feed(slot, req):
+                logits = None
+                for t in req.prompt:
+                    tok = srv.cur_tok.copy()
+                    tok[slot] = t
+                    logits, srv.cache = srv._step(
+                        srv.params, srv.cache, jnp.asarray(tok),
+                        jnp.asarray(srv.pos))
+                    srv.pos[slot] += 1
+                srv.cur_tok[slot] = int(jnp.argmax(logits[slot]))
+            srv._feed_prompt = _loop_feed
+        done = srv.run([Request(i, p) for i, p in enumerate(prompts)])
+        return {r.rid: r.generated for r in done}
+
+    fast = run(feed_loop=False)
+    ref = run(feed_loop=True)
+    assert fast == ref                               # bit-identical greedy
+    assert all(len(v) == 5 for v in fast.values())
+
+
+def test_slot_server_rejects_empty_prompt():
+    from repro.configs import get_config, reduced
+    from repro.launch.serve import Request, SlotServer
+    from repro.models import build_model
+    model = build_model(reduced(get_config("llama3.2-3b")))
+    srv = SlotServer(model, slots=1, max_seq=16, eos=None, max_gen=2)
+    with pytest.raises(ValueError, match="empty prompt"):
+        srv.submit(Request(0, np.zeros((0,), np.int64)))
