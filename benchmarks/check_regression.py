@@ -8,7 +8,8 @@ section or named row disappeared, a record lost the
 {name, us_per_call, derived} shape, or a timing record stopped covering a
 gated subsystem entirely (REQUIRED_ROW_PREFIXES: the order-N dense frontier,
 the compressed-domain `struct/` carry-sweep rows, the sharded-engine
-`shard/` collective rows, and the serving-engine `serve/` rows — a refactor
+`shard/` collective rows, the serving-engine `serve/` rows, and the
+checkpointing `ckpt/` rows — a refactor
 that silently drops a whole row family must not pass because the baseline
 diff has nothing to compare) — and on a
 LAUNCH-COUNT REGRESSION: any row whose
@@ -27,9 +28,11 @@ LAUNCH_KEYS = ("launches_batched", "launches_project", "launches_reconstruct")
 RECORD_KEYS = {"name", "us_per_call", "derived"}
 # Row families a timing record must keep emitting for the gate to mean
 # anything; checked on the NEW record whenever it has a timing section.
-# serve/ rides along: the CI bench invocations that produce a timing
-# section always run the serving section too (--only smoke,timing,serve).
-REQUIRED_ROW_PREFIXES = ("time/order/", "struct/", "shard/", "serve/")
+# serve/ and ckpt/ ride along: the CI bench invocations that produce a
+# timing section always run those sections too
+# (--only smoke,timing,serve,ckpt).
+REQUIRED_ROW_PREFIXES = ("time/order/", "struct/", "shard/", "serve/",
+                         "ckpt/")
 
 
 def _rows_by_name(record: dict) -> dict:

@@ -57,17 +57,18 @@ def main(argv=None) -> None:
                     help="one tiny config per registered rp family (CI)")
     ap.add_argument("--only", default=None,
                     help="comma list: distortion,timing,pairwise,memory,"
-                         "variance,gradcomp,rooflines,smoke,serve")
+                         "variance,gradcomp,rooflines,smoke,serve,ckpt")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write a structured perf record (BENCH_rp.json)")
     args = ap.parse_args(argv)
     fast = not args.full
-    from . import (distortion, gradcomp, memory, pairwise, rooflines, serve,
-                   smoke, timing, variance)
+    from . import (ckpt, distortion, gradcomp, memory, pairwise, rooflines,
+                   serve, smoke, timing, variance)
     mods = {
         "memory": memory, "variance": variance, "distortion": distortion,
         "timing": timing, "pairwise": pairwise, "gradcomp": gradcomp,
         "rooflines": rooflines, "smoke": smoke, "serve": serve,
+        "ckpt": ckpt,
     }
     if args.smoke:
         wanted = ["smoke"]
@@ -83,7 +84,10 @@ def main(argv=None) -> None:
     if args.json:
         import jax
         record = {
-            # v5: serving engine — the serve/* section (trace replay with
+            # v6: fault tolerance — the ckpt/* section (verified save /
+            # fallback restore / sketched-state record size, with the >=4x
+            # compression ratio asserted in the bench itself). v5: serving
+            # engine — the serve/* section (trace replay with
             # the gated one-dispatch-per-tick launches_project, operator
             # cache hit/regen, store retrieval sweep). v4: sharded engine —
             # timing gains the shard/* rows (compress_collective wire bytes
@@ -92,7 +96,7 @@ def main(argv=None) -> None:
             # launch counts so the 1- and 8-device CI jobs diff against one
             # baseline). v3 added the struct/{tt,cp}x{tt,cp}/N={3,4}
             # carry-sweep rows; v2 the time/order/{tt,cp}/N={2..5} frontier.
-            "schema": "bench_rp/v5",
+            "schema": "bench_rp/v6",
             "unix_time": time.time(),
             "backend": jax.default_backend(),
             "fast": fast,

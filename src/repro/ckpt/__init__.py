@@ -1,0 +1,24 @@
+"""repro.ckpt — verified, sketch-native, elastic checkpoints.
+
+  * `checkpointer` — atomic saves with per-array crc32 + manifest sha256,
+    corruption-detecting restore with fallback to the newest VERIFIED
+    checkpoint, retry-with-backoff on transient I/O, async saves with the
+    device-to-host transfer off the caller's critical path.
+  * `SketchedTreeCodec` — persist EF/optimizer pytrees as (seed, spec,
+    (n_buckets, k) sketch) records; the operator is regenerated from the
+    saved seed on restore, never stored.
+  * `respec_pod_ef` / `resume_elastic` — restore onto a different pod
+    count: exact contiguous-group sums where the pod count divides evenly,
+    total-preserving redistribution otherwise.
+"""
+from . import checkpointer
+from .checkpointer import (AsyncCheckpointer, CheckpointError,
+                           CorruptionError, sweep_tmp, verify)
+from .elastic import respec_pod_ef, resume_elastic
+from .sketched import CKPT_KEY, SketchedTreeCodec
+
+__all__ = [
+    "AsyncCheckpointer", "CKPT_KEY", "CheckpointError", "CorruptionError",
+    "SketchedTreeCodec", "checkpointer", "respec_pod_ef", "resume_elastic",
+    "sweep_tmp", "verify",
+]

@@ -1,10 +1,27 @@
-"""Atomic, mesh-agnostic, async-capable checkpoints.
+"""Atomic, mesh-agnostic, VERIFIED, async-capable checkpoints.
 
 Layout: <dir>/step_<n>/{manifest.json, arr_<i>.npy ...}. Writes go to a tmp
 directory that is atomically renamed, so a crash mid-save never corrupts the
-latest checkpoint. Restore re-shards onto whatever mesh/sharding the restarted
-job uses (elastic scaling): arrays are saved as full (addressable-gathered)
-values and re-placed with jax.device_put against the new sharding.
+latest checkpoint; orphaned ``.tmp_*`` directories from a crash mid-save are
+swept on the next save/restore. Restore re-shards onto whatever mesh/sharding
+the restarted job uses (elastic scaling): arrays are saved as full
+(addressable-gathered) values and re-placed with jax.device_put against the
+new sharding.
+
+Integrity: every array entry in the manifest carries a crc32 of its raw
+bytes, and the manifest itself carries a sha256 over its canonical JSON body
+(computed with the ``integrity`` field blanked). ``verify`` re-hashes both;
+``restore`` verifies by default and, when the newest checkpoint is corrupt
+(truncated array, flipped byte, missing file), falls back to the newest
+checkpoint that DOES verify instead of resuming from garbage. All restore
+misuse (tree-structure drift, shape mismatch, shardings-length mismatch)
+raises typed ValueErrors that survive ``python -O`` — never bare asserts.
+
+Fault model: transient I/O errors during save (full/flaky disk, NFS rename
+hiccup) are retried with capped exponential backoff
+(`runtime.resilience.retry_with_backoff`); an injectable `io` hook object
+(`runtime.resilience.IOFaultInjector` in tests) intercepts writes/renames so
+the failure paths are deterministically testable.
 
 On a real multi-host pod each host would write only its addressable shards
 (same manifest format, `shard_id` field); this single-process implementation
@@ -12,6 +29,8 @@ writes full arrays, which is the degenerate single-host case of that layout.
 """
 from __future__ import annotations
 
+import atexit
+import hashlib
 import json
 import os
 import pathlib
@@ -19,10 +38,20 @@ import shutil
 import tempfile
 import threading
 import time
+import zlib
 from typing import Any
 
 import jax
 import numpy as np
+
+
+class CheckpointError(ValueError):
+    """Restore-path misuse or an unusable checkpoint: typed (survives
+    ``python -O``) so supervisors can distinguish it from transient I/O."""
+
+
+class CorruptionError(CheckpointError):
+    """A checkpoint failed integrity verification (checksum/hash/shape)."""
 
 
 def _flatten(tree: Any):
@@ -30,21 +59,68 @@ def _flatten(tree: Any):
     return leaves, treedef
 
 
+def sweep_tmp(directory: str | os.PathLike) -> list[pathlib.Path]:
+    """Remove orphaned ``.tmp_*`` directories left by a crash mid-save.
+
+    A save that dies between ``mkdtemp`` and the atomic rename leaves its tmp
+    directory behind; without this sweep they accumulate forever under the
+    checkpoint dir. Called on every save and on AsyncCheckpointer startup.
+    Returns the paths removed.
+    """
+    directory = pathlib.Path(directory)
+    removed = []
+    if not directory.is_dir():
+        return removed
+    for tmp in directory.glob(".tmp_*"):
+        if tmp.is_dir():
+            shutil.rmtree(tmp, ignore_errors=True)
+            removed.append(tmp)
+    return removed
+
+
+def _manifest_digest(manifest: dict) -> str:
+    """sha256 over the canonical JSON body with ``integrity`` blanked."""
+    body = dict(manifest)
+    body.pop("integrity", None)
+    blob = json.dumps(body, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+def _default_io():
+    # lazy import: ckpt must stay importable without the runtime package
+    from repro.runtime.resilience import CheckpointIO
+    return CheckpointIO()
+
+
 def save(directory: str | os.PathLike, step: int, tree: Any, *,
-         keep: int = 3, extra: dict | None = None) -> pathlib.Path:
-    """Atomic synchronous save. Returns the final checkpoint path."""
+         keep: int = 3, extra: dict | None = None, io=None,
+         retries: int = 3, base_delay: float = 0.05) -> pathlib.Path:
+    """Atomic synchronous save with integrity metadata. Returns the path.
+
+    Transient OSErrors from the array writes / final rename are retried up
+    to `retries` times with capped exponential backoff; `io` injects the
+    write/rename implementation (tests pass an IOFaultInjector).
+    """
+    from repro.runtime.resilience import retry_with_backoff
+    io = io if io is not None else _default_io()
     directory = pathlib.Path(directory)
     directory.mkdir(parents=True, exist_ok=True)
+    sweep_tmp(directory)
     final = directory / f"step_{step:010d}"
     tmp = pathlib.Path(tempfile.mkdtemp(dir=directory, prefix=".tmp_"))
     try:
         leaves, treedef = _flatten(tree)
         paths = []
         for i, leaf in enumerate(leaves):
+            # NOT ascontiguousarray: it promotes 0-d scalars to (1,); the
+            # crc below uses tobytes(), which canonicalizes order anyway
             arr = np.asarray(jax.device_get(leaf))
-            np.save(tmp / f"arr_{i}.npy", arr)
+            retry_with_backoff(
+                lambda a=arr, p=tmp / f"arr_{i}.npy": io.write_array(p, a),
+                retries=retries, base_delay=base_delay)
             paths.append({"file": f"arr_{i}.npy", "dtype": str(arr.dtype),
-                          "shape": list(arr.shape)})
+                          "shape": list(arr.shape),
+                          "crc32": zlib.crc32(arr.tobytes()) & 0xFFFFFFFF})
         manifest = {
             "step": step,
             "treedef": jax.tree_util.tree_structure(tree).serialize_using_proto().hex()
@@ -54,10 +130,13 @@ def save(directory: str | os.PathLike, step: int, tree: Any, *,
             "time": time.time(),
             "extra": extra or {},
         }
+        manifest["integrity"] = _manifest_digest(manifest)
         (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
         if final.exists():
             shutil.rmtree(final)
-        tmp.rename(final)
+        retry_with_backoff(lambda: io.rename(tmp, final),
+                           retries=retries, base_delay=base_delay)
+        io.post_commit(final)
     except BaseException:
         shutil.rmtree(tmp, ignore_errors=True)
         raise
@@ -79,61 +158,220 @@ def latest_step(directory: str | os.PathLike) -> int | None:
     return int(ckpts[-1].name.split("_")[1])
 
 
+def available_steps(directory: str | os.PathLike) -> list[int]:
+    """All checkpoint steps under `directory`, ascending."""
+    directory = pathlib.Path(directory)
+    return sorted(int(p.name.split("_")[1]) for p in directory.glob("step_*"))
+
+
+def verify(path: str | os.PathLike) -> dict:
+    """Full integrity check of one checkpoint directory.
+
+    Raises `CorruptionError` on: missing/unparseable manifest, manifest
+    sha256 mismatch (a flipped byte anywhere in the manifest), a missing
+    array file, an array whose bytes fail its crc32 (truncation or bit
+    flips), or a shape/dtype that disagrees with the manifest entry.
+    Returns the (verified) manifest. Pre-integrity checkpoints (no
+    ``integrity`` field) fail verification — they carry no evidence.
+    """
+    path = pathlib.Path(path)
+    mpath = path / "manifest.json"
+    try:
+        manifest = json.loads(mpath.read_text())
+    except (OSError, ValueError) as e:
+        # ValueError covers JSONDecodeError AND UnicodeDecodeError — a
+        # flipped byte can break utf-8 before the JSON parser ever runs
+        raise CorruptionError(f"unreadable manifest {mpath}: {e}") from e
+    digest = manifest.get("integrity")
+    if digest is None:
+        raise CorruptionError(
+            f"{mpath} has no integrity digest (pre-integrity checkpoint or "
+            "stripped manifest); cannot be verified")
+    if _manifest_digest(manifest) != digest:
+        raise CorruptionError(
+            f"manifest integrity hash mismatch in {mpath}: the manifest was "
+            "modified after it was written")
+    for meta in manifest["arrays"]:
+        apath = path / meta["file"]
+        try:
+            arr = np.load(apath)
+        except (OSError, ValueError) as e:
+            raise CorruptionError(
+                f"array {apath} unreadable/truncated: {e}") from e
+        if list(arr.shape) != list(meta["shape"]) or str(arr.dtype) != meta["dtype"]:
+            raise CorruptionError(
+                f"array {apath} header drift: got {arr.dtype}{arr.shape}, "
+                f"manifest says {meta['dtype']}{tuple(meta['shape'])}")
+        crc = zlib.crc32(arr.tobytes()) & 0xFFFFFFFF
+        if crc != meta["crc32"]:
+            raise CorruptionError(
+                f"array {apath} checksum mismatch: crc32 {crc:#010x} != "
+                f"manifest {meta['crc32']:#010x} (bit flip or torn write)")
+    return manifest
+
+
+def is_verified(directory: str | os.PathLike, step: int) -> bool:
+    try:
+        verify(pathlib.Path(directory) / f"step_{step:010d}")
+        return True
+    except CorruptionError:
+        return False
+
+
+def newest_verified_step(directory: str | os.PathLike) -> int | None:
+    """The newest step whose checkpoint passes `verify`, else None."""
+    for step in reversed(available_steps(directory)):
+        if is_verified(directory, step):
+            return step
+    return None
+
+
 def restore(directory: str | os.PathLike, example_tree: Any,
-            step: int | None = None, *, shardings: Any = None) -> tuple[Any, int]:
+            step: int | None = None, *, shardings: Any = None,
+            verify_integrity: bool = True,
+            fallback: bool = True) -> tuple[Any, int]:
     """Restore into the structure of `example_tree`; optionally re-shard.
 
     `shardings`: pytree of jax.sharding.Sharding (elastic restore onto a new
     mesh) — if None, arrays stay as committed host arrays.
+
+    `verify_integrity`: run the full checksum/hash check before loading.
+    `fallback`: when the selected checkpoint fails verification, walk back
+    to the NEWEST checkpoint that does verify (corruption detection with
+    automatic fallback); `CorruptionError` only when none survives. An
+    explicit `step=` with `fallback=False` raises on that exact step.
     """
     directory = pathlib.Path(directory)
     if step is None:
         step = latest_step(directory)
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {directory}")
+    if verify_integrity:
+        candidates = [step] + [s for s in reversed(available_steps(directory))
+                               if s < step]
+        last_err: CorruptionError | None = None
+        for cand in candidates:
+            try:
+                verify(directory / f"step_{cand:010d}")
+                if cand != step:
+                    step = cand
+                break
+            except CorruptionError as e:
+                last_err = e
+                if not fallback:
+                    raise
+        else:
+            raise CorruptionError(
+                f"no verifiable checkpoint under {directory} "
+                f"(newest failure: {last_err})")
     path = directory / f"step_{step:010d}"
     manifest = json.loads((path / "manifest.json").read_text())
     leaves, treedef = _flatten(example_tree)
-    assert manifest["n_arrays"] == len(leaves), (
-        manifest["n_arrays"], len(leaves), "tree structure changed")
+    if manifest["n_arrays"] != len(leaves):
+        raise CheckpointError(
+            f"checkpoint {path} holds {manifest['n_arrays']} arrays but the "
+            f"example tree has {len(leaves)} leaves: tree structure changed "
+            "between save and restore")
     loaded = [np.load(path / meta["file"]) for meta in manifest["arrays"]]
     new_leaves = []
     if shardings is not None:
         shard_leaves = jax.tree_util.tree_leaves(
             shardings,
             is_leaf=lambda s: s is None or hasattr(s, "addressable_devices"))
-        assert len(shard_leaves) == len(loaded), (
-            len(shard_leaves), len(loaded), "shardings tree mismatch")
+        if len(shard_leaves) != len(loaded):
+            raise CheckpointError(
+                f"shardings tree has {len(shard_leaves)} leaves but the "
+                f"checkpoint holds {len(loaded)} arrays: pass one sharding "
+                "(or None) per restored leaf")
     else:
         shard_leaves = [None] * len(loaded)
-    for arr, ref, shd in zip(loaded, leaves, shard_leaves):
-        assert tuple(arr.shape) == tuple(ref.shape), (arr.shape, ref.shape)
+    for i, (arr, ref, shd) in enumerate(zip(loaded, leaves, shard_leaves)):
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise CheckpointError(
+                f"array {i} of {path} has shape {tuple(arr.shape)} but the "
+                f"example leaf expects {tuple(ref.shape)}: leaf shapes "
+                "changed between save and restore")
         arr = arr.astype(ref.dtype)
         new_leaves.append(jax.device_put(arr, shd) if shd is not None else arr)
     return jax.tree_util.tree_unflatten(treedef, new_leaves), step
 
 
-class AsyncCheckpointer:
-    """Overlaps checkpoint I/O with training: device_get happens on the
-    caller thread (cheap, consistent snapshot), the numpy writes happen on a
-    background thread. `wait()` before the next save or at exit."""
+def read_manifest(directory: str | os.PathLike, step: int) -> dict:
+    """The (unverified) manifest of one checkpoint step."""
+    path = pathlib.Path(directory) / f"step_{step:010d}" / "manifest.json"
+    return json.loads(path.read_text())
 
-    def __init__(self, directory: str | os.PathLike, keep: int = 3):
+
+def _snapshot_async(tree: Any) -> Any:
+    """Consistent device snapshot with the D2H transfer off the critical path.
+
+    The caller's buffers may be DONATED to the next train step the moment
+    `save` returns (donate_argnums), so the snapshot must not alias them:
+    each jax leaf is copied device-side (an async dispatch — the copy's
+    buffers belong to the checkpointer, not the caller) and its
+    device-to-host transfer is started immediately with
+    `copy_to_host_async`, so every leaf's D2H is in flight concurrently
+    before the writer thread ever blocks on one. The writer thread then
+    materializes (`np.asarray` waits on the already-running transfer) and
+    the host buffers are donated to it outright — written out and dropped,
+    never touched by the caller again.
+    """
+    def snap(x):
+        if isinstance(x, jax.Array):
+            x = jax.numpy.copy(x)  # device-side defensive copy (async dispatch)
+            try:
+                x.copy_to_host_async()
+            except (AttributeError, RuntimeError):
+                pass  # backend without async D2H: writer thread blocks
+        return x
+    return jax.tree.map(snap, tree)
+
+
+class AsyncCheckpointer:
+    """Overlaps checkpoint I/O with training.
+
+    `save` snapshots the tree with device-side copies and enqueues every
+    leaf's device-to-host transfer (`_snapshot_async`), then hands the
+    snapshot to a background thread that materializes and writes it — the
+    caller's critical path holds no blocking transfer. A background failure
+    raises on the NEXT `save` (before any new thread launches) and on
+    `wait()`; use the instance as a context manager (or rely on the atexit
+    hook) so a clean exit drains the in-flight checkpoint instead of
+    dropping it.
+    """
+
+    def __init__(self, directory: str | os.PathLike, keep: int = 3, *,
+                 io=None, retries: int = 3):
         self.directory = directory
         self.keep = keep
+        self.io = io
+        self.retries = retries
         self._thread: threading.Thread | None = None
+        self._lock = threading.Lock()
         self._error: BaseException | None = None
+        sweep_tmp(directory)  # crash-orphaned .tmp_* dirs from a prior run
+        self._atexit = atexit.register(self._drain_at_exit)
+
+    def _raise_pending(self) -> None:
+        with self._lock:
+            err, self._error = self._error, None
+        if err is not None:
+            raise err
 
     def save(self, step: int, tree: Any, extra: dict | None = None) -> None:
+        # a failed background save fails THIS call, before a new thread
+        # launches — not just the next wait()
+        self._raise_pending()
         self.wait()
-        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        host_tree = _snapshot_async(tree)
 
         def work():
             try:
                 save(self.directory, step, host_tree, keep=self.keep,
-                     extra=extra)
-            except BaseException as e:  # surfaced on next wait()
-                self._error = e
+                     extra=extra, io=self.io, retries=self.retries)
+            except BaseException as e:  # surfaced on next save()/wait()
+                with self._lock:
+                    self._error = e
 
         self._thread = threading.Thread(target=work, daemon=True)
         self._thread.start()
@@ -142,6 +380,27 @@ class AsyncCheckpointer:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
-        if self._error is not None:
-            err, self._error = self._error, None
-            raise err
+        self._raise_pending()
+
+    def close(self) -> None:
+        """Drain the in-flight save and unregister the atexit hook."""
+        try:
+            self.wait()
+        finally:
+            atexit.unregister(self._drain_at_exit)
+
+    def _drain_at_exit(self) -> None:
+        # atexit: never raise, just make sure the bytes land
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def __enter__(self) -> "AsyncCheckpointer":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        if exc and exc[0] is not None:
+            self._drain_at_exit()   # crashing: drain but keep the original
+            return False
+        self.close()
+        return False

@@ -1,0 +1,141 @@
+"""Elastic resume: restore a training checkpoint onto a DIFFERENT pod count.
+
+Params and optimizer moments are pod-REPLICATED under the compressed-sync
+topology (DDP-of-FSDP: the pod axis syncs exclusively through the sketched
+all-reduce), so they restore onto any mesh via `checkpointer.restore`'s
+device_put re-sharding. The one pod-SHAPED state is the error-feedback
+residual — one row per pod — and its physical meaning is additive: the pod
+MEAN of the residual rows is what the next compressed sync folds back into
+the gradient estimate. `respec_pod_ef` re-buckets those rows while
+preserving `sum_w e_w` exactly:
+
+  * npod_new divides npod_old — each new row is the SUM of a contiguous
+    group of old rows: pure fp32 additions in a fixed order, BIT-EXACT,
+    no division anywhere.
+  * otherwise (growing the pod count, or a non-dividing shrink) — every new
+    row carries total/npod_new: still total-preserving and deterministic,
+    but the per-pod attribution is lost; the next sketched sync re-attributes
+    it, paying one Thm-1-bounded roundtrip like any other compression step.
+
+`resume_elastic` glues the pieces: read the manifest of the newest VERIFIED
+checkpoint (corruption falls back like any restore), rebuild the sketched-EF
+codec from the saved meta when the checkpoint is sketch-native — the
+operator is regenerated from the SAVED seed on the new host, with bucket
+layout respecced to the new mesh via `launch/sharding.py::bucket_specs`;
+no operator bytes exist on disk — then respec the pod dim to the new count.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import checkpointer
+from .checkpointer import CheckpointError
+from .sketched import SketchedTreeCodec
+
+
+def _fold_sum(x, lo: int, hi: int):
+    # explicit left-to-right adds, NOT jnp.sum: XLA's reduce picks its own
+    # (deterministic but backend-specific) association; a fixed fold makes
+    # the bit-exactness claim hold against any reference that adds in order
+    acc = x[lo]
+    for i in range(lo + 1, hi):
+        acc = acc + x[i]
+    return acc
+
+
+def _respec_leaf(x, npod_old: int, npod_new: int):
+    x = jnp.asarray(x)
+    if npod_old == 1:                       # no pod dim on the saved leaf
+        if npod_new == 1:
+            return x
+        return jnp.stack([x / npod_new] * npod_new)
+    if x.shape[:1] != (npod_old,):
+        raise CheckpointError(
+            f"EF leaf has leading dim {x.shape[0] if x.ndim else None}, "
+            f"expected the saved pod count {npod_old}")
+    if npod_new == 1:
+        return _fold_sum(x, 0, npod_old)    # exact: fixed-order fp32 adds
+    if npod_old == npod_new:
+        return x
+    if npod_old % npod_new == 0:            # exact: contiguous group sums
+        g = npod_old // npod_new
+        return jnp.stack([_fold_sum(x, b * g, (b + 1) * g)
+                          for b in range(npod_new)])
+    total = _fold_sum(x, 0, npod_old)       # total-preserving redistribution
+    return jnp.stack([total / npod_new] * npod_new)
+
+
+def respec_pod_ef(ef_tree: Any, npod_old: int, npod_new: int) -> Any:
+    """Re-bucket per-pod EF residual rows onto a new pod count.
+
+    Preserves the pod SUM of every leaf; bit-exact (no division) whenever
+    `npod_new` divides `npod_old` (including npod_new == 1). See module
+    docstring for the non-dividing semantics.
+    """
+    if npod_old < 1 or npod_new < 1:
+        raise CheckpointError(
+            f"pod counts must be >= 1, got old={npod_old} new={npod_new}")
+    return jax.tree.map(lambda x: _respec_leaf(x, npod_old, npod_new),
+                        ef_tree)
+
+
+def _pod_stripped(shape: tuple, npod: int) -> tuple:
+    return tuple(shape[1:]) if npod > 1 else tuple(shape)
+
+
+def resume_elastic(directory: str | os.PathLike, example_state: Any, *,
+                   npod_new: int, mesh=None, step: int | None = None,
+                   shardings: Any = None) -> tuple[Any, int]:
+    """Restore the newest verified checkpoint onto `npod_new` pods.
+
+    `example_state` describes the NEW job's state tree ({"params", "opt"[,
+    "ef"]} with `ef` leaves already shaped for `npod_new`: leading pod dim
+    iff npod_new > 1). The saved pod count and sketched-EF codec meta come
+    from the checkpoint manifest (written by `runtime/train_loop.py`);
+    `mesh` (optional) gives the decoded sketch buckets the new mesh's layout
+    via `launch/sharding.py::bucket_specs`. Returns (state, step).
+    """
+    directory = os.fspath(directory)
+    if step is None:
+        step = checkpointer.newest_verified_step(directory)
+        if step is None:
+            raise checkpointer.CorruptionError(
+                f"no verifiable checkpoint under {directory}")
+    manifest = checkpointer.read_manifest(directory, step)
+    extra = manifest.get("extra", {})
+    npod_old = int(extra.get("npod", 1))
+    sk_meta = extra.get("sketched_ef")
+
+    has_ef = isinstance(example_state, dict) and "ef" in example_state
+    if not has_ef:
+        return checkpointer.restore(directory, example_state, step,
+                                    shardings=shardings)
+
+    # the SAVED tree's ef is shaped for npod_old (and possibly sketched):
+    # rebuild that example from the new job's, pod dim swapped
+    new_ef = example_state["ef"]
+    old_ef_shapes = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(
+            ((npod_old,) if npod_old > 1 else ())
+            + _pod_stripped(l.shape, npod_new), l.dtype),
+        new_ef)
+    codec = None
+    if sk_meta is not None:
+        bucket_spec = None
+        if mesh is not None:
+            from repro.launch.sharding import bucket_specs  # no import cycle
+            bucket_spec = bucket_specs(mesh)
+        codec = SketchedTreeCodec.from_meta(sk_meta, old_ef_shapes,
+                                            mesh=mesh,
+                                            bucket_spec=bucket_spec)
+    saved_example = dict(example_state)
+    saved_example["ef"] = codec.record_shapes() if codec else old_ef_shapes
+    restored, step = checkpointer.restore(directory, saved_example, step,
+                                          shardings=shardings)
+    ef_old = codec.decode(restored["ef"]) if codec else restored["ef"]
+    restored["ef"] = respec_pod_ef(ef_old, npod_old, npod_new)
+    return restored, step

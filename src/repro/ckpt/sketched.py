@@ -1,0 +1,131 @@
+"""Sketched-state checkpoint codec: persist pytrees as (seed, spec, sketch).
+
+The paper's memory argument applied to checkpoints: a tensorized random
+projection is fully determined by a PRNG seed plus a declarative spec, so a
+checkpointed error-feedback / optimizer tree never needs its dense bytes on
+disk — only the `(n_buckets, k)` sketch (nb*k floats) plus the seed that
+regenerates the operator. On restore the operator is re-sampled bitwise
+identically from the saved seed (`rp.make_projector` is deterministic — the
+same mechanism `rp/shard.py` uses to regenerate per host) and the dense
+estimate comes back through one adjoint pass. The roundtrip is an unbiased
+Thm-1-bounded ESTIMATE, not the exact tensor — which is exactly the error
+class error-feedback state tolerates (the residual re-absorbs sketch error
+the same way it absorbs compression error every step) — and it is fully
+DETERMINISTIC: two restores of the same record are bit-identical, so
+crash-restart remains reproducible.
+
+On-disk record (one per encoded tree): {"y": (n_buckets, k) f32 sketch,
+"seed": int64 base key, "step": int64 fold_in step}. The JSON-able
+`meta()` (family/k/rank/dims/bucket sizes) goes into the checkpoint
+manifest's `extra` so a restarted job — possibly on a DIFFERENT mesh —
+rebuilds the codec via `from_meta` (bucket respec happens through the
+sketcher's mesh/bucket_spec arguments; the sketch values themselves are
+layout-independent).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sketch import PytreeSketcher, SketchConfig
+
+from .checkpointer import CheckpointError
+
+#: default PRNG base key for checkpoint sketches — deliberately distinct
+#: from SketchCompressor's 0x5EED so the checkpoint operator and the
+#: gradient-compression operator of the same step are independent draws.
+CKPT_KEY = 0xCC11
+
+
+class SketchedTreeCodec:
+    """Encode/decode a fixed-structure pytree through one shared sketch.
+
+    encode(tree, step) -> {"y", "seed", "step"} record (arrays only, ready
+    for the checkpointer); decode(record) -> dense unbiased estimate of the
+    tree, operator regenerated from the record's own seed/step. Determinism:
+    decode(encode(x, s)) is a pure function of (x, s, cfg, base_key).
+    """
+
+    def __init__(self, cfg: SketchConfig, example_tree: Any, *,
+                 base_key: int = CKPT_KEY, mesh=None, bucket_spec=None):
+        self.cfg = cfg
+        self.base_key = int(base_key)
+        self._sk = PytreeSketcher(cfg, example_tree, mesh=mesh,
+                                  bucket_spec=bucket_spec)
+
+    # -- key derivation (mirrors SketchCompressor._key) -------------------
+    def key_for(self, step) -> jax.Array:
+        key = jax.random.PRNGKey(self.base_key)
+        if self.cfg.fresh_per_step:
+            key = jax.random.fold_in(key, step)
+        return key
+
+    # -- codec ------------------------------------------------------------
+    def encode(self, tree: Any, *, step: int) -> dict:
+        """tree -> self-describing record of arrays (never the dense tree)."""
+        y = self._sk.sketch(tree, self.key_for(step))
+        # seed/step stay HOST scalars (np.int64): encode runs outside jit on
+        # the save path, and x64 must not depend on jax_enable_x64
+        return {"y": y, "seed": np.int64(self.base_key),
+                "step": np.int64(step)}
+
+    def decode(self, record: dict) -> Any:
+        """record -> dense unbiased estimate; operator regenerated from the
+        record's saved seed (no operator bytes were ever on disk)."""
+        seed = int(np.asarray(record["seed"]))
+        if seed != self.base_key:
+            raise CheckpointError(
+                f"sketched record was written with base key {seed:#x} but "
+                f"this codec regenerates from {self.base_key:#x}; the "
+                "reconstructed operator would not match the sketch")
+        y = jnp.asarray(record["y"])
+        if y.shape != (self._sk.n_buckets, self.cfg.k):
+            raise CheckpointError(
+                f"sketched record shape {tuple(y.shape)} != expected "
+                f"({self._sk.n_buckets}, {self.cfg.k}); the encoded tree "
+                "structure or SketchConfig changed between save and restore")
+        return self._sk.unsketch(y, self.key_for(int(np.asarray(record["step"]))))
+
+    # -- checkpoint integration -------------------------------------------
+    def record_shapes(self) -> dict:
+        """ShapeDtypeStruct record matching encode()'s output — the example
+        tree the checkpointer restores a sketched record into."""
+        return {"y": jax.ShapeDtypeStruct((self._sk.n_buckets, self.cfg.k),
+                                          jnp.float32),
+                "seed": jax.ShapeDtypeStruct((), jnp.int64),
+                "step": jax.ShapeDtypeStruct((), jnp.int64)}
+
+    def meta(self) -> dict:
+        """JSON-able codec description for the checkpoint manifest `extra`."""
+        return {"family": self.cfg.family, "k": self.cfg.k,
+                "rank": self.cfg.rank, "dims": list(self.cfg.dims),
+                "bucket_elems": self.cfg.bucket_elems,
+                "fresh_per_step": self.cfg.fresh_per_step,
+                "base_key": self.base_key,
+                "n_buckets": self._sk.n_buckets}
+
+    @classmethod
+    def from_meta(cls, meta: dict, example_tree: Any, *, mesh=None,
+                  bucket_spec=None) -> "SketchedTreeCodec":
+        """Rebuild the codec a checkpoint was written with (elastic resume:
+        pass the NEW mesh/bucket_spec — sketch values are layout-free)."""
+        cfg = SketchConfig(family=meta["family"], k=int(meta["k"]),
+                           rank=int(meta["rank"]),
+                           dims=tuple(int(d) for d in meta["dims"]),
+                           bucket_elems=int(meta["bucket_elems"]),
+                           fresh_per_step=bool(meta["fresh_per_step"]))
+        return cls(cfg, example_tree, base_key=int(meta["base_key"]),
+                   mesh=mesh, bucket_spec=bucket_spec)
+
+    # -- accounting (the checkpoint-size story) ---------------------------
+    def sketch_bytes(self) -> int:
+        return self._sk.sketch_bytes() + 16  # + seed/step scalars
+
+    def dense_bytes(self) -> int:
+        return self._sk.dense_bytes()
+
+    def compression_ratio(self) -> float:
+        return self.dense_bytes() / max(1, self.sketch_bytes())

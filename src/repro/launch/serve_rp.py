@@ -40,6 +40,13 @@ def main(argv=None) -> int:
                     choices=("auto", "pallas", "xla"))
     ap.add_argument("--top-m", type=int, default=5)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--prewarm", default=None, metavar="MANIFEST",
+                    help="warm the operator cache from a prior run's "
+                         "--save-manifest file before replay (operators "
+                         "regenerate bitwise from (spec, seed))")
+    ap.add_argument("--save-manifest", default=None, metavar="PATH",
+                    help="after replay, write the cache registry (spec "
+                         "dicts + seeds, no operator bytes) for --prewarm")
     args = ap.parse_args(argv)
 
     spec = rp.ProjectorSpec(family=args.family, k=args.k,
@@ -52,6 +59,9 @@ def main(argv=None) -> int:
     pool = [(spec, s) for s in range(args.pool)]
     trace = synth_trace(args.requests, pool, mix=tuple(args.mix),
                         mean_gap_us=args.mean_gap_us, seed=args.seed)
+    if args.prewarm:
+        n = server.prewarm(args.prewarm)
+        print(f"[serve_rp] prewarmed {n} operators from {args.prewarm}")
 
     with rp.dispatch_stats() as st:
         report = replay(server, trace)
@@ -71,6 +81,10 @@ def main(argv=None) -> int:
           f"{c['evictions']} evictions, regen {c['regen_s']:.2f}s")
     print(f"[serve_rp] store: {report['store_size']} sketches "
           f"({report['store_bytes'] / 1024:.1f} KiB)")
+    if args.save_manifest:
+        n = server.save_manifest(args.save_manifest)
+        print(f"[serve_rp] wrote {n}-entry cache manifest to "
+              f"{args.save_manifest}")
 
     # Similarity demo: nearest stored neighbours of the first sketch (its
     # own id comes back first, distance ~0 — a useful sanity check).

@@ -70,6 +70,11 @@ def main(argv=None) -> int:
                          "(buckets, k) sketches (k-sized wire bytes)")
     ap.add_argument("--remat", default="nothing")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--sketch-ef-ckpt", action="store_true",
+                    help="checkpoint the error-feedback tree as a (seed, "
+                         "spec, sketch) record instead of its dense bytes "
+                         "(requires --compress; the operator is regenerated "
+                         "from the saved seed on restore)")
     ap.add_argument("--crash-at", type=int, default=None,
                     help="fault injection (tests): raise at this step once")
     ap.add_argument("--monitor", action="store_true",
@@ -122,12 +127,27 @@ def main(argv=None) -> int:
                     print(f"   [monitor] step {step} "
                           f"sketch_norm={float(m['sketch_norm']):.4f} "
                           f"drift={float(m['sketch_drift']):.5f}")
+        ef_codec = None
+        if args.sketch_ef_ckpt:
+            if compressor is None or "ef" not in state:
+                raise ValueError(
+                    "--sketch-ef-ckpt needs error-feedback state: pass "
+                    "--compress so the train state carries an 'ef' tree")
+            from repro.ckpt import SketchedTreeCodec
+            from repro.launch import sharding as sh
+            ef_codec = SketchedTreeCodec(
+                compressor.cfg, jax.eval_shape(lambda: state["ef"]),
+                mesh=mesh, bucket_spec=sh.bucket_specs(mesh))
+            print(f"[ckpt] sketched EF records: "
+                  f"{ef_codec.dense_bytes()} -> {ef_codec.sketch_bytes()} "
+                  f"bytes ({ef_codec.compression_ratio():.1f}x)")
         loop_cfg = train_loop.LoopConfig(
             total_steps=args.steps, ckpt_dir=args.ckpt_dir,
-            ckpt_every=args.ckpt_every)
+            ckpt_every=args.ckpt_every, npod=npod)
         state, final = train_loop.run(bundle.fn, state, data, loop_cfg,
                                       injector=injector,
-                                      on_metrics=on_metrics)
+                                      on_metrics=on_metrics,
+                                      ef_codec=ef_codec)
     print(f"[train] finished at step {final} "
           f"(params={sum(x.size for x in jax.tree.leaves(state['params']))})")
     return 0

@@ -95,6 +95,32 @@ class ProjectorSpec:
             out *= d
         return out
 
+    def to_dict(self) -> dict:
+        """JSON-able description (a cache/checkpoint manifest entry).
+
+        Round-trips through `from_dict`: the operator a spec describes is
+        fully determined by these fields plus a seed, so a manifest of
+        spec dicts IS a registry of operators — no weights serialized.
+        """
+        return {"family": self.family, "k": self.k,
+                "dims": list(self.dims), "rank": self.rank,
+                "dtype": jnp.dtype(self.dtype).name, "backend": self.backend}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ProjectorSpec":
+        """Inverse of `to_dict`; equal (==, hash) to the original spec."""
+        try:
+            # jnp.float32 etc., not np.dtype instances — ProjectorSpec
+            # equality (and so cache keys) must match specs built in code
+            dtype = jnp.dtype(d["dtype"]).type
+        except TypeError as e:
+            raise ValueError(
+                f"unknown dtype {d.get('dtype')!r} in spec dict") from e
+        return cls(family=d["family"], k=int(d["k"]),
+                   dims=tuple(int(x) for x in d["dims"]),
+                   rank=int(d.get("rank", 2)), dtype=dtype,
+                   backend=d.get("backend", "auto"))
+
     @classmethod
     def for_flat(cls, family: str, size: int, k: int, *, rank: int = 2,
                  dtype: Any = jnp.float32, backend: str = "auto",

@@ -1,8 +1,13 @@
-"""Fault-tolerant training loop: deterministic data fast-forward, async
-checkpoints, watchdog, SIGTERM-safe shutdown, optional sketch telemetry.
+"""Fault-tolerant training loop: deterministic data fast-forward, verified
+async checkpoints (with fallback to the newest checkpoint that passes its
+integrity check), sketched error-feedback state, watchdog, SIGTERM-safe
+shutdown, optional sketch telemetry.
 
 Used by launch/train.py (CLI) and examples/; tests drive it with fault
-injection to verify crash-restart recovers bit-identical state.
+injection to verify crash-restart recovers bit-identical state — including
+through a corrupted newest checkpoint (restore falls back) and with the EF
+residual persisted as a (seed, spec, sketch) record instead of its dense
+bytes (`ef_codec`).
 """
 from __future__ import annotations
 
@@ -12,10 +17,9 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.ckpt import checkpointer
-from repro.data import DataConfig, SyntheticLM
+from repro.data import SyntheticLM
 
 from .resilience import FaultInjector, GracefulShutdown, Watchdog
 
@@ -28,25 +32,61 @@ class LoopConfig:
     log_every: int = 10
     keep_ckpts: int = 3
     async_ckpt: bool = True
+    # recorded in every manifest's `extra` so `ckpt.resume_elastic` knows the
+    # pod count the EF state was written with
+    npod: int = 1
+    # corruption handling on resume: verify checksums and fall back to the
+    # newest checkpoint that passes (False restores blind, seed behavior)
+    verify_restore: bool = True
+
+
+def _to_save(state: Any, step: int, ef_codec) -> tuple[Any, dict]:
+    """(tree to write, manifest extra) — EF leaves go as sketch records."""
+    extra: dict = {}
+    tree = state
+    if ef_codec is not None and "ef" in state:
+        tree = dict(state)
+        tree["ef"] = ef_codec.encode(state["ef"], step=step)
+        extra["sketched_ef"] = ef_codec.meta()
+    return tree, extra
 
 
 def run(step_fn: Callable, state: Any, data: SyntheticLM, cfg: LoopConfig, *,
         injector: FaultInjector | None = None,
         log: Callable[[str], None] = print,
-        on_metrics: Callable[..., None] | None = None) -> tuple[Any, int]:
+        on_metrics: Callable[..., None] | None = None,
+        ef_codec=None) -> tuple[Any, int]:
     """Runs step_fn(state, batch)->(state, metrics) until total_steps.
 
-    Resumes from the latest checkpoint in cfg.ckpt_dir if one exists; the
-    data stream fast-forwards to the restored step (pure function of step).
-    `on_metrics(step, metrics, state)` receives the LIVE post-step state —
-    with donated input buffers, closing over the pre-loop state reads
-    deleted arrays. Returns (final_state, final_step).
+    Resumes from the newest VERIFIED checkpoint in cfg.ckpt_dir if one
+    exists (a truncated array or flipped manifest byte in the newest one
+    falls back to the previous verified checkpoint); the data stream
+    fast-forwards to the restored step (pure function of step).
+    `ef_codec` (a `repro.ckpt.SketchedTreeCodec` over state["ef"]) persists
+    the error-feedback tree as a (seed, spec, sketch) record — nb*k floats
+    on disk instead of the dense tensor — and reconstructs it
+    deterministically on restore. `on_metrics(step, metrics, state)`
+    receives the LIVE post-step state — with donated input buffers, closing
+    over the pre-loop state reads deleted arrays. Returns
+    (final_state, final_step).
     """
     start = 0
     if cfg.ckpt_dir:
         latest = checkpointer.latest_step(cfg.ckpt_dir)
         if latest is not None:
-            state, start = checkpointer.restore(cfg.ckpt_dir, state)
+            example = state
+            if ef_codec is not None and "ef" in state:
+                example = dict(state)
+                example["ef"] = ef_codec.record_shapes()
+            restored, start = checkpointer.restore(
+                cfg.ckpt_dir, example,
+                verify_integrity=cfg.verify_restore, fallback=True)
+            if ef_codec is not None and "ef" in state:
+                restored["ef"] = ef_codec.decode(restored["ef"])
+            state = restored
+            if start != latest:
+                log(f"[resume] newest checkpoint (step {latest}) failed "
+                    f"verification; fell back to verified step {start}")
             log(f"[resume] restored step {start} from {cfg.ckpt_dir}")
     ck = (checkpointer.AsyncCheckpointer(cfg.ckpt_dir, keep=cfg.keep_ckpts)
           if (cfg.ckpt_dir and cfg.async_ckpt) else None)
@@ -76,16 +116,18 @@ def run(step_fn: Callable, state: Any, data: SyntheticLM, cfg: LoopConfig, *,
                 (step + 1) % cfg.ckpt_every == 0
                 or step == cfg.total_steps - 1 or shutdown.requested)
             if want_ckpt:
+                tree, extra = _to_save(state, step + 1, ef_codec)
+                extra["npod"] = cfg.npod
                 if ck is not None:
-                    ck.save(step + 1, state)
+                    ck.save(step + 1, tree, extra=extra)
                 else:
-                    checkpointer.save(cfg.ckpt_dir, step + 1, state,
-                                      keep=cfg.keep_ckpts)
+                    checkpointer.save(cfg.ckpt_dir, step + 1, tree,
+                                      keep=cfg.keep_ckpts, extra=extra)
             if shutdown.requested:
                 log(f"[shutdown] SIGTERM honored at step {step}")
                 break
     if ck is not None:
-        ck.wait()
+        ck.close()  # drain the in-flight save; a clean exit never drops it
     dt = time.time() - t_start
     log(f"[done] steps {start}..{step} in {dt:.1f}s "
         f"({len(wd.events)} straggler events)")

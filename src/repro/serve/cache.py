@@ -26,6 +26,7 @@ class CacheStats:
     hits: int = 0
     misses: int = 0
     evictions: int = 0
+    prewarmed: int = 0       # entries sampled by prewarm(), not by a get()
     regen_s: float = 0.0     # cumulative operator-sampling wall time
 
     @property
@@ -38,8 +39,8 @@ class CacheStats:
 
     def as_dict(self) -> dict:
         return {"hits": self.hits, "misses": self.misses,
-                "evictions": self.evictions, "regen_s": self.regen_s,
-                "hit_rate": self.hit_rate}
+                "evictions": self.evictions, "prewarmed": self.prewarmed,
+                "regen_s": self.regen_s, "hit_rate": self.hit_rate}
 
 
 class OperatorCache:
@@ -91,3 +92,41 @@ class OperatorCache:
     def keys(self) -> list[tuple]:
         """Cached (spec, seed) keys, least-recently-used first."""
         return list(self._entries)
+
+    # -- restart warm-up: the cache's contents as a manifest of specs -----
+    def manifest(self) -> list[dict]:
+        """JSON-able registry of the cached operators, LRU-first.
+
+        Each entry is {"spec": ProjectorSpec.to_dict(), "seed": int} — the
+        operators themselves are never serialized; `make_projector` is
+        deterministic, so the manifest is a complete description.
+        """
+        return [{"spec": spec.to_dict(), "seed": seed}
+                for spec, seed in self._entries]
+
+    def prewarm(self, manifest: list[dict]) -> int:
+        """Re-materialize a `manifest()`'s operators bitwise-identical.
+
+        Sampling counts into `stats.prewarmed` and `stats.regen_s`, NOT
+        into misses — a prewarmed entry's first `get` is a hit, which is
+        the point. Entries are inserted in manifest order (LRU-first), so
+        recency survives the restart; already-cached keys just refresh.
+        Returns the number of operators sampled.
+        """
+        sampled = 0
+        for entry in manifest:
+            spec = ProjectorSpec.from_dict(entry["spec"])
+            key = (spec, int(entry["seed"]))
+            if key in self._entries:
+                self._entries.move_to_end(key)
+                continue
+            t0 = time.perf_counter()
+            op = make_projector(spec, jax.random.PRNGKey(key[1]))
+            self.stats.regen_s += time.perf_counter() - t0
+            self.stats.prewarmed += 1
+            sampled += 1
+            self._entries[key] = op
+            while len(self._entries) > self.capacity:
+                self._entries.popitem(last=False)
+                self.stats.evictions += 1
+        return sampled

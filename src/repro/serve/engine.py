@@ -115,6 +115,36 @@ class SketchServer:
             raise ValueError("this server has no sketch store attached")
         return self.store.pairwise(ids_a, ids_b, delta=delta)
 
+    # -- restart warm-up -------------------------------------------------
+    def save_manifest(self, path) -> int:
+        """Write the operator cache's registry (spec dicts + seeds) to
+        `path` as JSON — no operator bytes. Returns #entries written."""
+        import json
+        import pathlib
+
+        entries = self.cache.manifest()
+        pathlib.Path(path).write_text(
+            json.dumps({"version": 1, "entries": entries}, indent=1))
+        return len(entries)
+
+    def prewarm(self, source) -> int:
+        """Warm the operator cache from a `save_manifest` file (or an
+        already-loaded manifest list): every operator is regenerated
+        bitwise-identical from its (spec, seed), so the first request per
+        lane after a restart hits instead of paying regeneration. Returns
+        the number of operators sampled."""
+        if isinstance(source, (list, tuple)):
+            return self.cache.prewarm(list(source))
+        import json
+        import pathlib
+
+        doc = json.loads(pathlib.Path(source).read_text())
+        entries = doc.get("entries") if isinstance(doc, dict) else doc
+        if not isinstance(entries, list):
+            raise ValueError(
+                f"prewarm manifest {source} has no 'entries' list")
+        return self.cache.prewarm(entries)
+
     # -- telemetry -------------------------------------------------------
     def stats(self) -> dict:
         """Serving report: latency percentiles, occupancy, cache stats."""

@@ -9,7 +9,7 @@ from benchmarks.check_regression import check, main
 
 def _record():
     return {
-        "schema": "bench_rp/v5",
+        "schema": "bench_rp/v6",
         "sections": {
             "timing": [
                 {"name": "time/batched/tt/project/B=16", "us_per_call": 10.0,
@@ -26,6 +26,9 @@ def _record():
                 {"name": "serve/trace/mixed/B=64", "us_per_call": 900.0,
                  "derived": {"launches_project": 28, "ticks": 28,
                              "hit_rate": 0.96}},
+                {"name": "ckpt/sketched/n=65536", "us_per_call": 40000.0,
+                 "derived": {"bytes_dense": 524288, "bytes_sketched": 32784,
+                             "ratio": 15.99}},
             ],
             "smoke": [
                 {"name": "smoke/tt", "us_per_call": 1.0, "derived": {"k": 64}},
@@ -46,17 +49,17 @@ def test_wall_clock_noise_is_not_gated():
 
 def test_schema_drift_fails():
     new = _record()
-    new["schema"] = "bench_rp/v6"
+    new["schema"] = "bench_rp/v7"
     assert any("schema drift" in e for e in check(new, _record()))
 
 
 def test_required_row_prefixes_cover_struct_subsystem():
     """A timing record that stops emitting a whole gated row family — the
     order-N frontier, the compressed-domain struct/ rows, the
-    sharded-engine shard/ rows, or the serving-engine serve/ rows — fails
-    even if the baseline ALSO lost them (row-by-row diffing alone can't
-    see that)."""
-    for prefix in ("struct/", "time/order/", "shard/", "serve/"):
+    sharded-engine shard/ rows, the serving-engine serve/ rows, or the
+    checkpointing ckpt/ rows — fails even if the baseline ALSO lost them
+    (row-by-row diffing alone can't see that)."""
+    for prefix in ("struct/", "time/order/", "shard/", "serve/", "ckpt/"):
         new = _record()
         new["sections"]["timing"] = [
             r for r in new["sections"]["timing"]
@@ -65,7 +68,7 @@ def test_required_row_prefixes_cover_struct_subsystem():
         assert any("required prefix" in e and prefix in e
                    for e in check(new, base))
     # records without a timing section (e.g. --only smoke) are not gated
-    smoke_only = {"schema": "bench_rp/v5",
+    smoke_only = {"schema": "bench_rp/v6",
                   "sections": {"smoke": _record()["sections"]["smoke"]}}
     assert not any("required prefix" in e
                    for e in check(smoke_only, copy.deepcopy(smoke_only)))

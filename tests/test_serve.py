@@ -495,3 +495,65 @@ def test_slot_server_rejects_empty_prompt():
     srv = SlotServer(model, slots=1, max_seq=16, eos=None, max_gen=2)
     with pytest.raises(ValueError, match="empty prompt"):
         srv.submit(Request(0, np.zeros((0,), np.int64)))
+
+
+# ---------------------------------------------------------------------------
+# cache manifest / prewarm (restart warm-up from a spec registry)
+# ---------------------------------------------------------------------------
+
+def test_projector_spec_dict_roundtrip():
+    spec = rp.ProjectorSpec(family="cp", k=64, dims=(4, 8), rank=3,
+                            dtype=jnp.bfloat16, backend="xla")
+    back = rp.ProjectorSpec.from_dict(spec.to_dict())
+    assert back == spec and hash(back) == hash(spec)  # cache-key identical
+    import json
+    json.dumps(spec.to_dict())                        # JSON-able as claimed
+    with pytest.raises(ValueError, match="dtype"):
+        rp.ProjectorSpec.from_dict({**spec.to_dict(), "dtype": "no_such"})
+
+
+def test_cache_manifest_prewarm_bitwise_and_stats():
+    a = rp.ProjectorSpec(family="tt", k=64, dims=(4, 8, 8), rank=2)
+    b = rp.ProjectorSpec(family="cp", k=32, dims=(8, 8), rank=2)
+    cache = OperatorCache(capacity=4)
+    cache.get(a, seed=3)
+    cache.get(b, seed=9)
+    man = cache.manifest()
+    assert [e["seed"] for e in man] == [3, 9]         # LRU-first order
+
+    warm = OperatorCache(capacity=4)
+    assert warm.prewarm(man) == 2
+    st = warm.stats
+    assert st.prewarmed == 2 and st.misses == 0 and st.hits == 0
+    assert "prewarmed" in st.as_dict()
+    x = np.arange(4 * 8 * 8, dtype=np.float32)
+    y_orig = np.asarray(rp.project(cache.get(a, seed=3), x))
+    y_warm = np.asarray(rp.project(warm.get(a, seed=3), x))
+    np.testing.assert_array_equal(y_orig, y_warm)     # bitwise regeneration
+    assert warm.stats.hits == 1 and warm.stats.misses == 0
+    # idempotent: prewarming again samples nothing, only refreshes recency
+    assert warm.prewarm(man) == 0 and warm.stats.prewarmed == 2
+    # capacity still enforced during prewarm
+    tiny = OperatorCache(capacity=1)
+    assert tiny.prewarm(man) == 2
+    assert tiny.stats.evictions == 1 and len(tiny) == 1
+
+
+def test_server_save_manifest_prewarm_file(tmp_path):
+    srv = SketchServer(ServeConfig())
+    x = np.zeros((4 * 8 * 8,), np.float32)
+    srv.submit(x, SPEC, seed=1, now=0.0)
+    srv.tick(1.0, force=True)
+    path = tmp_path / "ops.json"
+    assert srv.save_manifest(path) == 1
+    assert b"cores" not in path.read_bytes()          # specs only, no weights
+
+    srv2 = SketchServer(ServeConfig())
+    assert srv2.prewarm(path) == 1
+    srv2.submit(x, SPEC, seed=1, now=0.0)
+    srv2.tick(1.0, force=True)
+    assert srv2.cache.stats.hits == 1 and srv2.cache.stats.misses == 0
+    with pytest.raises(ValueError, match="entries"):
+        bad = tmp_path / "bad.json"
+        bad.write_text('{"version": 1}')
+        srv2.prewarm(bad)
