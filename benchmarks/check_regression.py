@@ -15,9 +15,13 @@ diff has nothing to compare) — and on a
 LAUNCH-COUNT REGRESSION: any row whose
 Pallas dispatch count (launches_batched / launches_project /
 launches_reconstruct) grew to more than 2x the baseline, i.e. a batched
-path quietly decomposing back into per-bucket or vmap launches. Wall-clock
-deltas are deliberately NOT gated — CI machines are too noisy — only
-structure and launch counts, which are deterministic.
+path quietly decomposing back into per-bucket or vmap launches — and on a
+PERF-BAND REGRESSION: the `perf/*` rows' derived ratios (`speedup`,
+`wire_ratio`, `hbm_ratio`) drifting past their relative band vs baseline
+(see PERF_BANDS). Absolute wall-clock deltas are deliberately NOT gated —
+CI machines are too noisy — only structure, launch counts, and
+relative-banded ratios of two timings taken on the SAME machine in the
+same run, which cancel the machine out.
 """
 from __future__ import annotations
 
@@ -30,9 +34,20 @@ RECORD_KEYS = {"name", "us_per_call", "derived"}
 # anything; checked on the NEW record whenever it has a timing section.
 # serve/ and ckpt/ ride along: the CI bench invocations that produce a
 # timing section always run those sections too
-# (--only smoke,timing,serve,ckpt).
+# (--only smoke,timing,serve,ckpt,rooflines).
 REQUIRED_ROW_PREFIXES = ("time/order/", "struct/", "shard/", "serve/",
-                         "ckpt/")
+                         "ckpt/", "perf/")
+# Relative bands on the perf/* rows' derived metrics (new vs baseline,
+# numeric plain floats — never gated absolutely, CI machines differ):
+#   speedup    — wall-clock ratio (serial/pipelined, unfused/fused). The
+#                0.5 band is calibrated to CPU-interpret noise: observed
+#                run-to-run wobble is < 1.5x, a collapse to serial (or the
+#                fused path silently unfusing) halves it or worse.
+#   wire_ratio — fp32/int8 HLO all-reduce bytes (~3.9, deterministic).
+#   hbm_ratio  — fused/unfused analytic bytes (< 1; HIGHER is worse, so
+#                this one gates new > baseline / band).
+PERF_BANDS = {"speedup": 0.5, "wire_ratio": 0.8}
+PERF_BANDS_UPPER = {"hbm_ratio": 0.8}
 
 
 def _rows_by_name(record: dict) -> dict:
@@ -79,6 +94,25 @@ def check(new: dict, base: dict) -> list[str]:
                               f"record ({n!r})")
             elif b > 0 and n > 2 * b:
                 errors.append(f"{name}: {key} regressed {b} -> {n} (>2x)")
+        if not name.startswith("perf/"):
+            continue
+        for key, band in list(PERF_BANDS.items()) + list(
+                PERF_BANDS_UPPER.items()):
+            b = brow.get("derived", {}).get(key)
+            if not isinstance(b, (int, float)):
+                continue
+            n = nrow.get("derived", {}).get(key)
+            if not isinstance(n, (int, float)):
+                errors.append(f"{name}: perf metric {key} present in "
+                              f"baseline but missing/non-numeric in new "
+                              f"record ({n!r})")
+            elif key in PERF_BANDS_UPPER:
+                if b > 0 and n > b / band:
+                    errors.append(f"{name}: {key} regressed {b} -> {n} "
+                                  f"(> baseline/{band})")
+            elif b > 0 and n < band * b:
+                errors.append(f"{name}: {key} regressed {b} -> {n} "
+                              f"(< {band}x baseline)")
     return errors
 
 

@@ -1,16 +1,66 @@
 """Aggregates the dry-run sweep JSONs into the roofline table used by
-EXPERIMENTS.md (§Dry-run / §Roofline)."""
+EXPERIMENTS.md (§Dry-run / §Roofline), plus the planner-driven per-kernel
+rooflines (roofline/kernel/*): analytic TPU-time bounds for the batched
+sweep and carry-sweep launches whose HBM bytes come from the SAME planner
+ledger the timing rows report (`kernels.sweep_hbm_bytes` /
+`struct_hbm_bytes`), so the two tables can never disagree on traffic. Each
+kernel row carries both schedules' bounds — `serial_s` (compute + memory,
+back-to-back phases) and `pipelined_s` (max(compute, memory): the
+double-buffered DMA schedule overlaps the streams) — and the
+`pipeline_gain` their ratio predicts on hardware."""
 import json
 import pathlib
 
 from ._util import csv_row
 
 
+def _kernel_rows(rows):
+    from repro.core import theory
+    from repro.kernels import (plan_carry_sweep, plan_contraction,
+                               struct_hbm_bytes, sweep_hbm_bytes)
+    from repro.launch.roofline import HBM_BW, PEAK_FLOPS
+
+    def bound(name, flops, hbm, extra=""):
+        compute_s = flops / PEAK_FLOPS
+        memory_s = hbm / HBM_BW
+        serial_s = compute_s + memory_s
+        pipelined_s = max(compute_s, memory_s)
+        rows.append(csv_row(
+            f"roofline/kernel/{name}", 0.0,
+            f"flops={flops};hbm_bytes={hbm};"
+            f"compute_s={compute_s:.3e};memory_s={memory_s:.3e};"
+            f"serial_s={serial_s:.3e};pipelined_s={pipelined_s:.3e};"
+            f"pipeline_gain={serial_s / pipelined_s:.3f};"
+            f"bottleneck={'compute' if compute_s > memory_s else 'memory'}"
+            f"{extra}"))
+
+    k, rank, b = 128, 2, 8
+    dims = (256, 16, 16)             # the perf/pipeline/sweep bench shape
+    for family in ("tt", "cp"):
+        plan = plan_contraction(family, "project", k, b, dims, rank,
+                                pipeline="double")
+        fl = b * (theory.flops_project_dense_tt(k, dims, rank)
+                  if family == "tt"
+                  else theory.flops_project_dense_cp(k, dims, rank))
+        bound(f"sweep/{family}", fl, sweep_hbm_bytes(plan),
+              f";dims={'x'.join(map(str, dims))};B={b}")
+    bc, r_in, cdims = 64, 4, (16, 16, 16)
+    for family in ("tt", "cp"):
+        cplan = plan_carry_sweep(family, "tt", k, bc, cdims, rank, r_in,
+                                 pipeline="double")
+        fl = bc * theory.flops_project_struct(family, "tt", k, cdims,
+                                              rank, r_in)
+        bound(f"carry/{family}x tt".replace(" ", ""), fl,
+              struct_hbm_bytes(cplan),
+              f";dims={'x'.join(map(str, cdims))};B={bc};r_in={r_in}")
+
+
 def run(fast=True, out_dir="experiments/dryrun"):
     rows = []
+    _kernel_rows(rows)
     p = pathlib.Path(out_dir)
     if not p.exists():
-        csv_row("roofline/none", 0.0, "run launch/sweep.sh first")
+        rows.append(csv_row("roofline/none", 0.0, "run launch/sweep.sh first"))
         return rows
     for f in sorted(p.glob("*.json")):
         cell = json.loads(f.read_text())

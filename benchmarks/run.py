@@ -74,6 +74,11 @@ def main(argv=None) -> None:
         wanted = ["smoke"]
     elif args.only:
         wanted = args.only.split(",")
+        unknown = [w for w in wanted if w not in mods]
+        if unknown:
+            raise ValueError(
+                f"unknown --only section(s) {unknown}: accepted sections "
+                f"are {sorted(mods)}")
     else:
         wanted = [m for m in mods if m != "smoke"]
     print("name,us_per_call,derived")
@@ -84,6 +89,12 @@ def main(argv=None) -> None:
     if args.json:
         import jax
         record = {
+            # v7: kernel perf frontier — timing gains the perf/* rows
+            # (double-buffered pipelining vs serial with a numeric
+            # `speedup`, fused unsketch+EF+AdamW vs the unfused chain with
+            # `hbm_ratio` + dense-kernel counts, int8-vs-fp32 wire with
+            # measured HLO all-reduce bytes and `wire_ratio`), gated by
+            # check_regression's relative bands.
             # v6: fault tolerance — the ckpt/* section (verified save /
             # fallback restore / sketched-state record size, with the >=4x
             # compression ratio asserted in the bench itself). v5: serving
@@ -96,7 +107,7 @@ def main(argv=None) -> None:
             # launch counts so the 1- and 8-device CI jobs diff against one
             # baseline). v3 added the struct/{tt,cp}x{tt,cp}/N={3,4}
             # carry-sweep rows; v2 the time/order/{tt,cp}/N={2..5} frontier.
-            "schema": "bench_rp/v6",
+            "schema": "bench_rp/v7",
             "unix_time": time.time(),
             "backend": jax.default_backend(),
             "fast": fast,

@@ -4,10 +4,12 @@ batched-vs-per-bucket kernel comparison that tracks the sketcher hot path
 (launch counts, wall time, analytic bytes moved), the TT-vs-CP-vs-order
 frontier (time/order/* rows, N in {2,3,4,5}), the compressed-domain
 structured-input rows (struct/{tt,cp}x{tt,cp}/N={3,4}: carry-sweep launch
-counts, carry bytes, analytic speedup), and the sharded-engine rows
+counts, carry bytes, analytic speedup), the sharded-engine rows
 (shard/*: compress_collective wire bytes per sync mode + measured HLO
-all-reduce bytes, project_sharded per-device bucket counts) into
-BENCH_rp.json."""
+all-reduce bytes, project_sharded per-device bucket counts), and the
+kernel perf-frontier rows (perf/*: double-buffered pipelining vs serial,
+fused unsketch+EF+AdamW vs the unfused chain, int8 vs fp32 wire — see
+`_perf_rows`) into BENCH_rp.json."""
 import jax
 import jax.numpy as jnp
 
@@ -28,32 +30,14 @@ def _compiled_with_dispatch_count(fn, *args):
 def _analytic_hbm_bytes(direction, family, k, b, dims, rank):
     """Grid-accurate analytic HBM traffic of ONE batched launch, any order.
 
-    Follows the BlockSpec index maps the planner lays out in
-    kernels/_sweep.py: a block is re-fetched whenever its index map changes
-    between consecutive grid steps and stays resident otherwise.
+    Routed through the planner's own accounting (`kernels.sweep_hbm_bytes`
+    over the `plan_contraction` the launch would actually use) so these
+    rows, the rooflines, and the fused-update ledger can never disagree on
+    what a schedule streams.
     """
-    from repro.kernels import plan_contraction
-    plan = plan_contraction(family, direction, k, b, dims, rank)
-    nk, nb_t, na = (-(-k // plan.tk), -(-b // plan.tb),
-                    -(-dims[0] // plan.ba))
-    x_total = b * 4
-    for d in dims:
-        x_total *= d
-    y_total = b * k * 4
-    c1 = k * dims[0] * rank * 4            # leading core, ia-indexed
-    if family == "tt":
-        c_rest = (sum(k * rank * d * rank * 4 for d in dims[1:-1])
-                  + k * rank * dims[-1] * 4)
-    else:
-        c_rest = sum(k * d * rank * 4 for d in dims[1:])
-    if direction == "project":
-        # grid (ik, ib, ia): x re-streamed once per k-tile; the ia-indexed
-        # leading core once per batch tile; trailing cores resident per
-        # k-tile.
-        return nk * x_total + nb_t * c1 + c_rest + y_total
-    # grid (ib, ia, ik): y re-fetched once per d1-tile; leading core once
-    # per batch tile; trailing cores re-streamed per (batch, d1) tile.
-    return na * y_total + nb_t * c1 + nb_t * na * c_rest + x_total
+    from repro.kernels import plan_contraction, sweep_hbm_bytes
+    return sweep_hbm_bytes(plan_contraction(family, direction, k, b, dims,
+                                            rank))
 
 
 def _order_frontier(rows, fast=True):
@@ -295,6 +279,198 @@ def _batched_vs_per_bucket(rows, fast=True):
                 f"bytes_batched={bytes_b};bytes_per_bucket={bytes_pb}"))
 
 
+def _dense_entry_fusions(hlo_text, shape):
+    """Standalone dense elementwise kernels in the ENTRY computation.
+
+    Counts optimized-HLO `fusion` ops in ENTRY whose result is the full
+    dense `shape` — the EF/AdamW elementwise passes XLA launches as their
+    own kernels in the unfused chain and that disappear entirely into the
+    Pallas launch in the fused one (0 vs 4 on the bench shapes; the gate
+    pins the fused count staying at 0 via the perf row's derived keys).
+    """
+    import re
+    entry = re.search(r"ENTRY [^{]+\{(.*?)\n\}", hlo_text, re.S)
+    if entry is None:
+        return -1
+    sig = "f32[" + ",".join(map(str, shape)) + "]"
+    return sum(1 for line in entry.group(1).splitlines()
+               if " fusion(" in line and line.lstrip().split(" = ")[-1]
+               .startswith(sig))
+
+
+def _perf_rows(rows, fast=True):
+    """Kernel perf frontier rows (perf/*) — the wall-clock-gated trio.
+
+    * perf/pipeline/sweep/{tt,cp} and perf/pipeline/carry/{tt,cp} — the
+      double-buffered DMA schedule vs the serial one on shapes with real
+      overlap to win (d1/ba > 1 grid steps for the sweep, b/tb > 1 for the
+      carry). `speedup` is a PLAIN float (serial us / pipelined us) so the
+      gate can band it; in CPU interpret mode the DMA emulation makes it
+      hover near 1.0 — the 0.5x relative band catches collapses, TPU runs
+      show the overlap.
+    * perf/fused/update/{tt,cp} — ONE fused unsketch+EF+AdamW launch vs
+      the unfused reconstruct -> EF -> AdamW chain on the same buckets.
+      `speedup` (unfused us / fused us) rides the same band; `hbm_ratio`
+      (fused/unfused analytic bytes from the planner ledger, < 1) and the
+      standalone dense elementwise kernel counts (`dense_kernels_fused=0`
+      vs `dense_kernels_unfused=4` — the EF/AdamW passes XLA launches as
+      its own fusions collapse into the Pallas call) are deterministic.
+    * perf/wire/sync={sketch-mean,local-mean} — compress_collective with
+      wire='fp32' vs wire='int8': measured HLO all-reduce bytes for both,
+      `wire_ratio` = fp32/int8 bytes (~3.9x: int8 payload + fp32 scales),
+      and the compressor's own analytic `wire_bytes` for the int8 mode so
+      the measured and declared ledgers sit side by side.
+    """
+    del fast
+    from repro.kernels import (fused_hbm_bytes, plan_carry_sweep,
+                               plan_contraction, plan_fused_update,
+                               struct_hbm_bytes, sweep_hbm_bytes,
+                               unfused_hbm_bytes)
+    key = jax.random.PRNGKey(31)
+
+    # --- double-buffered dense sweep vs serial --------------------------
+    k, rank, b = 128, 2, 8
+    dims = (256, 16, 16)                   # d1/ba > 1: steps to overlap
+    xb = jax.random.normal(jax.random.fold_in(key, 0), (b,) + dims)
+    for family in ("tt", "cp"):
+        op = rp.make_projector(
+            rp.ProjectorSpec(family=family, k=k, dims=dims, rank=rank),
+            jax.random.fold_in(key, 1))
+
+        def serial(a, op=op):
+            return rp.project(op, a, backend="pallas")
+
+        def double(a, op=op):
+            return rp.project(op, a, backend="pallas", pipeline="double")
+
+        f_s, _ = _compiled_with_dispatch_count(serial, xb)
+        f_d, launches_d = _compiled_with_dispatch_count(double, xb)
+        us_s, us_d = time_call(f_s, xb), time_call(f_d, xb)
+        plan = plan_contraction(family, "project", k, b, dims, rank,
+                                pipeline="double")
+        rows.append(csv_row(
+            f"perf/pipeline/sweep/{family}", us_d,
+            f"dims={'x'.join(map(str, dims))};k={k};B={b};"
+            f"launches_project={launches_d};us_serial={us_s:.1f};"
+            f"speedup={us_s / us_d:.3f};"
+            f"hbm_bytes={sweep_hbm_bytes(plan)};"
+            f"grid_steps={-(-dims[0] // plan.ba)}"))
+
+    # --- double-buffered carry sweep vs serial --------------------------
+    bc, r_in, cdims = 64, 4, (16, 16, 16)  # b/tb > 1: steps to overlap
+    items = [random_tt(jax.random.fold_in(key, 50 + i), cdims, r_in)
+             for i in range(bc)]
+    xc = BatchedTTTensor.stack(items)
+    for family in ("tt", "cp"):
+        op = rp.make_projector(
+            rp.ProjectorSpec(family=family, k=k, dims=cdims, rank=rank),
+            jax.random.fold_in(key, 2))
+
+        def serial(a, op=op):
+            return rp.project(op, a, backend="pallas")
+
+        def double(a, op=op):
+            return rp.project(op, a, backend="pallas", pipeline="double")
+
+        f_s, _ = _compiled_with_dispatch_count(serial, xc)
+        f_d, launches_d = _compiled_with_dispatch_count(double, xc)
+        us_s, us_d = time_call(f_s, xc), time_call(f_d, xc)
+        cplan = plan_carry_sweep(family, "tt", k, bc, cdims, rank, r_in,
+                                 pipeline="double")
+        rows.append(csv_row(
+            f"perf/pipeline/carry/{family}", us_d,
+            f"dims={'x'.join(map(str, cdims))};k={k};B={bc};r_in={r_in};"
+            f"launches_project={launches_d};us_serial={us_s:.1f};"
+            f"speedup={us_s / us_d:.3f};"
+            f"hbm_bytes={struct_hbm_bytes(cplan)};"
+            f"grid_steps={-(-bc // cplan.tb)}"))
+
+    # --- fused unsketch+EF+AdamW vs the unfused chain -------------------
+    from repro.kernels import fused_update_buckets
+    nb, fdims = 8, (64, 16, 16)
+    yb = jax.random.normal(jax.random.fold_in(key, 3), (nb, k))
+    dense = [jax.random.normal(jax.random.fold_in(key, 60 + i),
+                               (nb,) + fdims) for i in range(4)]
+    lr = jnp.float32(1e-3)
+    c1 = c2 = jnp.float32(0.5)
+    hp = dict(alpha=0.9, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1)
+    for family in ("tt", "cp"):
+        op = rp.make_projector(
+            rp.ProjectorSpec(family=family, k=k, dims=fdims, rank=rank),
+            jax.random.fold_in(key, 4))
+
+        def fused(y, p, w, m, v, lr, c1, c2, op=op):
+            rp.count_kernel_dispatch()
+            with rp.force_pallas():
+                return fused_update_buckets(op, y, p, w, m, v, lr, c1, c2,
+                                            **hp)
+
+        def unfused(y, p, w, m, v, lr, c1, c2, op=op):
+            with rp.force_pallas():
+                g = hp["alpha"] * rp.reconstruct(op, y)
+            resid = p - g
+            m32 = hp["b1"] * m + (1 - hp["b1"]) * g
+            v32 = hp["b2"] * v + (1 - hp["b2"]) * g * g
+            step = (m32 / c1) / (jnp.sqrt(v32 / c2) + hp["eps"])
+            return resid, w - lr * (step + hp["weight_decay"] * w), m32, v32
+
+        argv = (yb, *dense, lr, c1, c2)
+        f_f, launches_f = _compiled_with_dispatch_count(fused, *argv)
+        f_u, launches_u = _compiled_with_dispatch_count(unfused, *argv)
+        us_f, us_u = time_call(f_f, *argv), time_call(f_u, *argv)
+        fus_f = _dense_entry_fusions(f_f.as_text(), (nb,) + fdims)
+        fus_u = _dense_entry_fusions(f_u.as_text(), (nb,) + fdims)
+        fplan = plan_fused_update(family, k, nb, fdims, rank)
+        rows.append(csv_row(
+            f"perf/fused/update/{family}", us_f,
+            f"dims={'x'.join(map(str, fdims))};k={k};B={nb};"
+            f"launches_project={launches_f};launches_unfused={launches_u};"
+            f"us_unfused={us_u:.1f};speedup={us_u / us_f:.3f};"
+            f"hbm_ratio={fused_hbm_bytes(fplan) / unfused_hbm_bytes(fplan):.3f};"
+            f"hbm_bytes_fused={fused_hbm_bytes(fplan)};"
+            f"hbm_bytes_unfused={unfused_hbm_bytes(fplan)};"
+            f"dense_kernels_fused={fus_f};dense_kernels_unfused={fus_u}"))
+
+    # --- int8 sketches on the wire --------------------------------------
+    from repro.core.sketch import PytreeSketcher, SketchConfig
+    from repro.launch.roofline import parse_collectives
+    from repro.optim.compress import SketchCompressor
+    ndev = len(jax.devices())
+    mesh = jax.make_mesh((ndev,), ("pod",))
+    cfg = SketchConfig(family="tt", k=128, rank=2, bucket_elems=8 * 16 * 16,
+                       dims=(8, 16, 16))
+    g = {"w": jax.random.normal(jax.random.fold_in(key, 5), (ndev, 4096)),
+         "b": jax.random.normal(jax.random.fold_in(key, 6), (ndev, 100))}
+    state = {"residual": jax.tree.map(jnp.zeros_like, g)}
+    sk = PytreeSketcher(cfg, jax.tree.map(lambda x: x[0], g))
+    for sync in ("sketch-mean", "local-mean"):
+        hlo_bytes = {}
+        for wire in ("fp32", "int8"):
+            comp = SketchCompressor(cfg, sync=sync, pod_axis="pod",
+                                    wire=wire)
+
+            def run_step(gg, ss, step, comp=comp):
+                with rp.force_pallas():
+                    return comp.compress_collective(gg, ss, step=step,
+                                                    mesh=mesh)[:2]
+
+            f, launches = _compiled_with_dispatch_count(run_step, g, state, 0)
+            us = time_call(f, g, state, 0)
+            ar = parse_collectives(f.as_text())["per_type"].get(
+                "all-reduce", {"count": 0, "bytes": 0.0})
+            hlo_bytes[wire] = int(ar["bytes"])
+        comp_i8 = SketchCompressor(cfg, sync=sync, pod_axis="pod",
+                                   wire="int8")
+        rows.append(csv_row(
+            f"perf/wire/sync={sync}", us,
+            f"npod={ndev};n_buckets={sk.n_buckets};k={cfg.k};"
+            f"launches_project={launches};"
+            f"hlo_bytes_fp32={hlo_bytes['fp32']};"
+            f"hlo_bytes_int8={hlo_bytes['int8']};"
+            f"wire_ratio={hlo_bytes['fp32'] / max(1, hlo_bytes['int8']):.3f};"
+            f"wire_bytes_int8={comp_i8.wire_bytes(sk)}"))
+
+
 def run(fast=True):
     d, N = 3, 12 if fast else 12
     dims = (d,) * N
@@ -340,4 +516,5 @@ def run(fast=True):
     _order_frontier(rows, fast=fast)
     _struct_frontier(rows, fast=fast)
     _shard_rows(rows, fast=fast)
+    _perf_rows(rows, fast=fast)
     return rows

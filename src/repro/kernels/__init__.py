@@ -17,12 +17,18 @@ Validated in interpret mode against ref.py / struct/ref.py; BlockSpecs
 target TPU VMEM.
 """
 from . import ref, struct
-from .ops import (MAX_ORDER, ContractionPlan, cp_project, cp_reconstruct,
-                  kernel_order_supported, pick_tiles, plan_contraction,
-                  tt_cores_squeezed, tt_project, tt_reconstruct)
-from .struct import plan_carry_sweep, struct_project
+from .fused_update import (fused_hbm_bytes, fused_update_buckets,
+                           plan_fused_update, unfused_hbm_bytes)
+from .ops import (MAX_ORDER, PIPELINES, ContractionPlan, cp_project,
+                  cp_reconstruct, kernel_order_supported, pick_tiles,
+                  plan_contraction, sweep_hbm_bytes, tt_cores_squeezed,
+                  tt_project, tt_reconstruct)
+from .struct import plan_carry_sweep, struct_hbm_bytes, struct_project
 
-__all__ = ["MAX_ORDER", "ContractionPlan", "cp_project", "cp_reconstruct",
+__all__ = ["MAX_ORDER", "PIPELINES", "ContractionPlan", "cp_project",
+           "cp_reconstruct", "fused_hbm_bytes", "fused_update_buckets",
            "kernel_order_supported", "pick_tiles", "plan_carry_sweep",
-           "plan_contraction", "ref", "struct", "struct_project",
-           "tt_cores_squeezed", "tt_project", "tt_reconstruct"]
+           "plan_contraction", "plan_fused_update", "ref", "struct",
+           "struct_hbm_bytes", "struct_project", "sweep_hbm_bytes",
+           "tt_cores_squeezed", "tt_project", "tt_reconstruct",
+           "unfused_hbm_bytes"]

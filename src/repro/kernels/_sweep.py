@@ -12,6 +12,19 @@ Grid conventions (the PR-2 batched schedule, order-generic):
   the d1 axis in the revisited (TB, TK) output block.
 * reconstruct: grid = (B/TB, d1/BA, k/TK), k-tile INNERMOST, accumulate
   over k in the revisited (TB, BA, d2..dN) output block.
+
+`sweep_project_pipelined` is the DOUBLE-BUFFERED variant of the project
+schedule (plan `pipeline='double'`): the d1 grid axis moves inside the
+kernel as a fori_loop and the two streamed operands — the input block and
+the d1-tiled leading core — are prefetched into a second VMEM slot with
+explicit `pltpu.make_async_copy` DMAs while the current tile contracts on
+the MXU, so per-tile transfers overlap compute instead of serializing per
+grid step. The trailing cores keep their BlockSpec residency (their index
+depends only on ik, so Pallas fetches them once per k-tile either way).
+The planner accounts the second slot (`plan_contraction(pipeline=
+'double')` — two slots halve the usable tile budget); analytic HBM traffic
+is IDENTICAL to the serial schedule (`ops.sweep_hbm_bytes`): pipelining
+buys overlap, not fewer bytes.
 """
 from __future__ import annotations
 
@@ -20,6 +33,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _project_kernel(x_ref, *refs, steps, scale):
@@ -109,6 +123,102 @@ def sweep_project(x: jnp.ndarray, *cores: jnp.ndarray, steps, tk: int,
         out_shape=jax.ShapeDtypeStruct((b, k), jnp.float32),
         interpret=interpret,
     )(x, *cores)
+
+
+def _project_pipelined_kernel(x_hbm, c0_hbm, *refs, steps, scale, na, tk,
+                              tb, ba, trail, r0):
+    core_refs, o_ref = refs[:-1], refs[-1]
+    ik = pl.program_id(0)
+    ib = pl.program_id(1)
+
+    def body(xs, cs, sems):
+        # slot s of xs/cs holds d1-tile i with s == i % 2; sems[0] guards
+        # the input-block copies, sems[1] the leading-core copies
+        def x_dma(slot, i):
+            return pltpu.make_async_copy(
+                x_hbm.at[pl.ds(ib * tb, tb), pl.ds(i * ba, ba)],
+                xs.at[slot], sems.at[0, slot])
+
+        def c_dma(slot, i):
+            return pltpu.make_async_copy(
+                c0_hbm.at[pl.ds(ik * tk, tk), pl.ds(i * ba, ba)],
+                cs.at[slot], sems.at[1, slot])
+
+        x_dma(0, 0).start()              # warm-up: tile 0 into slot 0
+        c_dma(0, 0).start()
+
+        def step(i, acc):
+            slot = jax.lax.rem(i, 2)
+            nxt = jax.lax.rem(i + 1, 2)
+
+            @pl.when(i + 1 < na)
+            def _prefetch():             # next tile streams during compute
+                x_dma(nxt, i + 1).start()
+                c_dma(nxt, i + 1).start()
+
+            x_dma(slot, i).wait()
+            c_dma(slot, i).wait()
+            z = xs[slot]
+            for spec, g_ref in zip(steps[:-1], reversed(core_refs)):
+                z = jnp.einsum(spec, z, g_ref[...],
+                               preferred_element_type=jnp.float32)
+            z = jnp.einsum(steps[-1], z, cs[slot],
+                           preferred_element_type=jnp.float32)
+            return acc + z
+
+        acc = jax.lax.fori_loop(0, na, step,
+                                jnp.zeros((tb, tk), jnp.float32))
+        o_ref[...] = acc * scale
+
+    pl.run_scoped(body,
+                  xs=pltpu.VMEM((2, tb, ba) + trail, jnp.float32),
+                  cs=pltpu.VMEM((2, tk, ba, r0), jnp.float32),
+                  sems=pltpu.SemaphoreType.DMA((2, 2)))
+
+
+@functools.partial(jax.jit, static_argnames=("steps", "tk", "tb", "ba",
+                                             "scale", "interpret"))
+def sweep_project_pipelined(x: jnp.ndarray, *cores: jnp.ndarray, steps,
+                            tk: int, tb: int, ba: int, scale: float,
+                            interpret: bool) -> jnp.ndarray:
+    """Double-buffered project sweep: same contraction, overlapped streams.
+
+    Identical contract to `sweep_project` (padded operands, same einsum
+    program, same output) laid out as grid = (k/TK, B/TB) with the d1 axis
+    swept by an in-kernel fori_loop: the input block and the leading-core
+    tile live in `memory_space=ANY` and are double-buffered into VMEM
+    scratch by explicit DMAs, prefetching tile i+1 while tile i contracts.
+    """
+    b, d1 = x.shape[:2]
+    trail = x.shape[2:]
+    k = cores[0].shape[0]
+    r0 = cores[0].shape[2]
+    assert len(cores) == x.ndim - 1 and len(steps) == len(cores)
+    assert k % tk == 0 and b % tb == 0 and d1 % ba == 0, (k, tk, b, tb, d1, ba)
+    grid = (k // tk, b // tb)
+    in_specs = [pl.BlockSpec(memory_space=pltpu.ANY),   # x: manual DMA
+                pl.BlockSpec(memory_space=pltpu.ANY)]   # leading core
+    for g in cores[1:]:
+        in_specs.append(pl.BlockSpec((tk,) + g.shape[1:],
+                                     _imap2(0, *([None] * (g.ndim - 1)))))
+    return pl.pallas_call(
+        functools.partial(_project_pipelined_kernel, steps=steps,
+                          scale=scale, na=d1 // ba, tk=tk, tb=tb, ba=ba,
+                          trail=trail, r0=r0),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((tb, tk), _imap2(1, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, k), jnp.float32),
+        interpret=interpret,
+    )(x, *cores)
+
+
+def _imap2(*pattern):
+    """`_imap` over the 2-axis (ik, ib) pipelined grid."""
+    def f(i0, i1):
+        prog = (i0, i1)
+        return tuple(prog[p] if p is not None else 0 for p in pattern)
+    return f
 
 
 @functools.partial(jax.jit, static_argnames=("steps", "trail", "tk", "tb",

@@ -53,6 +53,11 @@ MAX_ORDER = len(MODES)
 
 _FAMILIES = ("tt", "cp")
 _KINDS = ("project", "reconstruct")
+# 'serial': one streamed tile per grid step (Pallas-managed copies).
+# 'double': the d1 axis moves inside the kernel and the streamed operands
+# are double-buffered by explicit DMAs (project only) — the second VMEM
+# slot is accounted by the planner, halving the usable tile budget.
+PIPELINES = ("serial", "double")
 
 
 def _pad_axis(a: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
@@ -162,26 +167,33 @@ class ContractionPlan:
     ba: int
     steps: tuple
     vmem_bytes: int
+    pipeline: str = "serial"
 
     @property
     def order(self) -> int:
         return len(self.dims)
 
     @property
-    def grid(self) -> tuple[int, int, int]:
+    def grid(self) -> tuple[int, ...]:
         """Grid for the padded problem (k-tile outermost for project,
-        innermost for reconstruct — the PR-2 schedule, order-generic)."""
+        innermost for reconstruct — the PR-2 schedule, order-generic).
+        Under pipeline='double' the project d1 axis moves inside the
+        kernel (an in-kernel fori_loop over double-buffered tiles), so
+        the launch grid is (nk, nb)."""
         nk = -(-self.k // self.tk)
         nb = -(-self.b // self.tb)
         na = -(-self.dims[0] // self.ba)
         if self.kind == "project":
+            if self.pipeline == "double":
+                return (nk, nb)
             return (nk, nb, na)
         return (nb, na, nk)
 
 
 def plan_contraction(family: str, kind: str, k: int, b: int,
                      dims: tuple[int, ...], rank: int, *,
-                     budget: int = VMEM_BUDGET_BYTES) -> ContractionPlan:
+                     budget: int = VMEM_BUDGET_BYTES,
+                     pipeline: str = "serial") -> ContractionPlan:
     """Plan a mode-sweep kernel launch for static order N = len(dims).
 
     Accounts every per-instance VMEM buffer — streamed input/output blocks,
@@ -202,6 +214,14 @@ def plan_contraction(family: str, kind: str, k: int, b: int,
         raise ValueError(f"unknown kind {kind!r}; expected {_KINDS}")
     if family not in _FAMILIES:
         raise ValueError(f"unknown family {family!r}; expected {_FAMILIES}")
+    if pipeline not in PIPELINES:
+        raise ValueError(f"unknown pipeline {pipeline!r}; expected "
+                         f"{PIPELINES}")
+    if pipeline == "double" and kind != "project":
+        raise ValueError(
+            "pipeline='double' is implemented for kind='project' only: the "
+            "reconstruct sweep accumulates over the k grid axis in the "
+            "revisited output block and stays serial")
     dims = tuple(int(d) for d in dims)
     order = len(dims)
     if order < 2:
@@ -223,7 +243,12 @@ def plan_contraction(family: str, kind: str, k: int, b: int,
         x_blk = tb * ba * _prod(trail)
         sweep = sum(tk * tb * ba * _prod(trail[:j]) * r
                     for j in range(len(trail)))
-        return 4 * (x_blk + sweep + tk * core_elems + tb * tk)
+        # double buffering: a SECOND slot for each streamed operand — the
+        # input block and the d1-tiled leading core (tk*ba*r) — lives in
+        # VMEM scratch while the first contracts; the trailing cores keep
+        # single-slot BlockSpec residency (indexed by ik only)
+        extra = (x_blk + tk * ba * r) if pipeline == "double" else 0
+        return 4 * (x_blk + sweep + tk * core_elems + tb * tk + extra)
 
     def reconstruct_bytes(tk: int, tb: int) -> int:
         m = sum(tk * r * _prod(trail[i:]) for i in range(len(trail) - 1))
@@ -259,7 +284,40 @@ def plan_contraction(family: str, kind: str, k: int, b: int,
              else _reconstruct_steps(family, order))
     return ContractionPlan(family=family, kind=kind, k=k, b=b, dims=dims,
                            rank=r, tk=tk, tb=tb, ba=ba, steps=steps,
-                           vmem_bytes=footprint(tk, tb))
+                           vmem_bytes=footprint(tk, tb), pipeline=pipeline)
+
+
+def sweep_hbm_bytes(plan: ContractionPlan) -> int:
+    """Grid-accurate analytic HBM traffic of ONE batched sweep launch.
+
+    Follows the BlockSpec index maps laid out in `_sweep.py`: a block is
+    re-fetched whenever its index map changes between consecutive grid
+    steps and stays resident otherwise. The SAME traffic applies to the
+    serial and double-buffered project schedules — pipelining overlaps the
+    transfers with compute, it does not remove bytes — so timing rows,
+    rooflines, and the fused-update accounting all read this one function.
+    """
+    k, b, dims, r = plan.k, plan.b, plan.dims, plan.rank
+    nk = -(-k // plan.tk)
+    nb_t = -(-b // plan.tb)
+    na = -(-dims[0] // plan.ba)
+    x_total = 4 * b * _prod(dims)
+    y_total = 4 * b * k
+    c1 = 4 * k * dims[0] * r               # leading core, d1-tile indexed
+    if plan.family == "tt":
+        c_rest = (sum(4 * k * r * d * r for d in dims[1:-1])
+                  + 4 * k * r * dims[-1])
+    else:
+        c_rest = sum(4 * k * d * r for d in dims[1:])
+    if plan.kind == "project":
+        # grid (ik, ib[, ia]): x re-streamed once per k-tile; the d1-tiled
+        # leading core once per batch tile; trailing cores resident per
+        # k-tile. The double-buffered schedule's manual DMAs fetch exactly
+        # the same tiles in the same order.
+        return nk * x_total + nb_t * c1 + c_rest + y_total
+    # grid (ib, ia, ik): y re-fetched once per d1-tile; leading core once
+    # per batch tile; trailing cores re-streamed per (batch, d1) tile.
+    return na * y_total + nb_t * c1 + nb_t * na * c_rest + x_total
 
 
 def pick_tiles(k: int, b: int, dims: tuple[int, ...], rank: int, *,
@@ -303,15 +361,19 @@ def _pad_operands(plan: ContractionPlan, cores) -> list[jnp.ndarray]:
 # projections
 # ---------------------------------------------------------------------------
 
-def _sweep_project(family, op, cores, x, interpret):
+def _sweep_project(family, op, cores, x, interpret, pipeline="serial"):
+    from ._sweep import sweep_project_pipelined
     from .cp_sweep import cp_sweep_project
     from .tt_sweep import tt_sweep_project
     k = op.k
     xb, batched = _as_batch(x, op.order)
     plan = plan_contraction(family, "project", k, xb.shape[0], op.in_dims,
-                            op.rank)
+                            op.rank, pipeline=pipeline)
     xk = _pad_axis(_pad_axis(xb, 0, plan.tb), 1, plan.ba)
-    kern = tt_sweep_project if family == "tt" else cp_sweep_project
+    if plan.pipeline == "double":
+        kern = sweep_project_pipelined
+    else:
+        kern = tt_sweep_project if family == "tt" else cp_sweep_project
     y = kern(xk, *_pad_operands(plan, cores), steps=plan.steps, tk=plan.tk,
              tb=plan.tb, ba=plan.ba, scale=1.0 / math.sqrt(k),
              interpret=interpret)
@@ -326,22 +388,27 @@ def kernel_order_supported(order: int) -> bool:
 
 
 def tt_project(op: TTRP, x: jnp.ndarray, *, interpret: bool = True,
-               use_kernel: bool = True) -> jnp.ndarray:
+               use_kernel: bool = True,
+               pipeline: str = "serial") -> jnp.ndarray:
     """f_TT(R)(x) for dense order-N input(s) via the mode-sweep kernel.
 
     x: (*dims) -> (k,)  or  (B, *dims) -> (B, k), one launch either way.
+    `pipeline='double'` selects the double-buffered DMA schedule
+    (`sweep_project_pipelined`) — same result, overlapped streams.
     """
     if not kernel_order_supported(op.order) or not use_kernel:
         return op.project(x)
-    return _sweep_project("tt", op, tt_cores_squeezed(op), x, interpret)
+    return _sweep_project("tt", op, tt_cores_squeezed(op), x, interpret,
+                          pipeline)
 
 
 def cp_project(op: CPRP, x: jnp.ndarray, *, interpret: bool = True,
-               use_kernel: bool = True) -> jnp.ndarray:
+               use_kernel: bool = True,
+               pipeline: str = "serial") -> jnp.ndarray:
     """f_CP(R)(x) for dense order-N input(s) via the mode-sweep kernel."""
     if not kernel_order_supported(op.order) or not use_kernel:
         return op.project(x)
-    return _sweep_project("cp", op, op.factors, x, interpret)
+    return _sweep_project("cp", op, op.factors, x, interpret, pipeline)
 
 
 # ---------------------------------------------------------------------------
@@ -388,7 +455,7 @@ def cp_reconstruct(op: CPRP, y: jnp.ndarray, *, interpret: bool = True,
     return _sweep_reconstruct("cp", op, op.factors, y, interpret)
 
 
-__all__ = ["ContractionPlan", "MAX_ORDER", "VMEM_BUDGET_BYTES",
+__all__ = ["ContractionPlan", "MAX_ORDER", "PIPELINES", "VMEM_BUDGET_BYTES",
            "cp_project", "cp_reconstruct", "kernel_order_supported",
-           "pick_tiles", "plan_contraction", "ref", "tt_cores_squeezed",
-           "tt_project", "tt_reconstruct"]
+           "pick_tiles", "plan_contraction", "ref", "sweep_hbm_bytes",
+           "tt_cores_squeezed", "tt_project", "tt_reconstruct"]

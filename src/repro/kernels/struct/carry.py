@@ -25,6 +25,16 @@ Padding contract (enforced by `ops.struct_project`): the k axis of every
 operator core is zero-padded to TK (zero rows project to zero and are
 sliced away), the batch axis of every input core to TB (zero cores
 contribute zero rows). Bond/mode axes are never tiled.
+
+`carry_sweep_project_pipelined` is the DOUBLE-BUFFERED variant (plan
+`pipeline='double'`): grid = (k/TK,) with the batch axis swept by an
+in-kernel fori_loop — the per-batch-tile input cores are prefetched into a
+second VMEM slot with explicit `pltpu.make_async_copy` DMAs while the
+current batch tile's carry program runs, so input transfers overlap the
+bond updates. Operator cores keep their BlockSpec residency per k-tile;
+the `(B, TK)` output block is written one batch tile at a time. The
+planner accounts the second input slot and the full-batch output block
+(`plan.plan_carry_sweep(pipeline='double')`).
 """
 from __future__ import annotations
 
@@ -33,6 +43,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _carry_kernel(*refs, program, n_op, scale):
@@ -94,3 +105,95 @@ def carry_sweep_project(*cores: jnp.ndarray, n_op: int, program,
         out_shape=jax.ShapeDtypeStruct((b, k), jnp.float32),
         interpret=interpret,
     )(*cores)
+
+
+def _carry_pipelined_kernel(*refs, program, n_op, scale, nb, tb, in_shapes):
+    op_refs = refs[:n_op]
+    x_hbm = refs[n_op:-1]                 # full input cores, manual DMA
+    o_ref = refs[-1]                      # (B, TK) block for this k-tile
+
+    def body(sems, **bufs):
+        xs = [bufs[f"x{j}"] for j in range(len(x_hbm))]
+
+        def dma(j, slot, i):
+            return pltpu.make_async_copy(
+                x_hbm[j].at[pl.ds(i * tb, tb)], xs[j].at[slot],
+                sems.at[j, slot])
+
+        for j in range(len(x_hbm)):       # warm-up: batch tile 0, slot 0
+            dma(j, 0, 0).start()
+
+        def step(i, carry):
+            slot = jax.lax.rem(i, 2)
+            nxt = jax.lax.rem(i + 1, 2)
+
+            @pl.when(i + 1 < nb)
+            def _prefetch():              # next tile streams during compute
+                for j in range(len(x_hbm)):
+                    dma(j, nxt, i + 1).start()
+
+            for j in range(len(x_hbm)):
+                dma(j, slot, i).wait()
+            env = {}
+
+            def operand(name):
+                if name in env:           # 'c' or 't'
+                    return env[name]
+                idx = int(name[1:])
+                return (op_refs[idx][...] if name[0] == "g"
+                        else xs[idx][slot])
+
+            for dst, spec, a, b in program:
+                env[dst] = jnp.einsum(spec, operand(a), operand(b),
+                                      preferred_element_type=jnp.float32)
+            o_ref[pl.ds(i * tb, tb), :] = env["c"] * scale
+            return carry
+
+        jax.lax.fori_loop(0, nb, step, 0)
+
+    pl.run_scoped(body,
+                  sems=pltpu.SemaphoreType.DMA((len(x_hbm), 2)),
+                  **{f"x{j}": pltpu.VMEM((2, tb) + shp, jnp.float32)
+                     for j, shp in enumerate(in_shapes)})
+
+
+@functools.partial(jax.jit, static_argnames=("n_op", "program", "tk", "tb",
+                                             "scale", "interpret"))
+def carry_sweep_project_pipelined(*cores: jnp.ndarray, n_op: int, program,
+                                  tk: int, tb: int, scale: float,
+                                  interpret: bool) -> jnp.ndarray:
+    """Double-buffered carry sweep: same contraction, overlapped streams.
+
+    Identical contract to `carry_sweep_project`, laid out as grid = (k/TK,)
+    with the batch axis swept by an in-kernel fori_loop: the input cores
+    live in `memory_space=ANY` and are double-buffered into VMEM scratch
+    by explicit DMAs, prefetching batch tile i+1 while tile i's carry
+    program runs against the k-tile-resident operator cores.
+    """
+    op_cores, in_cores = cores[:n_op], cores[n_op:]
+    k = op_cores[0].shape[0]
+    b = in_cores[0].shape[0]
+    assert len(op_cores) == len(in_cores), (len(op_cores), len(in_cores))
+    assert k % tk == 0 and b % tb == 0, (k, tk, b, tb)
+    in_specs = [pl.BlockSpec((tk,) + g.shape[1:],
+                             _imap1(0, *([None] * (g.ndim - 1))))
+                for g in op_cores]
+    in_specs += [pl.BlockSpec(memory_space=pltpu.ANY) for _ in in_cores]
+    return pl.pallas_call(
+        functools.partial(_carry_pipelined_kernel, program=program,
+                          n_op=n_op, scale=scale, nb=b // tb, tb=tb,
+                          in_shapes=tuple(x.shape[1:] for x in in_cores)),
+        grid=(k // tk,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((b, tk), _imap1(None, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, k), jnp.float32),
+        interpret=interpret,
+    )(*cores)
+
+
+def _imap1(*pattern):
+    """Index map over the 1-axis (ik,) pipelined grid."""
+    def f(i0):
+        prog = (i0,)
+        return tuple(prog[p] if p is not None else 0 for p in pattern)
+    return f

@@ -34,7 +34,7 @@ from repro.core.tt_rp import TTRP
 
 from ..ops import _pad_axis, kernel_order_supported, tt_cores_squeezed
 from . import ref
-from .carry import carry_sweep_project
+from .carry import carry_sweep_project, carry_sweep_project_pipelined
 from .plan import plan_carry_sweep
 
 
@@ -77,11 +77,15 @@ def struct_rank(x) -> int:
 
 
 def struct_project(op, x, *, interpret: bool = True,
-                   use_kernel: bool = True) -> jnp.ndarray:
+                   use_kernel: bool = True,
+                   pipeline: str = "serial") -> jnp.ndarray:
     """Project structured input(s) with a TT/CP operator, never densifying.
 
     x: TTTensor / CPTensor -> (k,); BatchedTTTensor / BatchedCPTensor with
     batch B -> (B, k) — ONE carry-sweep launch for the whole batch.
+    `pipeline='double'` selects the double-buffered carry sweep
+    (`carry.carry_sweep_project_pipelined`); same result bitwise intent,
+    fp32-tolerance equivalent in practice.
     """
     if not isinstance(op, (TTRP, CPRP)):
         raise TypeError(f"struct_project needs a TT/CP operator, got "
@@ -103,12 +107,14 @@ def struct_project(op, x, *, interpret: bool = True,
         y = ref_fn(op_cores, in_cores) / jnp.sqrt(jnp.asarray(k, jnp.float32))
         return y if batched else y[0]
     plan = plan_carry_sweep(op_family, in_family, k, b, op.in_dims,
-                            op.rank, struct_rank(xb))
+                            op.rank, struct_rank(xb), pipeline=pipeline)
     op_pad = tuple(_pad_axis(g, 0, plan.tk) for g in op_cores)
     in_pad = tuple(_pad_axis(c, 0, plan.tb) for c in in_cores)
-    y = carry_sweep_project(*op_pad, *in_pad, n_op=len(op_pad),
-                            program=plan.program, tk=plan.tk, tb=plan.tb,
-                            scale=1.0 / math.sqrt(k), interpret=interpret)
+    kernel = (carry_sweep_project_pipelined if plan.pipeline == "double"
+              else carry_sweep_project)
+    y = kernel(*op_pad, *in_pad, n_op=len(op_pad),
+               program=plan.program, tk=plan.tk, tb=plan.tb,
+               scale=1.0 / math.sqrt(k), interpret=interpret)
     y = y[:b, :k]
     return y if batched else y[0]
 

@@ -33,7 +33,8 @@ from __future__ import annotations
 
 import dataclasses
 
-from ..ops import MAX_ORDER, VMEM_BUDGET_BYTES, _lane_tile, _pow2_at_most
+from ..ops import (MAX_ORDER, PIPELINES, VMEM_BUDGET_BYTES, _lane_tile,
+                   _pow2_at_most)
 
 _FAMILIES = ("tt", "cp")
 
@@ -113,17 +114,23 @@ class CarryPlan:
     tb: int
     program: tuple
     vmem_bytes: int
+    pipeline: str = "serial"
 
     @property
     def order(self) -> int:
         return len(self.dims)
 
     @property
-    def grid(self) -> tuple[int, int]:
+    def grid(self) -> tuple[int, ...]:
         """Grid for the padded problem: k-tile OUTERMOST (the operator
         cores — indexed only by ik — stay VMEM-resident while the whole
-        batch of structured inputs streams through), batch tile inner."""
-        return (-(-self.k // self.tk), -(-self.b // self.tb))
+        batch of structured inputs streams through), batch tile inner.
+        Under pipeline='double' the batch axis moves inside the kernel
+        (double-buffered input-core tiles), so the launch grid is (nk,)."""
+        nk = -(-self.k // self.tk)
+        if self.pipeline == "double":
+            return (nk,)
+        return (nk, -(-self.b // self.tb))
 
     @property
     def carry_bytes(self) -> int:
@@ -145,7 +152,8 @@ def _core_elems(family: str, dims: tuple[int, ...], rank: int) -> int:
 
 def plan_carry_sweep(op_family: str, in_family: str, k: int, b: int,
                      dims: tuple[int, ...], r_op: int, r_in: int, *,
-                     budget: int = VMEM_BUDGET_BYTES) -> CarryPlan:
+                     budget: int = VMEM_BUDGET_BYTES,
+                     pipeline: str = "serial") -> CarryPlan:
     """Plan a carry-sweep kernel launch for static order N = len(dims).
 
     Accounts every per-instance VMEM buffer — the per-k-tile operator
@@ -154,9 +162,16 @@ def plan_carry_sweep(op_family: str, in_family: str, k: int, b: int,
     output block — and shrinks tiles until the footprint fits `budget`,
     batch tile first (TK=128 keeps k on the lane axis; the cores the k-tile
     pins in VMEM are what the whole schedule exists to keep resident).
+
+    `pipeline='double'` (the double-buffered kernel) accounts a SECOND
+    slot of the per-batch-tile input cores plus the full `(B, TK)` output
+    block the in-kernel batch sweep writes through.
     """
     dims = tuple(int(d) for d in dims)
     program = _carry_program(op_family, in_family, len(dims))  # validates
+    if pipeline not in PIPELINES:
+        raise ValueError(f"unknown pipeline {pipeline!r}; expected "
+                         f"{PIPELINES}")
     r_op, r_in = max(1, int(r_op)), max(1, int(r_in))
     tk = _lane_tile(k)
     tb = _pow2_at_most(max(1, b), 8)
@@ -170,7 +185,16 @@ def plan_carry_sweep(op_family: str, in_family: str, k: int, b: int,
     def footprint(tk: int, tb: int) -> int:
         carry = tb * tk * r_op * r_in
         temp = tb * tk * r_op * r_in * temp_d
-        return 4 * (tk * op_elems + tb * in_elems + carry + temp + tb * tk)
+        if pipeline == "double":
+            # second input-core slot + the full-batch output block the
+            # in-kernel sweep writes tile by tile
+            out = -(-b // tb) * tb * tk
+            extra = tb * in_elems
+        else:
+            out = tb * tk
+            extra = 0
+        return 4 * (tk * op_elems + tb * in_elems + carry + temp + out
+                    + extra)
 
     for axis in ("tb", "tk"):
         while footprint(tk, tb) > budget:
@@ -182,7 +206,8 @@ def plan_carry_sweep(op_family: str, in_family: str, k: int, b: int,
                 break
     return CarryPlan(op_family=op_family, in_family=in_family, k=k, b=b,
                      dims=dims, r_op=r_op, r_in=r_in, tk=tk, tb=tb,
-                     program=program, vmem_bytes=footprint(tk, tb))
+                     program=program, vmem_bytes=footprint(tk, tb),
+                     pipeline=pipeline)
 
 
 def struct_hbm_bytes(plan: CarryPlan) -> int:

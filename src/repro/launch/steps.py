@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -66,7 +66,14 @@ def build_train_step(model: Model, mesh, shape: ShapeSpec, *,
                      lr_fn: Callable | None = None,
                      remat: str = "nothing",
                      seq_parallel: bool = True,
-                     compressor=None) -> StepBundle:
+                     compressor=None,
+                     fused_update: bool = False) -> StepBundle:
+    """`fused_update=True` swaps the compress -> adamw.update chain of the
+    single-pod compressed branch for `adamw.update_sketched` — one fused
+    unsketch+EF+AdamW kernel launch per leaf, no dense g_hat in HBM.
+    Requires a compressor, no pod axis (the collective branch syncs
+    sketches across pods before the optimizer and keeps the unfused
+    update), and `AdamWConfig(clip_norm=None)`."""
     cfg = model.cfg
     pol = _policy(cfg)
     opt = opt or AdamWConfig(moment_dtype=pol["moment_dtype"])
@@ -82,6 +89,23 @@ def build_train_step(model: Model, mesh, shape: ShapeSpec, *,
     has_pod = "pod" in mesh.axis_names
     fsdp_axes = ("data",) if (compressing and has_pod) else None
     pod_axis = "pod" if (compressing and has_pod) else None
+    if fused_update:
+        if not compressing:
+            raise ValueError(
+                "fused_update=True needs a compressor: the fused kernel IS "
+                "the unsketch — without sketch compression there is "
+                "nothing to fuse; pass compressor= or drop fused_update")
+        if pod_axis is not None:
+            raise ValueError(
+                "fused_update=True is wired for the single-pod roundtrip "
+                "branch; the pod-collective branch syncs sketches across "
+                "pods before the optimizer and keeps the unfused update — "
+                "run without a 'pod' mesh axis or drop fused_update")
+        if opt.clip_norm is not None:
+            raise ValueError(
+                "fused_update=True fuses AdamW into the unsketch kernel, "
+                "which never materializes the dense gradient estimate to "
+                "clip; construct AdamWConfig(clip_norm=None)")
     if compressing:
         # explicit bucket-axis layout for the sketcher: data axes minus the
         # manual pod axis (replaces the legacy global _constrain_buckets
@@ -145,10 +169,27 @@ def build_train_step(model: Model, mesh, shape: ShapeSpec, *,
                 manual_axes=(pod_axis,) if pod_axis else ()):
             return jax.value_and_grad(loss_f)(params)
 
+    interpret = jax.default_backend() != "tpu"
+
     def train_step(state, batch):
         params = state["params"]
         metrics = {}
         new_state = dict(state)
+        if fused_update:
+            # single-pod compressed branch, fused: ONE unsketch+EF+AdamW
+            # kernel launch per leaf — no dense g_hat in HBM, no separate
+            # optimizer pass
+            loss, grads = loss_and_grads(params, batch)
+            lr = lr_fn(state["opt"]["count"])
+            new_p, new_opt, new_state["ef"], cmet = adamw.update_sketched(
+                params, grads, state["ef"], state["opt"], lr, opt,
+                compressor=compressor, interpret=interpret)
+            metrics.update(cmet)
+            metrics["loss"] = loss
+            metrics["lr"] = lr
+            new_state["params"] = new_p
+            new_state["opt"] = new_opt
+            return new_state, metrics
         if not compressing:
             loss, grads = loss_and_grads(params, batch)
         elif pod_axis is None:

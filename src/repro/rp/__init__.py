@@ -37,19 +37,23 @@ per-format method zoo (`project_tt` / `project_cp`) is deprecated in favor
 of `rp.project` and kept for one release.
 """
 from . import families as _families  # noqa: F401  (registers built-ins)
-from .dispatch import (DispatchStats, current_stats, dispatch_stats,
-                       force_pallas, kernel_call_count, project, reconstruct)
+from .dispatch import (DispatchStats, count_kernel_dispatch, current_stats,
+                       dispatch_stats, force_pallas, kernel_call_count,
+                       project, reconstruct)
 from .many import project_many
 from .protocol import FormatMismatchError, ProjectorSpec, RPOperator
 from .registry import (get_family, list_families, make_projector,
                        register_family)
-from .shard import (bucket_pspec, project_sharded, reconstruct_sharded,
+from .shard import (bucket_pspec, dequantize_psum, project_sharded,
+                    quantize_for_psum, reconstruct_sharded,
                     sketch_tree_sharded)
 
 __all__ = [
     "DispatchStats", "FormatMismatchError", "ProjectorSpec", "RPOperator",
-    "bucket_pspec", "current_stats", "dispatch_stats", "force_pallas",
-    "get_family", "kernel_call_count", "list_families", "make_projector",
-    "project", "project_many", "project_sharded", "reconstruct",
-    "reconstruct_sharded", "register_family", "sketch_tree_sharded",
+    "bucket_pspec", "count_kernel_dispatch", "current_stats",
+    "dispatch_stats", "force_pallas",
+    "dequantize_psum", "get_family", "kernel_call_count", "list_families",
+    "make_projector", "project", "project_many", "project_sharded",
+    "quantize_for_psum", "reconstruct", "reconstruct_sharded",
+    "register_family", "sketch_tree_sharded",
 ]

@@ -151,6 +151,17 @@ def _count_kernel() -> None:
     _STATS.get().kernel_calls += 1
 
 
+def count_kernel_dispatch() -> None:
+    """Record one Pallas kernel dispatch on the context-local stats.
+
+    The public hook for kernel wrappers that live OUTSIDE the
+    project/reconstruct dispatch matrix (e.g. the fused unsketch+EF+AdamW
+    launch in `optim.adamw.update_sketched`) so `kernel_call_count()`
+    stays the single source of truth for routing proofs.
+    """
+    _count_kernel()
+
+
 def _mxu_aligned(op) -> bool:
     dims = op.in_dims
     return (op.k % 128 == 0 and len(dims) >= 2
@@ -232,7 +243,16 @@ def _kernel_order_ok(n: int) -> bool:
     return kernel_order_supported(n)
 
 
-def _project_dense(op: RPOperator, x: jnp.ndarray, backend: str) -> jnp.ndarray:
+def _check_pipeline(pipeline: str) -> None:
+    # local import: repro.kernels is deliberately not a module-level dep
+    from repro.kernels import PIPELINES
+    if pipeline not in PIPELINES:
+        raise ValueError(f"unknown pipeline {pipeline!r}; expected "
+                         f"{PIPELINES}")
+
+
+def _project_dense(op: RPOperator, x: jnp.ndarray, backend: str,
+                   pipeline: str = "serial") -> jnp.ndarray:
     xt = _coerce_dense(op, x)
     is_tn = isinstance(op, (TTRP, CPRP))
     n = op.order if is_tn else 0
@@ -243,14 +263,16 @@ def _project_dense(op: RPOperator, x: jnp.ndarray, backend: str) -> jnp.ndarray:
         interpret = not _on_tpu()
         kern = kops.tt_project if isinstance(op, TTRP) else kops.cp_project
         if xt.ndim <= n + 1:  # single input or 1-D batch: native batch axis
-            return kern(op, xt, interpret=interpret)
+            return kern(op, xt, interpret=interpret, pipeline=pipeline)
         batch = xt.shape[:-n]
         flat = xt.reshape((-1,) + xt.shape[-n:])
-        return kern(op, flat, interpret=interpret).reshape(batch + (op.k,))
+        return kern(op, flat, interpret=interpret,
+                    pipeline=pipeline).reshape(batch + (op.k,))
     return op.project(xt)
 
 
-def _project_struct(op: RPOperator, x, backend: str) -> jnp.ndarray:
+def _project_struct(op: RPOperator, x, backend: str,
+                    pipeline: str = "serial") -> jnp.ndarray:
     """Structured (TT/CP-format) input(s), single or batched.
 
     TT/CP operators project in the compressed domain — the carry-sweep
@@ -264,19 +286,21 @@ def _project_struct(op: RPOperator, x, backend: str) -> jnp.ndarray:
         full = x.full()
         if isinstance(x, (BatchedTTTensor, BatchedCPTensor)):
             return _project_dense(op, full.reshape(full.shape[0], -1),
-                                  backend)
-        return _project_dense(op, full.reshape(-1), backend)
+                                  backend, pipeline)
+        return _project_dense(op, full.reshape(-1), backend, pipeline)
     _check_struct_dims(op, x)
     # local import: repro.kernels is deliberately not a module-level dep
     from repro.kernels import struct as kstruct
     supported = _kernel_order_ok(op.order)
     if _use_kernel(backend, supported=supported, aligned=_mxu_aligned(op)):
         _count_kernel()
-        return kstruct.struct_project(op, x, interpret=not _on_tpu())
+        return kstruct.struct_project(op, x, interpret=not _on_tpu(),
+                                      pipeline=pipeline)
     return kstruct.struct_project(op, x, use_kernel=False)
 
 
-def project(op: RPOperator, x, *, backend: str = "auto") -> jnp.ndarray:
+def project(op: RPOperator, x, *, backend: str = "auto",
+            pipeline: str = "serial") -> jnp.ndarray:
     """Project `x` with `op`, dispatching on the input's structure.
 
     x may be:
@@ -289,12 +313,20 @@ def project(op: RPOperator, x, *, backend: str = "auto") -> jnp.ndarray:
         structured inputs in ONE dispatch (the carry-sweep kernels put the
         batch on a native grid axis; there is no vmap on any route).
 
+    `pipeline='double'` selects the double-buffered DMA schedule on the
+    kernel routes (dense mode sweep and structured carry sweep) — same
+    results to fp32 tolerance, input/core streams overlapped with the MXU
+    contractions. Ignored on the einsum routes (there is nothing to
+    pipeline by hand); validated either way so a typo cannot silently run
+    serial.
+
     Returns the `(*batch, k)` sketch ((k,) for single structured inputs,
     (B, k) for batched containers).
     """
+    _check_pipeline(pipeline)
     if isinstance(x, STRUCT_TYPES):
-        return _project_struct(op, x, backend)
-    return _project_dense(op, x, backend)
+        return _project_struct(op, x, backend, pipeline)
+    return _project_dense(op, x, backend, pipeline)
 
 
 def reconstruct(op: RPOperator, y: jnp.ndarray, *, chunk: int | None = None,

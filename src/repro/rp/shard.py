@@ -141,6 +141,55 @@ def reconstruct_sharded(op, y, *, mesh, spec: P | None = None,
     return _sharded_apply(body, op, y, mesh=mesh, spec=spec, axes=axes)
 
 
+# ---------------------------------------------------------------------------
+# int8 wire quantization for collective sketch syncs
+# ---------------------------------------------------------------------------
+
+def quantize_for_psum(y: jnp.ndarray, axis_name: str, npod: int,
+                      *, per_row: bool = True):
+    """Scaled-int8 quantization safe to `lax.psum` over `axis_name`.
+
+    Emits `(q, s)` with `q` int8 and `s` a float32 scale such that
+    `q ~= round(y / s)` clipped to `[-qmax, qmax]` for
+    `qmax = 127 // npod` — the clip makes the integer all-reduce
+    OVERFLOW-PROOF: the sum of `npod` values each bounded by `qmax` is
+    bounded by `npod * qmax <= 127`, so the s8 accumulator can never wrap
+    regardless of reduction order. The scale is SHARED across the axis
+    (a `lax.pmax` of the local absmax), so every pod quantizes onto the
+    same grid and `dequantize_psum(psum(q), s, npod)` is exactly the mean
+    of the quantized values — bitwise identical on every pod.
+
+    `per_row=True` scales each leading-axis row by its own absmax (the
+    (n_buckets, k) sketch layout: one scale per bucket row costs 4 bytes
+    against the row's k payload bytes); `per_row=False` uses one scalar
+    scale for the whole array (dense local-mean leaves).
+
+    `jnp.round` (half-to-even) and the integer psum are both deterministic
+    and order-independent, so the dequantized result is bitwise
+    reproducible across runs and pod counts — the property the
+    determinism test in tests/test_compress.py pins.
+    """
+    if npod > 127:
+        raise ValueError(
+            f"int8 wire quantization supports at most 127 pods (qmax = "
+            f"127 // npod would be 0), got npod={npod}")
+    qmax = 127 // npod
+    if per_row:
+        a = jnp.max(jnp.abs(y), axis=tuple(range(1, y.ndim)), keepdims=True)
+    else:
+        a = jnp.max(jnp.abs(y))
+    a = jax.lax.pmax(a, axis_name)
+    s = jnp.maximum(a, jnp.finfo(jnp.float32).tiny) / qmax
+    q = jnp.clip(jnp.round(y / s), -qmax, qmax).astype(jnp.int8)
+    return q, s
+
+
+def dequantize_psum(q_sum: jnp.ndarray, s: jnp.ndarray,
+                    npod: int) -> jnp.ndarray:
+    """Mean-dequantize an int8 `lax.psum` result: q_sum * s / npod."""
+    return q_sum.astype(jnp.float32) * s / npod
+
+
 def sketch_tree_sharded(cfg, tree, key, *, mesh, spec: P | None = None,
                         sketcher=None) -> jnp.ndarray:
     """Whole-tree sketch with every leaf's bucket axis sharded over `mesh`.

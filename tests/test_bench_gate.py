@@ -9,7 +9,7 @@ from benchmarks.check_regression import check, main
 
 def _record():
     return {
-        "schema": "bench_rp/v6",
+        "schema": "bench_rp/v7",
         "sections": {
             "timing": [
                 {"name": "time/batched/tt/project/B=16", "us_per_call": 10.0,
@@ -29,6 +29,16 @@ def _record():
                 {"name": "ckpt/sketched/n=65536", "us_per_call": 40000.0,
                  "derived": {"bytes_dense": 524288, "bytes_sketched": 32784,
                              "ratio": 15.99}},
+                {"name": "perf/pipeline/sweep/tt", "us_per_call": 12000.0,
+                 "derived": {"launches_project": 1, "speedup": 2.2,
+                             "hbm_bytes": 2412544}},
+                {"name": "perf/fused/update/tt", "us_per_call": 4000.0,
+                 "derived": {"launches_project": 1, "speedup": 0.3,
+                             "hbm_ratio": 0.82, "dense_kernels_fused": 0,
+                             "dense_kernels_unfused": 4}},
+                {"name": "perf/wire/sync=sketch-mean", "us_per_call": 1000.0,
+                 "derived": {"launches_project": 6, "wire_ratio": 3.88,
+                             "hlo_bytes_int8": 396}},
             ],
             "smoke": [
                 {"name": "smoke/tt", "us_per_call": 1.0, "derived": {"k": 64}},
@@ -49,7 +59,7 @@ def test_wall_clock_noise_is_not_gated():
 
 def test_schema_drift_fails():
     new = _record()
-    new["schema"] = "bench_rp/v7"
+    new["schema"] = "bench_rp/v8"
     assert any("schema drift" in e for e in check(new, _record()))
 
 
@@ -57,9 +67,11 @@ def test_required_row_prefixes_cover_struct_subsystem():
     """A timing record that stops emitting a whole gated row family — the
     order-N frontier, the compressed-domain struct/ rows, the
     sharded-engine shard/ rows, the serving-engine serve/ rows, or the
-    checkpointing ckpt/ rows — fails even if the baseline ALSO lost them
+    checkpointing ckpt/ rows, or the kernel perf-frontier perf/ rows —
+    fails even if the baseline ALSO lost them
     (row-by-row diffing alone can't see that)."""
-    for prefix in ("struct/", "time/order/", "shard/", "serve/", "ckpt/"):
+    for prefix in ("struct/", "time/order/", "shard/", "serve/", "ckpt/",
+                   "perf/"):
         new = _record()
         new["sections"]["timing"] = [
             r for r in new["sections"]["timing"]
@@ -68,7 +80,7 @@ def test_required_row_prefixes_cover_struct_subsystem():
         assert any("required prefix" in e and prefix in e
                    for e in check(new, base))
     # records without a timing section (e.g. --only smoke) are not gated
-    smoke_only = {"schema": "bench_rp/v6",
+    smoke_only = {"schema": "bench_rp/v7",
                   "sections": {"smoke": _record()["sections"]["smoke"]}}
     assert not any("required prefix" in e
                    for e in check(smoke_only, copy.deepcopy(smoke_only)))
@@ -108,6 +120,63 @@ def test_launch_count_regression_fails_only_past_2x():
     worse["sections"]["timing"][0]["derived"]["launches_batched"] = 3
     errors = check(worse, base)
     assert any("launches_batched regressed 1 -> 3" in e for e in errors)
+
+
+def test_perf_speedup_band():
+    """perf/* `speedup` gates RELATIVE to baseline: a new value below
+    0.5x baseline fails, anything above passes (absolute wall-clock is
+    machine-dependent; the ratio of two timings from the same run is not).
+    """
+    base = _record()
+    ok = copy.deepcopy(base)        # 0.6x baseline: inside the band
+    ok["sections"]["timing"][6]["derived"]["speedup"] = 0.6 * 2.2
+    assert check(ok, base) == []
+    collapsed = copy.deepcopy(base)
+    collapsed["sections"]["timing"][6]["derived"]["speedup"] = 0.4 * 2.2
+    assert any("speedup regressed" in e for e in check(collapsed, base))
+
+
+def test_perf_wire_ratio_band():
+    base = _record()
+    worse = copy.deepcopy(base)     # int8 path silently widening the wire
+    worse["sections"]["timing"][8]["derived"]["wire_ratio"] = 1.0
+    assert any("wire_ratio regressed" in e for e in check(worse, base))
+
+
+def test_perf_hbm_ratio_gates_upward():
+    """hbm_ratio (fused/unfused bytes) is better LOW: growth past
+    baseline/0.8 means the fused kernel started re-streaming dense
+    traffic it used to keep in VMEM."""
+    base = _record()
+    worse = copy.deepcopy(base)
+    worse["sections"]["timing"][7]["derived"]["hbm_ratio"] = 1.1
+    assert any("hbm_ratio regressed" in e for e in check(worse, base))
+    ok = copy.deepcopy(base)        # small drift inside the band passes
+    ok["sections"]["timing"][7]["derived"]["hbm_ratio"] = 0.9
+    assert check(ok, base) == []
+
+
+def test_vanished_perf_metric_fails():
+    new = _record()
+    del new["sections"]["timing"][6]["derived"]["speedup"]
+    assert any("speedup" in e and "missing" in e for e in check(new, _record()))
+
+
+def test_perf_bands_do_not_gate_non_perf_rows():
+    """time/batched/* rows carry an 'x'-suffixed string speedup; even a
+    numeric one outside perf/ must not be banded."""
+    base = _record()
+    base["sections"]["timing"][0]["derived"]["speedup"] = 2.0
+    new = copy.deepcopy(base)
+    new["sections"]["timing"][0]["derived"]["speedup"] = 0.1
+    assert check(new, base) == []
+
+
+def test_run_only_unknown_section_raises():
+    from benchmarks.run import main as run_main
+    with pytest.raises(ValueError, match=r"unknown --only section\(s\) "
+                                         r"\['nope'\].*accepted"):
+        run_main(["--only", "timing,nope"])
 
 
 def test_main_exit_codes(tmp_path, capsys):
