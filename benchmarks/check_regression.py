@@ -18,10 +18,14 @@ launches_reconstruct) grew to more than 2x the baseline, i.e. a batched
 path quietly decomposing back into per-bucket or vmap launches — and on a
 PERF-BAND REGRESSION: the `perf/*` rows' derived ratios (`speedup`,
 `wire_ratio`, `hbm_ratio`) drifting past their relative band vs baseline
-(see PERF_BANDS). Absolute wall-clock deltas are deliberately NOT gated —
-CI machines are too noisy — only structure, launch counts, and
-relative-banded ratios of two timings taken on the SAME machine in the
-same run, which cancel the machine out.
+(see PERF_BANDS) — and on an OBS-OVERHEAD REGRESSION: the `obs/*` rows'
+`overhead_frac` (disabled-telemetry cost / reference dispatch) exceeding
+the ABSOLUTE `OBS_OVERHEAD_CAP` budget — a ratio of two timings from the
+same process, so unlike wall-clock it is machine-independent and an
+absolute cap is meaningful. Absolute wall-clock deltas are deliberately
+NOT gated — CI machines are too noisy — only structure, launch counts,
+and (relative-banded or capped) ratios of timings taken on the SAME
+machine in the same run, which cancel the machine out.
 """
 from __future__ import annotations
 
@@ -36,7 +40,7 @@ RECORD_KEYS = {"name", "us_per_call", "derived"}
 # timing section always run those sections too
 # (--only smoke,timing,serve,ckpt,rooflines).
 REQUIRED_ROW_PREFIXES = ("time/order/", "struct/", "shard/", "serve/",
-                         "ckpt/", "perf/")
+                         "ckpt/", "perf/", "obs/")
 # Relative bands on the perf/* rows' derived metrics (new vs baseline,
 # numeric plain floats — never gated absolutely, CI machines differ):
 #   speedup    — wall-clock ratio (serial/pipelined, unfused/fused). The
@@ -48,6 +52,9 @@ REQUIRED_ROW_PREFIXES = ("time/order/", "struct/", "shard/", "serve/",
 #                this one gates new > baseline / band).
 PERF_BANDS = {"speedup": 0.5, "wire_ratio": 0.8}
 PERF_BANDS_UPPER = {"hbm_ratio": 0.8}
+# Absolute cap on obs/* rows' overhead_frac: the telemetry layer's disabled
+# fast path may cost at most 5% of the reference dispatch it is wired into.
+OBS_OVERHEAD_CAP = 0.05
 
 
 def _rows_by_name(record: dict) -> dict:
@@ -94,6 +101,18 @@ def check(new: dict, base: dict) -> list[str]:
                               f"record ({n!r})")
             elif b > 0 and n > 2 * b:
                 errors.append(f"{name}: {key} regressed {b} -> {n} (>2x)")
+        if name.startswith("obs/"):
+            frac = nrow.get("derived", {}).get("overhead_frac")
+            has_base = isinstance(
+                brow.get("derived", {}).get("overhead_frac"), (int, float))
+            if has_base and not isinstance(frac, (int, float)):
+                errors.append(f"{name}: overhead_frac present in baseline "
+                              f"but missing/non-numeric in new record "
+                              f"({frac!r})")
+            elif isinstance(frac, (int, float)) and frac > OBS_OVERHEAD_CAP:
+                errors.append(f"{name}: disabled-telemetry overhead_frac "
+                              f"{frac} exceeds the absolute "
+                              f"{OBS_OVERHEAD_CAP} budget")
         if not name.startswith("perf/"):
             continue
         for key, band in list(PERF_BANDS.items()) + list(

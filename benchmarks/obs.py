@@ -1,0 +1,117 @@
+"""Observability overhead benchmarks: the telemetry layer's cost budget.
+
+Row families:
+
+  obs/overhead — the DISABLED fast path's per-dispatch cost against the
+      perf/* reference sweep (tt, dims=(256,16,16), k=128, B=8 — the same
+      shape `perf/pipeline/sweep/tt` times). Every wired call site pays at
+      most one `obs.span(...)` no-op plus a couple of instrument lookups
+      per dispatch; the row measures exactly that bundle per call
+      (`disabled_ns`), the reference dispatch (`ref_us`), and their ratio
+      `overhead_frac` — a PLAIN float the regression gate caps ABSOLUTELY
+      at <= 0.05 (unlike wall-clock, a ratio of two timings from the same
+      process cancels the machine out; the bench also asserts it, so a
+      bloated fast path fails even without a baseline to diff).
+  obs/export — the ENABLED path: per-span recording cost (`enabled_ns`),
+      plus one Chrome-trace export + metrics JSONL write of an
+      `n_events`-span session (`trace_bytes` / `jsonl_rows` prove the
+      artifacts are real, not gated).
+"""
+import json
+import pathlib
+import tempfile
+
+import jax
+
+from repro import obs, rp
+
+from ._util import csv_row, time_call
+
+# One "dispatch worth" of disabled-mode obs work is bundled per loop
+# iteration below; the loop amortizes timer resolution.
+_LOOP = 2000
+
+
+def _disabled_bundle_ns() -> float:
+    """ns per (span + counter + histogram) bundle with telemetry OFF."""
+    assert not obs.enabled(), "overhead row must run with obs disabled"
+
+    def loop():
+        for _ in range(_LOOP):
+            with obs.span("obs/bench", family="tt", structure="dense"):
+                pass
+            obs.counter("obs/bench_c").inc(0)
+            obs.histogram("obs/bench_h").observe(1.0)
+
+    return time_call(loop, warmup=1, repeat=5) * 1e3 / _LOOP
+
+
+def _enabled_span_ns(tracer) -> float:
+    """ns per recorded span with telemetry ON (the opt-in price)."""
+    def loop():
+        for _ in range(_LOOP):
+            with obs.span("obs/bench", family="tt", structure="dense"):
+                pass
+
+    ns = time_call(loop, warmup=1, repeat=5) * 1e3 / _LOOP
+    tracer.clear()          # drop the timing loop's spans from the session
+    return ns
+
+
+def _overhead_row(rows):
+    disabled_ns = _disabled_bundle_ns()
+    # the perf/* reference sweep: one eager pallas-routed dispatch — eager
+    # on purpose, that is where the per-call span cost lives (under jit the
+    # span only runs at trace time)
+    key = jax.random.PRNGKey(31)
+    dims, k, rank, b = (256, 16, 16), 128, 2, 8
+    op = rp.make_projector(
+        rp.ProjectorSpec(family="tt", k=k, dims=dims, rank=rank),
+        jax.random.fold_in(key, 1))
+    xb = jax.random.normal(jax.random.fold_in(key, 0), (b,) + dims)
+    ref = jax.jit(lambda a: rp.project(op, a, backend="pallas"))
+    ref_us = time_call(ref, xb, warmup=2, repeat=5)
+    frac = disabled_ns / 1e3 / ref_us
+    # the acceptance criterion, asserted where the row is made: wiring
+    # telemetry into every hot path must cost <= 5% when nobody asked
+    assert frac <= 0.05, (
+        f"disabled obs overhead {frac:.4f} of the reference dispatch "
+        f"({disabled_ns:.0f}ns vs {ref_us:.0f}us) exceeds the 5% budget")
+    rows.append(csv_row(
+        "obs/overhead", disabled_ns / 1e3,
+        f"overhead_frac={frac:.6f};disabled_ns={disabled_ns:.0f};"
+        f"ref_us={ref_us:.1f};budget=0.05"))
+
+
+def _export_row(rows, n_events=512):
+    ctx = obs.enable()
+    try:
+        enabled_ns = _enabled_span_ns(ctx.tracer)
+        for i in range(n_events):
+            with obs.span("obs/bench", i=i):
+                pass
+            obs.histogram("obs/bench_h").observe(float(i))
+        with tempfile.TemporaryDirectory() as d:
+            tp = pathlib.Path(d) / "trace.json"
+            mp = pathlib.Path(d) / "metrics.jsonl"
+            us = time_call(lambda: ctx.tracer.export(tp),
+                           warmup=1, repeat=3)
+            ctx.metrics.write_jsonl(mp)
+            trace_bytes = tp.stat().st_size
+            jsonl_rows = len(obs.read_jsonl(mp))
+            doc = json.loads(tp.read_text())
+            assert len(doc["traceEvents"]) == n_events, "export dropped spans"
+    finally:
+        obs.disable()
+    rows.append(csv_row(
+        "obs/export", us,
+        f"n_events={n_events};enabled_ns={enabled_ns:.0f};"
+        f"trace_bytes={trace_bytes};jsonl_rows={jsonl_rows}"))
+
+
+def run(fast=True):
+    del fast
+    rows = []
+    _overhead_row(rows)
+    _export_row(rows)
+    return rows

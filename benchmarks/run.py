@@ -57,18 +57,18 @@ def main(argv=None) -> None:
                     help="one tiny config per registered rp family (CI)")
     ap.add_argument("--only", default=None,
                     help="comma list: distortion,timing,pairwise,memory,"
-                         "variance,gradcomp,rooflines,smoke,serve,ckpt")
+                         "variance,gradcomp,rooflines,smoke,serve,ckpt,obs")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write a structured perf record (BENCH_rp.json)")
     args = ap.parse_args(argv)
     fast = not args.full
-    from . import (ckpt, distortion, gradcomp, memory, pairwise, rooflines,
-                   serve, smoke, timing, variance)
+    from . import (ckpt, distortion, gradcomp, memory, obs, pairwise,
+                   rooflines, serve, smoke, timing, variance)
     mods = {
         "memory": memory, "variance": variance, "distortion": distortion,
         "timing": timing, "pairwise": pairwise, "gradcomp": gradcomp,
         "rooflines": rooflines, "smoke": smoke, "serve": serve,
-        "ckpt": ckpt,
+        "ckpt": ckpt, "obs": obs,
     }
     if args.smoke:
         wanted = ["smoke"]
@@ -89,6 +89,10 @@ def main(argv=None) -> None:
     if args.json:
         import jax
         record = {
+            # v8: observability — the obs/* section (the telemetry layer's
+            # disabled-fast-path cost vs the perf reference dispatch as a
+            # numeric `overhead_frac`, capped ABSOLUTELY at 0.05 by
+            # check_regression, plus the enabled recording/export costs).
             # v7: kernel perf frontier — timing gains the perf/* rows
             # (double-buffered pipelining vs serial with a numeric
             # `speedup`, fused unsketch+EF+AdamW vs the unfused chain with
@@ -107,7 +111,7 @@ def main(argv=None) -> None:
             # launch counts so the 1- and 8-device CI jobs diff against one
             # baseline). v3 added the struct/{tt,cp}x{tt,cp}/N={3,4}
             # carry-sweep rows; v2 the time/order/{tt,cp}/N={2..5} frontier.
-            "schema": "bench_rp/v7",
+            "schema": "bench_rp/v8",
             "unix_time": time.time(),
             "backend": jax.default_backend(),
             "fast": fast,

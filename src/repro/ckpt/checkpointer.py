@@ -44,6 +44,8 @@ from typing import Any
 import jax
 import numpy as np
 
+from repro import obs
+
 
 class CheckpointError(ValueError):
     """Restore-path misuse or an unusable checkpoint: typed (survives
@@ -108,39 +110,44 @@ def save(directory: str | os.PathLike, step: int, tree: Any, *,
     sweep_tmp(directory)
     final = directory / f"step_{step:010d}"
     tmp = pathlib.Path(tempfile.mkdtemp(dir=directory, prefix=".tmp_"))
-    try:
-        leaves, treedef = _flatten(tree)
-        paths = []
-        for i, leaf in enumerate(leaves):
-            # NOT ascontiguousarray: it promotes 0-d scalars to (1,); the
-            # crc below uses tobytes(), which canonicalizes order anyway
-            arr = np.asarray(jax.device_get(leaf))
-            retry_with_backoff(
-                lambda a=arr, p=tmp / f"arr_{i}.npy": io.write_array(p, a),
-                retries=retries, base_delay=base_delay)
-            paths.append({"file": f"arr_{i}.npy", "dtype": str(arr.dtype),
-                          "shape": list(arr.shape),
-                          "crc32": zlib.crc32(arr.tobytes()) & 0xFFFFFFFF})
-        manifest = {
-            "step": step,
-            "treedef": jax.tree_util.tree_structure(tree).serialize_using_proto().hex()
-            if hasattr(treedef, "serialize_using_proto") else None,
-            "n_arrays": len(leaves),
-            "arrays": paths,
-            "time": time.time(),
-            "extra": extra or {},
-        }
-        manifest["integrity"] = _manifest_digest(manifest)
-        (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
-        if final.exists():
-            shutil.rmtree(final)
-        retry_with_backoff(lambda: io.rename(tmp, final),
-                           retries=retries, base_delay=base_delay)
-        io.post_commit(final)
-    except BaseException:
-        shutil.rmtree(tmp, ignore_errors=True)
-        raise
-    _gc(directory, keep)
+    # the span runs on whatever thread calls save() — for AsyncCheckpointer
+    # that is the writer thread, which Perfetto renders as its own track of
+    # the shared timeline (the overlap with train.step spans is the point)
+    with obs.span("ckpt.save", step=step) as sp:
+        try:
+            leaves, treedef = _flatten(tree)
+            sp.set(n_arrays=len(leaves))
+            paths = []
+            for i, leaf in enumerate(leaves):
+                # NOT ascontiguousarray: it promotes 0-d scalars to (1,);
+                # the crc below uses tobytes(), which canonicalizes order
+                arr = np.asarray(jax.device_get(leaf))
+                retry_with_backoff(
+                    lambda a=arr, p=tmp / f"arr_{i}.npy": io.write_array(p, a),
+                    retries=retries, base_delay=base_delay)
+                paths.append({"file": f"arr_{i}.npy", "dtype": str(arr.dtype),
+                              "shape": list(arr.shape),
+                              "crc32": zlib.crc32(arr.tobytes()) & 0xFFFFFFFF})
+            manifest = {
+                "step": step,
+                "treedef": jax.tree_util.tree_structure(tree).serialize_using_proto().hex()
+                if hasattr(treedef, "serialize_using_proto") else None,
+                "n_arrays": len(leaves),
+                "arrays": paths,
+                "time": time.time(),
+                "extra": extra or {},
+            }
+            manifest["integrity"] = _manifest_digest(manifest)
+            (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+            if final.exists():
+                shutil.rmtree(final)
+            retry_with_backoff(lambda: io.rename(tmp, final),
+                               retries=retries, base_delay=base_delay)
+            io.post_commit(final)
+        except BaseException:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+        _gc(directory, keep)
     return final
 
 
@@ -176,6 +183,11 @@ def verify(path: str | os.PathLike) -> dict:
     """
     path = pathlib.Path(path)
     mpath = path / "manifest.json"
+    with obs.span("ckpt.verify", path=str(path)):
+        return _verify_body(path, mpath)
+
+
+def _verify_body(path: pathlib.Path, mpath: pathlib.Path) -> dict:
     try:
         manifest = json.loads(mpath.read_text())
     except (OSError, ValueError) as e:
@@ -246,24 +258,35 @@ def restore(directory: str | os.PathLike, example_tree: Any,
         step = latest_step(directory)
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {directory}")
-    if verify_integrity:
-        candidates = [step] + [s for s in reversed(available_steps(directory))
-                               if s < step]
-        last_err: CorruptionError | None = None
-        for cand in candidates:
-            try:
-                verify(directory / f"step_{cand:010d}")
-                if cand != step:
-                    step = cand
-                break
-            except CorruptionError as e:
-                last_err = e
-                if not fallback:
-                    raise
-        else:
-            raise CorruptionError(
-                f"no verifiable checkpoint under {directory} "
-                f"(newest failure: {last_err})")
+    with obs.span("ckpt.restore", step=step) as sp:
+        if verify_integrity:
+            candidates = [step] + [s for s in
+                                   reversed(available_steps(directory))
+                                   if s < step]
+            last_err: CorruptionError | None = None
+            for cand in candidates:
+                try:
+                    verify(directory / f"step_{cand:010d}")
+                    if cand != step:
+                        # the fallback is a span attribute, not an event:
+                        # train_loop owns the (exactly-one) ckpt.fallback
+                        # metrics event so counts stay unambiguous
+                        sp.set(fallback_from=step, step=cand)
+                        step = cand
+                    break
+                except CorruptionError as e:
+                    last_err = e
+                    if not fallback:
+                        raise
+            else:
+                raise CorruptionError(
+                    f"no verifiable checkpoint under {directory} "
+                    f"(newest failure: {last_err})")
+        return _restore_body(directory, example_tree, step, shardings)
+
+
+def _restore_body(directory: pathlib.Path, example_tree: Any, step: int,
+                  shardings: Any) -> tuple[Any, int]:
     path = directory / f"step_{step:010d}"
     manifest = json.loads((path / "manifest.json").read_text())
     leaves, treedef = _flatten(example_tree)

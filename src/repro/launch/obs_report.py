@@ -1,0 +1,122 @@
+"""Render a markdown report from an `repro.obs` capture.
+
+Takes the two artifacts a capture writes — the Chrome/Perfetto trace JSON
+(`--trace`) and the metrics JSONL (`--metrics`) — and prints the markdown
+tables a PR or dashboard wants: span durations aggregated by name, queue
+histogram percentiles, counters/gauges, and the event log (stragglers,
+resume/fallback, distortion alerts). Either input may be omitted.
+
+Usage:
+PYTHONPATH=src python -m repro.launch.obs_report \
+    --trace trace.json --metrics metrics.jsonl
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+
+def load_trace(path) -> list[dict]:
+    """The `traceEvents` list of a Chrome trace file, schema-checked."""
+    doc = json.loads(pathlib.Path(path).read_text())
+    events = doc.get("traceEvents") if isinstance(doc, dict) else None
+    if not isinstance(events, list):
+        raise ValueError(
+            f"{path} is not a Chrome trace: expected a JSON object with a "
+            "'traceEvents' list (did you pass the metrics JSONL here?)")
+    for e in events:
+        if not isinstance(e, dict) or "ph" not in e or "name" not in e:
+            raise ValueError(
+                f"{path}: malformed trace event {e!r} (every event needs "
+                "'name' and 'ph')")
+    return events
+
+
+def span_table(events: list[dict]) -> str:
+    """Durations of complete ("ph": "X") spans aggregated by name."""
+    agg: dict[str, list[float]] = {}
+    for e in events:
+        if e.get("ph") == "X":
+            agg.setdefault(e["name"], []).append(float(e.get("dur", 0.0)))
+    out = ["| span | count | total ms | mean us | max us |",
+           "|---|---|---|---|---|"]
+    for name in sorted(agg):
+        durs = agg[name]
+        out.append(f"| {name} | {len(durs)} | {sum(durs) / 1e3:.2f} "
+                   f"| {sum(durs) / len(durs):.0f} | {max(durs):.0f} |")
+    return "\n".join(out)
+
+
+def instant_table(events: list[dict]) -> str:
+    """Instant markers ("ph": "i") grouped by name."""
+    agg: dict[str, int] = {}
+    for e in events:
+        if e.get("ph") == "i":
+            agg[e["name"]] = agg.get(e["name"], 0) + 1
+    out = ["| instant | count |", "|---|---|"]
+    for name in sorted(agg):
+        out.append(f"| {name} | {agg[name]} |")
+    return "\n".join(out)
+
+
+def metrics_tables(lines: list[dict]) -> str:
+    """Counters/gauges, histogram percentiles and events from the JSONL."""
+    counters = [l for l in lines if l.get("type") in ("counter", "gauge")]
+    hists = [l for l in lines if l.get("type") == "histogram"]
+    events = [l for l in lines if l.get("type") == "event"]
+    blocks = []
+    if counters:
+        rows = ["| instrument | kind | value |", "|---|---|---|"]
+        for l in sorted(counters, key=lambda l: l["name"]):
+            rows.append(f"| {l['name']} | {l['type']} | {l['value']:g} |")
+        blocks.append("\n".join(rows))
+    if hists:
+        rows = ["| histogram | n | mean | p50 | p99 |", "|---|---|---|---|---|"]
+        for l in sorted(hists, key=lambda l: l["name"]):
+            mean = l["sum"] / l["count"] if l["count"] else 0.0
+            rows.append(f"| {l['name']} | {l['count']} | {mean:.0f} "
+                        f"| {l['p50']:.0f} | {l['p99']:.0f} |")
+        blocks.append("\n".join(rows))
+    if events:
+        rows = ["| event | details |", "|---|---|"]
+        for l in events:
+            detail = ", ".join(f"{k}={v}" for k, v in sorted(l.items())
+                               if k not in ("type", "name", "time"))
+            rows.append(f"| {l['name']} | {detail} |")
+        blocks.append("\n".join(rows))
+    return "\n\n".join(blocks) if blocks else "(no metrics recorded)"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trace", default=None,
+                    help="Chrome trace JSON from obs.Tracer.export / "
+                         "--trace-out")
+    ap.add_argument("--metrics", default=None,
+                    help="metrics JSONL from obs.MetricsRegistry.write_jsonl"
+                         " / --metrics-out")
+    args = ap.parse_args(argv)
+    if not args.trace and not args.metrics:
+        ap.error("pass --trace and/or --metrics")
+    if args.trace:
+        events = load_trace(args.trace)
+        print(f"### Spans ({args.trace})\n")
+        print(span_table(events))
+        if any(e.get("ph") == "i" for e in events):
+            print("\n### Trace instants\n")
+            print(instant_table(events))
+    if args.metrics:
+        from repro.obs import read_jsonl
+        lines = read_jsonl(args.metrics)
+        print(f"\n### Metrics ({args.metrics})\n")
+        print(metrics_tables(lines))
+        alerts = [l for l in lines if l.get("name") == "distortion.alert"]
+        if alerts:
+            print(f"\nWARNING: {len(alerts)} distortion alert(s) — sketch "
+                  "width k is undersized for the configured (eps, delta).")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -9,12 +9,19 @@ the freshly ingested sketches, error bars included.
 CPU example:
 PYTHONPATH=src python -m repro.launch.serve_rp --family tt --k 128 \
     --dims 8 16 16 --rank 2 --requests 64 --max-batch 8 --flush-us 1000
+
+With `--trace-out trace.json --metrics-out metrics.jsonl` the replay runs
+under an enabled `repro.obs` session: the trace opens in ui.perfetto.dev
+(per-tick serve spans over the rp dispatch spans they contain), the JSONL
+carries the queue-delay histogram and request counters, and
+`python -m repro.launch.obs_report` renders both as markdown.
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
 
-from repro import rp
+from repro import obs, rp
 from repro.serve import (ServeConfig, SketchServer, SketchStore, replay,
                          synth_trace)
 
@@ -47,6 +54,16 @@ def main(argv=None) -> int:
     ap.add_argument("--save-manifest", default=None, metavar="PATH",
                     help="after replay, write the cache registry (spec "
                          "dicts + seeds, no operator bytes) for --prewarm")
+    ap.add_argument("--trace-out", default=None, metavar="JSON",
+                    help="record the replay under repro.obs and export the "
+                         "Chrome/Perfetto trace here")
+    ap.add_argument("--metrics-out", default=None, metavar="JSONL",
+                    help="write the obs metrics snapshot (counters, queue-"
+                         "delay histogram, events) here as JSONL")
+    ap.add_argument("--distortion", type=float, nargs=2, default=None,
+                    metavar=("EPS", "DELTA"),
+                    help="stream dense-request distortion through a "
+                         "DistortionMonitor at this (eps, delta) target")
     args = ap.parse_args(argv)
 
     spec = rp.ProjectorSpec(family=args.family, k=args.k,
@@ -63,7 +80,14 @@ def main(argv=None) -> int:
         n = server.prewarm(args.prewarm)
         print(f"[serve_rp] prewarmed {n} operators from {args.prewarm}")
 
-    with rp.dispatch_stats() as st:
+    mon = (obs.DistortionMonitor(eps=args.distortion[0],
+                                 delta=args.distortion[1])
+           if args.distortion else None)
+    cap = (obs.capture(trace_path=args.trace_out,
+                       metrics_path=args.metrics_out, distortion=mon)
+           if (args.trace_out or args.metrics_out or mon)
+           else contextlib.nullcontext())
+    with cap, rp.dispatch_stats() as st:
         report = replay(server, trace)
     # kernel_calls counts PALLAS-routed dispatches; on the XLA route (the
     # CPU default under backend=auto) it stays 0 — don't claim otherwise.
@@ -85,6 +109,17 @@ def main(argv=None) -> int:
         n = server.save_manifest(args.save_manifest)
         print(f"[serve_rp] wrote {n}-entry cache manifest to "
               f"{args.save_manifest}")
+    if args.trace_out:
+        print(f"[serve_rp] wrote Perfetto trace to {args.trace_out} "
+              "(open in ui.perfetto.dev)")
+    if args.metrics_out:
+        print(f"[serve_rp] wrote obs metrics to {args.metrics_out}")
+    if mon is not None:
+        for row in mon.summary():
+            print(f"[serve_rp] distortion {row['family']}/N={row['order']}"
+                  f"/k={row['k']}: mean {row['mean_distortion']:.3f}, "
+                  f"out-rate {row['out_rate']:.3f} @ eps={row['eps']} "
+                  f"(alerted={row['alerted']})")
 
     # Similarity demo: nearest stored neighbours of the first sketch (its
     # own id comes back first, distance ~0 — a useful sanity check).

@@ -142,7 +142,9 @@ def update_sketched(params, grads, ef_state, opt_state, lr,
     off = 0
     for pe, w, m, v, nb, size, shape in zip(
             flat_pe, flat_w, flat_m, flat_v, sk._nb, sk._sizes, sk._shapes):
-        rp.count_kernel_dispatch()
+        rp.count_kernel_dispatch(family=compressor.cfg.family,
+                                 structure="fused-update",
+                                 order=len(compressor.cfg.dims))
         r_b, w_b, m_b, v_b = fused_update_buckets(
             op, y[off:off + nb],
             sk._leaf_to_buckets(pe, nb), sk._leaf_to_buckets(w, nb),

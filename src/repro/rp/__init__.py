@@ -38,8 +38,8 @@ of `rp.project` and kept for one release.
 """
 from . import families as _families  # noqa: F401  (registers built-ins)
 from .dispatch import (DispatchStats, count_kernel_dispatch, current_stats,
-                       dispatch_stats, force_pallas, kernel_call_count,
-                       project, reconstruct)
+                       dispatch_breakdown, dispatch_stats, force_pallas,
+                       kernel_call_count, project, reconstruct)
 from .many import project_many
 from .protocol import FormatMismatchError, ProjectorSpec, RPOperator
 from .registry import (get_family, list_families, make_projector,
@@ -51,7 +51,7 @@ from .shard import (bucket_pspec, dequantize_psum, project_sharded,
 __all__ = [
     "DispatchStats", "FormatMismatchError", "ProjectorSpec", "RPOperator",
     "bucket_pspec", "count_kernel_dispatch", "current_stats",
-    "dispatch_stats", "force_pallas",
+    "dispatch_breakdown", "dispatch_stats", "force_pallas",
     "dequantize_psum", "get_family", "kernel_call_count", "list_families",
     "make_projector", "project", "project_many", "project_sharded",
     "quantize_for_psum", "reconstruct", "reconstruct_sharded",

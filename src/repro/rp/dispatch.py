@@ -42,12 +42,18 @@ O(k N d R R~ (R + R~)), never densifying). Routing:
              active (which tests use to prove the routing).
 
 Instrumentation is CONTEXT-LOCAL: a `DispatchStats` object held in a
-`contextvars.ContextVar` carries the kernel-dispatch counter and the
+`contextvars.ContextVar` carries the kernel-dispatch counter, the
+per-(family, structure, route, order) launch `breakdown`, and the
 force-pallas depth. `kernel_call_count()` reads the current context's
 counter (counted at trace time — cached jit executions don't re-dispatch);
 `dispatch_stats()` installs a fresh, isolated object for a dynamic scope so
 parallel tests and nested contexts can't corrupt each other's counts, and
 `force_pallas()` is depth-counted so nesting composes.
+
+Every dispatch additionally opens a `repro.obs` span (`rp.project` /
+`rp.reconstruct`, tagged family/structure/order/backend/pipeline with the
+RESOLVED route) — a shared no-op when telemetry is disabled, so the hot
+path pays one module-global read (gated by the obs/overhead bench row).
 """
 from __future__ import annotations
 
@@ -59,9 +65,11 @@ import warnings
 import jax
 import jax.numpy as jnp
 
+from repro import obs
+from repro.core.baselines import GaussianRP, VerySparseRP
 from repro.core.cp_rp import CPRP
 from repro.core.formats import (STRUCT_TYPES, BatchedCPTensor,
-                                BatchedTTTensor, _prod)
+                                BatchedTTTensor, TTTensor, _prod)
 from repro.core.tt_rp import TTRP
 
 from .protocol import FormatMismatchError, RPOperator
@@ -77,14 +85,36 @@ class DispatchStats:
                    to a Pallas kernel in this context.
     force_depth  : nesting depth of active `force_pallas()` scopes; > 0
                    lets 'auto' pick the interpret-mode kernel off-TPU.
+    breakdown    : per-(family, structure, route, order) dispatch counts,
+                   covering EVERY dispatch — both routes, so the xla
+                   fallbacks are visible too. `route` is the RESOLVED
+                   backend ('pallas' | 'xla'), `structure` the input kind
+                   ('dense' | 'tt' | 'cp' | 'sketch' | 'extern'). The
+                   pre-existing fields stay bit-compatible: kernel_calls
+                   always equals the sum of the route=='pallas' entries.
     """
 
     kernel_calls: int = 0
     force_depth: int = 0
+    breakdown: dict = dataclasses.field(default_factory=dict)
 
     @property
     def force_pallas(self) -> bool:
         return self.force_depth > 0
+
+    def record(self, family: str, structure: str, route: str,
+               order: int) -> None:
+        """Count one dispatch; pallas routes also bump `kernel_calls`."""
+        key = (family, structure, route, order)
+        self.breakdown[key] = self.breakdown.get(key, 0) + 1
+        if route == "pallas":
+            self.kernel_calls += 1
+
+    def breakdown_table(self) -> list[dict]:
+        """The breakdown as sorted JSON-able rows (telemetry sinks)."""
+        return [{"family": f, "structure": s, "route": r, "order": n,
+                 "calls": c}
+                for (f, s, r, n), c in sorted(self.breakdown.items())]
 
 
 # The root stats is the default for code that never opens a dispatch_stats()
@@ -143,23 +173,50 @@ def force_pallas():
         stats.force_depth -= 1
 
 
+def dispatch_breakdown() -> dict:
+    """A copy of the current context's per-(family, structure, route,
+    order) dispatch counts (see `DispatchStats.breakdown`)."""
+    return dict(_STATS.get().breakdown)
+
+
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def _count_kernel() -> None:
-    _STATS.get().kernel_calls += 1
+# operator class -> family tag for the breakdown/span instrumentation;
+# third-party registered families fall back to their lowercased class name
+_FAMILY_BY_TYPE = {TTRP: "tt", CPRP: "cp", GaussianRP: "gaussian",
+                   VerySparseRP: "sparse"}
 
 
-def count_kernel_dispatch() -> None:
+def _family_tag(op) -> str:
+    for cls, name in _FAMILY_BY_TYPE.items():
+        if isinstance(op, cls):
+            return name
+    return type(op).__name__.lower()
+
+
+def _order_tag(op) -> int:
+    try:
+        return int(op.order)
+    except (AttributeError, TypeError):
+        return len(tuple(op.in_dims))
+
+
+def count_kernel_dispatch(family: str = "extern", structure: str = "extern",
+                          order: int = 0) -> None:
     """Record one Pallas kernel dispatch on the context-local stats.
 
     The public hook for kernel wrappers that live OUTSIDE the
     project/reconstruct dispatch matrix (e.g. the fused unsketch+EF+AdamW
     launch in `optim.adamw.update_sketched`) so `kernel_call_count()`
-    stays the single source of truth for routing proofs.
+    stays the single source of truth for routing proofs. The optional tags
+    place the launch in the per-(family, structure, route, order)
+    `breakdown` (route is 'pallas' by definition here — this hook exists
+    for kernel launches); untagged calls land under ('extern', 'extern',
+    'pallas', 0), keeping the kernel_calls == sum-of-pallas-rows invariant.
     """
-    _count_kernel()
+    _STATS.get().record(family, structure, "pallas", int(order))
 
 
 def _mxu_aligned(op) -> bool:
@@ -257,18 +314,24 @@ def _project_dense(op: RPOperator, x: jnp.ndarray, backend: str,
     is_tn = isinstance(op, (TTRP, CPRP))
     n = op.order if is_tn else 0
     supported = is_tn and _kernel_order_ok(n) and xt.ndim >= n
-    if _use_kernel(backend, supported=supported, aligned=_mxu_aligned(op)):
-        from repro.kernels import ops as kops  # local: avoids import cycle
-        _count_kernel()
-        interpret = not _on_tpu()
-        kern = kops.tt_project if isinstance(op, TTRP) else kops.cp_project
-        if xt.ndim <= n + 1:  # single input or 1-D batch: native batch axis
-            return kern(op, xt, interpret=interpret, pipeline=pipeline)
-        batch = xt.shape[:-n]
-        flat = xt.reshape((-1,) + xt.shape[-n:])
-        return kern(op, flat, interpret=interpret,
-                    pipeline=pipeline).reshape(batch + (op.k,))
-    return op.project(xt)
+    use = _use_kernel(backend, supported=supported, aligned=_mxu_aligned(op))
+    route = "pallas" if use else "xla"
+    order = _order_tag(op)
+    _STATS.get().record(_family_tag(op), "dense", route, order)
+    with obs.span("rp.project", family=_family_tag(op), structure="dense",
+                  order=order, backend=route, pipeline=pipeline):
+        if use:
+            from repro.kernels import ops as kops  # local: avoids cycle
+            interpret = not _on_tpu()
+            kern = (kops.tt_project if isinstance(op, TTRP)
+                    else kops.cp_project)
+            if xt.ndim <= n + 1:  # single input/1-D batch: native batch axis
+                return kern(op, xt, interpret=interpret, pipeline=pipeline)
+            batch = xt.shape[:-n]
+            flat = xt.reshape((-1,) + xt.shape[-n:])
+            return kern(op, flat, interpret=interpret,
+                        pipeline=pipeline).reshape(batch + (op.k,))
+        return op.project(xt)
 
 
 def _project_struct(op: RPOperator, x, backend: str,
@@ -292,11 +355,17 @@ def _project_struct(op: RPOperator, x, backend: str,
     # local import: repro.kernels is deliberately not a module-level dep
     from repro.kernels import struct as kstruct
     supported = _kernel_order_ok(op.order)
-    if _use_kernel(backend, supported=supported, aligned=_mxu_aligned(op)):
-        _count_kernel()
-        return kstruct.struct_project(op, x, interpret=not _on_tpu(),
-                                      pipeline=pipeline)
-    return kstruct.struct_project(op, x, use_kernel=False)
+    use = _use_kernel(backend, supported=supported, aligned=_mxu_aligned(op))
+    route = "pallas" if use else "xla"
+    structure = ("tt" if isinstance(x, (TTTensor, BatchedTTTensor))
+                 else "cp")
+    _STATS.get().record(_family_tag(op), structure, route, op.order)
+    with obs.span("rp.project", family=_family_tag(op), structure=structure,
+                  order=op.order, backend=route, pipeline=pipeline):
+        if use:
+            return kstruct.struct_project(op, x, interpret=not _on_tpu(),
+                                          pipeline=pipeline)
+        return kstruct.struct_project(op, x, use_kernel=False)
 
 
 def project(op: RPOperator, x, *, backend: str = "auto",
@@ -354,27 +423,33 @@ def reconstruct(op: RPOperator, y: jnp.ndarray, *, chunk: int | None = None,
             f"sketch shape {tuple(y.shape)} does not end in k = {op.k}")
     is_tn = isinstance(op, (TTRP, CPRP))
     supported = is_tn and _kernel_order_ok(op.order)
-    if _use_kernel(backend, supported=supported, aligned=_mxu_aligned(op)):
-        from repro.kernels import ops as kops  # local: avoids import cycle
-        if chunk is not None:
-            warnings.warn(
-                f"reconstruct(chunk={chunk}) routed to a Pallas kernel, "
-                "which tiles k internally under its own VMEM budget; the "
-                "chunk argument is ignored on this route. Pass "
-                "backend='xla' to honor it on the einsum path.",
-                UserWarning, stacklevel=2)
-        _count_kernel()
-        interpret = not _on_tpu()
-        kern = (kops.tt_reconstruct if isinstance(op, TTRP)
-                else kops.cp_reconstruct)
-        if y.ndim <= 2:
-            return kern(op, y, interpret=interpret)
+    use = _use_kernel(backend, supported=supported, aligned=_mxu_aligned(op))
+    route = "pallas" if use else "xla"
+    order = _order_tag(op)
+    _STATS.get().record(_family_tag(op), "sketch", route, order)
+    with obs.span("rp.reconstruct", family=_family_tag(op),
+                  structure="sketch", order=order, backend=route,
+                  pipeline="serial"):
+        if use:
+            from repro.kernels import ops as kops  # local: avoids cycle
+            if chunk is not None:
+                warnings.warn(
+                    f"reconstruct(chunk={chunk}) routed to a Pallas kernel, "
+                    "which tiles k internally under its own VMEM budget; the "
+                    "chunk argument is ignored on this route. Pass "
+                    "backend='xla' to honor it on the einsum path.",
+                    UserWarning, stacklevel=2)
+            interpret = not _on_tpu()
+            kern = (kops.tt_reconstruct if isinstance(op, TTRP)
+                    else kops.cp_reconstruct)
+            if y.ndim <= 2:
+                return kern(op, y, interpret=interpret)
+            batch = y.shape[:-1]
+            out = kern(op, y.reshape(-1, op.k), interpret=interpret)
+            return out.reshape(batch + tuple(op.in_dims))
+        if y.ndim == 1:
+            return op.reconstruct(y, chunk=chunk)
         batch = y.shape[:-1]
-        out = kern(op, y.reshape(-1, op.k), interpret=interpret)
+        out = jax.vmap(lambda yy: op.reconstruct(yy, chunk=chunk))(
+            y.reshape(-1, op.k))
         return out.reshape(batch + tuple(op.in_dims))
-    if y.ndim == 1:
-        return op.reconstruct(y, chunk=chunk)
-    batch = y.shape[:-1]
-    out = jax.vmap(lambda yy: op.reconstruct(yy, chunk=chunk))(
-        y.reshape(-1, op.k))
-    return out.reshape(batch + tuple(op.in_dims))

@@ -80,10 +80,14 @@ class Watchdog:
             return None
         alpha = 0.1
         dev = dt - self.ema
-        self.var = (1 - alpha) * (self.var + alpha * dev * dev)
-        self.ema += alpha * dev
+        # score against the PRE-update statistics: folding the sample into
+        # the variance first bounds z at 1/sqrt((1-alpha)*alpha) ~ 3.33,
+        # i.e. the spike inflates the very baseline it is measured against
+        # and a z_thresh of 4 can never fire
         sd = max(self.var ** 0.5, 1e-9)
         z = dev / sd
+        self.var = (1 - alpha) * (self.var + alpha * dev * dev)
+        self.ema += alpha * dev
         if self.n > self.warmup and z > self.z_thresh:
             ev = WatchdogEvent(step=step, dt=dt, ema=self.ema, zscore=z)
             self.events.append(ev)

@@ -18,6 +18,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.ckpt import checkpointer
 from repro.data import SyntheticLM
 
@@ -87,7 +88,10 @@ def run(step_fn: Callable, state: Any, data: SyntheticLM, cfg: LoopConfig, *,
             if start != latest:
                 log(f"[resume] newest checkpoint (step {latest}) failed "
                     f"verification; fell back to verified step {start}")
+                obs.event("ckpt.fallback", step_requested=latest,
+                          step_restored=start, dir=str(cfg.ckpt_dir))
             log(f"[resume] restored step {start} from {cfg.ckpt_dir}")
+            obs.event("ckpt.resume", step=start, dir=str(cfg.ckpt_dir))
     ck = (checkpointer.AsyncCheckpointer(cfg.ckpt_dir, keep=cfg.keep_ckpts)
           if (cfg.ckpt_dir and cfg.async_ckpt) else None)
     wd = Watchdog()
@@ -98,13 +102,19 @@ def run(step_fn: Callable, state: Any, data: SyntheticLM, cfg: LoopConfig, *,
             if injector is not None:
                 injector.maybe_crash(step)
             batch = jax.tree.map(jnp.asarray, data.batch(step))
-            wd.start_step()
-            state, metrics = step_fn(state, batch)
-            jax.block_until_ready(metrics["loss"])
-            ev = wd.end_step(step)
+            with obs.span("train.step", step=step):
+                wd.start_step()
+                state, metrics = step_fn(state, batch)
+                jax.block_until_ready(metrics["loss"])
+                ev = wd.end_step(step)
             if ev is not None:
                 log(f"[straggler] step {step}: {ev.dt:.3f}s "
                     f"(ema {ev.ema:.3f}s, z={ev.zscore:.1f})")
+                # the log string stays (operators grep for it); the event is
+                # the machine-readable copy — a metrics event plus a trace
+                # instant pinned at the offending step's timeline position
+                obs.event("train.straggler", step=step, dt=ev.dt,
+                          ema=ev.ema, zscore=ev.zscore)
             if on_metrics is not None:
                 on_metrics(step, metrics, state)
             if step % cfg.log_every == 0 or step == cfg.total_steps - 1:

@@ -34,6 +34,13 @@ class ServeConfig:
                      sweep (bounds the (B, tile) distance intermediate).
     delta          : default failure probability of the Thm-1/Chebyshev
                      distortion bound reported next to query results.
+    stats_window   : completed requests the latency percentiles in
+                     `SketchServer.stats()` are computed over (last-N).
+                     All-time percentiles let a long healthy prefix mask a
+                     tail regression — after 10^6 fast requests, a slow
+                     phase needs >1% of the TOTAL trace to move the
+                     all-time p99 at all; a windowed p99 reflects it
+                     within `stats_window` requests.
     """
 
     max_batch: int = 16
@@ -43,6 +50,7 @@ class ServeConfig:
     ingest: bool = True
     query_tile: int = 4096
     delta: float = 0.01
+    stats_window: int = 256
 
     def __post_init__(self):
         if self.max_batch < 1:
@@ -63,3 +71,8 @@ class ServeConfig:
                              f"{self.query_tile}")
         if not 0.0 < self.delta < 1.0:
             raise ValueError(f"delta must be in (0, 1), got {self.delta}")
+        if self.stats_window < 1:
+            raise ValueError(
+                f"stats_window must be >= 1, got {self.stats_window}; the "
+                "latency percentiles need at least one completed request "
+                "in their window")

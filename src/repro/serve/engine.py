@@ -15,9 +15,11 @@ policy. An async front-end is a transport detail on top of `submit`/`tick`.
 """
 from __future__ import annotations
 
+import collections
+
 import numpy as np
 
-from repro import rp
+from repro import obs, rp
 from repro.core.formats import CPTensor, TTTensor
 
 from .batcher import DynamicBatcher, SketchRequest
@@ -39,6 +41,11 @@ class SketchServer:
         self.ticks = 0
         self.occupancy: list[float] = []
         self._next_rid = 0
+        # last-N completed-request latencies: what stats() percentiles are
+        # computed over (all-time percentiles let a long healthy prefix
+        # mask a fresh tail regression — see ServeConfig.stats_window)
+        self._lat_window: collections.deque[float] = collections.deque(
+            maxlen=self.cfg.stats_window)
 
     # -- intake ----------------------------------------------------------
     def submit(self, payload, spec: rp.ProjectorSpec, *, seed: int = 0,
@@ -67,22 +74,47 @@ class SketchServer:
         if got is None:
             return 0
         key, batch = got
-        op = self.cache.get(key.spec, key.seed)
-        ys = rp.project_many(op, [r.payload for r in batch],
-                             backend=self.cfg.backend)
-        self.ticks += 1
-        self.occupancy.append(len(batch) / self.cfg.max_batch)
-        ingest = (self.store is not None and self.cfg.ingest
-                  and key.spec == self.store.spec)
-        ids = self.store.add(np.asarray(ys)) if ingest else None
-        for i, req in enumerate(batch):
-            req.sketch = ys[i]
-            req.t_done = float(now)
-            if ids is not None:
-                req.store_id = int(ids[i])
-            req.payload = None      # the engine's point: drop the original
-        self.done.extend(batch)
-        return len(batch)
+        with obs.span("serve.tick", batch=len(batch),
+                      family=key.spec.family, k=key.spec.k,
+                      structure=key.structure, seed=key.seed,
+                      tick=self.ticks):
+            op = self.cache.get(key.spec, key.seed)
+            mon = obs.get_distortion()
+            x_norm2 = None
+            if mon is not None:
+                # squared input norms BEFORE payloads are dropped; dense
+                # payloads only (zero-padding downstream is norm-exact),
+                # structured ones would need a densify just to be graded
+                x_norm2 = [None if isinstance(r.payload, (TTTensor, CPTensor))
+                           else float(np.sum(np.square(
+                               np.asarray(r.payload, np.float64))))
+                           for r in batch]
+            ys = rp.project_many(op, [r.payload for r in batch],
+                                 backend=self.cfg.backend)
+            self.ticks += 1
+            self.occupancy.append(len(batch) / self.cfg.max_batch)
+            ingest = (self.store is not None and self.cfg.ingest
+                      and key.spec == self.store.spec)
+            ids = self.store.add(np.asarray(ys)) if ingest else None
+            delay_hist = obs.histogram("serve/queue_delay_us")
+            for i, req in enumerate(batch):
+                req.sketch = ys[i]
+                req.t_done = float(now)
+                if ids is not None:
+                    req.store_id = int(ids[i])
+                req.payload = None  # the engine's point: drop the original
+                self._lat_window.append(req.latency_us)
+                delay_hist.observe(req.latency_us)
+                if mon is not None and x_norm2[i] is not None:
+                    mon.observe_norms(
+                        key.spec.family, len(key.spec.dims), key.spec.k,
+                        x_norm2[i],
+                        float(np.sum(np.square(
+                            np.asarray(ys[i], np.float64)))),
+                        rank=key.spec.rank)
+            self.done.extend(batch)
+            obs.counter("serve/requests_done").inc(len(batch))
+            return len(batch)
 
     def drain(self, now: float) -> int:
         """Flush everything still queued (end of trace). Returns #served.
@@ -147,8 +179,15 @@ class SketchServer:
 
     # -- telemetry -------------------------------------------------------
     def stats(self) -> dict:
-        """Serving report: latency percentiles, occupancy, cache stats."""
-        lat = np.asarray([r.latency_us for r in self.done], np.float64)
+        """Serving report: latency percentiles, occupancy, cache stats.
+
+        `p50_us`/`p99_us` are WINDOWED — computed over the last
+        `cfg.stats_window` completed requests, not all-time — so a tail
+        regression late in a long replay shows up instead of being
+        averaged away by the healthy prefix (`stats_window_n` reports how
+        many requests the window currently holds).
+        """
+        lat = np.asarray(self._lat_window, np.float64)
         out = {
             "requests_done": len(self.done),
             "pending": self.batcher.pending(),
@@ -157,6 +196,8 @@ class SketchServer:
             if self.occupancy else 0.0,
             "p50_us": float(np.percentile(lat, 50)) if lat.size else 0.0,
             "p99_us": float(np.percentile(lat, 99)) if lat.size else 0.0,
+            "stats_window": self.cfg.stats_window,
+            "stats_window_n": int(lat.size),
             "cache": self.cache.stats.as_dict(),
         }
         if self.store is not None:

@@ -9,7 +9,7 @@ from benchmarks.check_regression import check, main
 
 def _record():
     return {
-        "schema": "bench_rp/v7",
+        "schema": "bench_rp/v8",
         "sections": {
             "timing": [
                 {"name": "time/batched/tt/project/B=16", "us_per_call": 10.0,
@@ -39,6 +39,9 @@ def _record():
                 {"name": "perf/wire/sync=sketch-mean", "us_per_call": 1000.0,
                  "derived": {"launches_project": 6, "wire_ratio": 3.88,
                              "hlo_bytes_int8": 396}},
+                {"name": "obs/overhead", "us_per_call": 1.0,
+                 "derived": {"overhead_frac": 0.00003, "disabled_ns": 800,
+                             "ref_us": 30000.0, "budget": 0.05}},
             ],
             "smoke": [
                 {"name": "smoke/tt", "us_per_call": 1.0, "derived": {"k": 64}},
@@ -59,7 +62,7 @@ def test_wall_clock_noise_is_not_gated():
 
 def test_schema_drift_fails():
     new = _record()
-    new["schema"] = "bench_rp/v8"
+    new["schema"] = "bench_rp/v9"
     assert any("schema drift" in e for e in check(new, _record()))
 
 
@@ -67,11 +70,11 @@ def test_required_row_prefixes_cover_struct_subsystem():
     """A timing record that stops emitting a whole gated row family — the
     order-N frontier, the compressed-domain struct/ rows, the
     sharded-engine shard/ rows, the serving-engine serve/ rows, or the
-    checkpointing ckpt/ rows, or the kernel perf-frontier perf/ rows —
-    fails even if the baseline ALSO lost them
+    checkpointing ckpt/ rows, the kernel perf-frontier perf/ rows, or the
+    telemetry obs/ rows — fails even if the baseline ALSO lost them
     (row-by-row diffing alone can't see that)."""
     for prefix in ("struct/", "time/order/", "shard/", "serve/", "ckpt/",
-                   "perf/"):
+                   "perf/", "obs/"):
         new = _record()
         new["sections"]["timing"] = [
             r for r in new["sections"]["timing"]
@@ -80,7 +83,7 @@ def test_required_row_prefixes_cover_struct_subsystem():
         assert any("required prefix" in e and prefix in e
                    for e in check(new, base))
     # records without a timing section (e.g. --only smoke) are not gated
-    smoke_only = {"schema": "bench_rp/v7",
+    smoke_only = {"schema": "bench_rp/v8",
                   "sections": {"smoke": _record()["sections"]["smoke"]}}
     assert not any("required prefix" in e
                    for e in check(smoke_only, copy.deepcopy(smoke_only)))
@@ -170,6 +173,24 @@ def test_perf_bands_do_not_gate_non_perf_rows():
     new = copy.deepcopy(base)
     new["sections"]["timing"][0]["derived"]["speedup"] = 0.1
     assert check(new, base) == []
+
+
+def test_obs_overhead_absolute_cap():
+    """obs/* overhead_frac is capped ABSOLUTELY at 0.05 — a ratio of two
+    same-process timings, so unlike wall-clock an absolute budget holds
+    across machines. The metric vanishing must not evade the cap."""
+    base = _record()
+    ok = copy.deepcopy(base)            # growth under the cap passes
+    ok["sections"]["timing"][9]["derived"]["overhead_frac"] = 0.049
+    assert check(ok, base) == []
+    bloated = copy.deepcopy(base)
+    bloated["sections"]["timing"][9]["derived"]["overhead_frac"] = 0.06
+    assert any("overhead_frac" in e and "budget" in e
+               for e in check(bloated, base))
+    vanished = copy.deepcopy(base)
+    del vanished["sections"]["timing"][9]["derived"]["overhead_frac"]
+    assert any("overhead_frac" in e and "missing" in e
+               for e in check(vanished, base))
 
 
 def test_run_only_unknown_section_raises():

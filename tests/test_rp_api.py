@@ -389,15 +389,61 @@ def test_dispatch_stats_scopes_are_isolated():
     op = _op("tt", k=128, dims=dims)
     x = jax.random.normal(jax.random.PRNGKey(24), dims)
     outer_before = rp.kernel_call_count()
+    outer_breakdown = rp.dispatch_breakdown()
     with rp.dispatch_stats() as inner:
         rp.project(op, x, backend="pallas")
         assert inner.kernel_calls == 1
+        assert inner.breakdown == {("tt", "dense", "pallas", 3): 1}
+        assert rp.dispatch_breakdown() == inner.breakdown
         with rp.dispatch_stats() as innermost:
             rp.project(op, x, backend="pallas")
             assert innermost.kernel_calls == 1
+            # the breakdown is scoped exactly like kernel_calls
+            assert innermost.breakdown == {("tt", "dense", "pallas", 3): 1}
         assert inner.kernel_calls == 1      # inner scope didn't see it
+        assert inner.breakdown[("tt", "dense", "pallas", 3)] == 1
     assert rp.kernel_call_count() == outer_before
     assert rp.current_stats() is not inner
+    assert rp.dispatch_breakdown() == outer_breakdown   # nothing leaked
+
+
+def test_dispatch_breakdown_routes_and_invariant():
+    """Every dispatch lands one (family, structure, route, order) cell;
+    kernel_calls stays bit-compatible as the sum of the pallas cells."""
+    dims = (8, 128, 64)
+    op_tt = _op("tt", k=128, dims=dims)
+    op_g = _op("gaussian", k=128, dims=dims)
+    x = jax.random.normal(jax.random.PRNGKey(25), dims)
+    with rp.dispatch_stats() as st:
+        y = rp.project(op_tt, x, backend="pallas")      # pallas dense
+        rp.project(op_tt, x, backend="xla")             # xla dense
+        rp.project(op_g, x, backend="xla")              # gaussian dense
+        rp.reconstruct(op_tt, y, backend="xla")         # sketch route
+        bd = st.breakdown
+        assert bd == {
+            ("tt", "dense", "pallas", 3): 1,
+            ("tt", "dense", "xla", 3): 1,
+            # gaussian is an order-1 (flat dense) operator by construction
+            ("gaussian", "dense", "xla", 1): 1,
+            ("tt", "sketch", "xla", 3): 1,
+        }
+        pallas_total = sum(n for (_, _, route, _), n in bd.items()
+                           if route == "pallas")
+        assert st.kernel_calls == pallas_total == 1
+        table = st.breakdown_table()
+        assert {r["family"] for r in table} == {"tt", "gaussian"}
+        assert sum(r["calls"] for r in table) == 4
+
+
+def test_dispatch_breakdown_struct_routes():
+    """TT/CP structured payloads land under their own structure tag."""
+    from repro.core.formats import random_tt
+    dims = (8, 16, 16)
+    op = _op("tt", k=128, dims=dims)
+    xtt = random_tt(jax.random.PRNGKey(26), dims, 2)
+    with rp.dispatch_stats() as st:
+        rp.project(op, xtt, backend="xla")
+        assert list(st.breakdown) == [("tt", "tt", "xla", 3)]
 
 
 def test_force_pallas_nests_and_restores():

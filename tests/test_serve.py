@@ -142,6 +142,8 @@ def test_serve_config_typed_errors():
         ServeConfig(cache_capacity=0)
     with pytest.raises(ValueError, match="delta"):
         ServeConfig(delta=1.5)
+    with pytest.raises(ValueError, match="stats_window"):
+        ServeConfig(stats_window=0)
 
 
 def test_store_typed_errors():
@@ -351,6 +353,34 @@ def test_repeated_spec_trace_cache_hit_rate():
     assert rep["requests_done"] == 96
     assert rep["cache"]["misses"] == 1
     assert rep["cache"]["hit_rate"] >= 0.9
+
+
+def test_stats_percentiles_are_windowed():
+    """Two-phase trace: a long fast prefix then a slow tail. All-time
+    percentiles mask the tail entirely — 4 slow requests after 400 fast
+    ones sit above the all-time p99 rank, so it still reads 'fast' — while
+    the windowed p50/p99 (last `stats_window` requests) must surface it.
+    This is the regression the window exists to catch."""
+    cfg = ServeConfig(max_batch=1, flush_us=100.0, backend="xla",
+                      ingest=False, stats_window=32)
+    srv = SketchServer(cfg)
+    x = jax.random.normal(KEY, SPEC.dims)
+    t = 0.0
+    for _ in range(400):                  # healthy prefix: 100us latency
+        srv.submit(x, SPEC, now=t)
+        srv.tick(t + 100.0)
+        t += 200.0
+    for _ in range(4):                    # regressed tail: 50ms latency
+        srv.submit(x, SPEC, now=t)
+        srv.tick(t + 50_000.0)
+        t += 60_000.0
+    st = srv.stats()
+    all_time = np.percentile([r.latency_us for r in srv.done], 99)
+    assert all_time <= 150.0              # the masking, demonstrated
+    assert st["stats_window"] == 32 and st["stats_window_n"] == 32
+    assert st["p99_us"] >= 10_000.0       # the window sees the slow phase
+    assert st["p50_us"] <= 150.0          # but is not all-slow either
+    assert st["requests_done"] == 404
 
 
 def test_engine_submit_validates_structured_dims():
