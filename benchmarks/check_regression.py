@@ -15,7 +15,10 @@ diff has nothing to compare) — and on a
 LAUNCH-COUNT REGRESSION: any row whose
 Pallas dispatch count (launches_batched / launches_project /
 launches_reconstruct) grew to more than 2x the baseline, i.e. a batched
-path quietly decomposing back into per-bucket or vmap launches — and on a
+path quietly decomposing back into per-bucket or vmap launches — the
+`plan/cache` row's `plan_builds` rides the same gate, so an ExecutionPlan
+signature going jit-unstable (every retrace re-planning instead of
+hitting the cache) fails the diff the same way — and on a
 PERF-BAND REGRESSION: the `perf/*` rows' derived ratios (`speedup`,
 `wire_ratio`, `hbm_ratio`) drifting past their relative band vs baseline
 (see PERF_BANDS) — and on an OBS-OVERHEAD REGRESSION: the `obs/*` rows'
@@ -32,7 +35,8 @@ from __future__ import annotations
 import json
 import sys
 
-LAUNCH_KEYS = ("launches_batched", "launches_project", "launches_reconstruct")
+LAUNCH_KEYS = ("launches_batched", "launches_project", "launches_reconstruct",
+               "plan_builds")
 RECORD_KEYS = {"name", "us_per_call", "derived"}
 # Row families a timing record must keep emitting for the gate to mean
 # anything; checked on the NEW record whenever it has a timing section.
@@ -40,7 +44,7 @@ RECORD_KEYS = {"name", "us_per_call", "derived"}
 # timing section always run those sections too
 # (--only smoke,timing,serve,ckpt,rooflines).
 REQUIRED_ROW_PREFIXES = ("time/order/", "struct/", "shard/", "serve/",
-                         "ckpt/", "perf/", "obs/")
+                         "ckpt/", "perf/", "obs/", "plan/")
 # Relative bands on the perf/* rows' derived metrics (new vs baseline,
 # numeric plain floats — never gated absolutely, CI machines differ):
 #   speedup    — wall-clock ratio (serial/pipelined, unfused/fused). The

@@ -1,9 +1,10 @@
 """Aggregates the dry-run sweep JSONs into the roofline table used by
-EXPERIMENTS.md (§Dry-run / §Roofline), plus the planner-driven per-kernel
+EXPERIMENTS.md (§Dry-run / §Roofline), plus the plan-driven per-kernel
 rooflines (roofline/kernel/*): analytic TPU-time bounds for the batched
-sweep and carry-sweep launches whose HBM bytes come from the SAME planner
-ledger the timing rows report (`kernels.sweep_hbm_bytes` /
-`struct_hbm_bytes`), so the two tables can never disagree on traffic. Each
+sweep and carry-sweep launches whose flops AND HBM bytes are read from the
+`ExecutionPlan` cost ledger (`rp.plan_execution(...).cost`) — the SAME
+resolver every dispatch and every timing row goes through, so the tables
+can never disagree on traffic. Each
 kernel row carries both schedules' bounds — `serial_s` (compute + memory,
 back-to-back phases) and `pipelined_s` (max(compute, memory): the
 double-buffered DMA schedule overlaps the streams) — and the
@@ -15,19 +16,17 @@ from ._util import csv_row
 
 
 def _kernel_rows(rows):
-    from repro.core import theory
-    from repro.kernels import (plan_carry_sweep, plan_contraction,
-                               struct_hbm_bytes, sweep_hbm_bytes)
+    from repro import rp
     from repro.launch.roofline import HBM_BW, PEAK_FLOPS
 
-    def bound(name, flops, hbm, extra=""):
-        compute_s = flops / PEAK_FLOPS
-        memory_s = hbm / HBM_BW
+    def bound(name, cost, extra=""):
+        compute_s = cost.flops / PEAK_FLOPS
+        memory_s = cost.hbm_bytes / HBM_BW
         serial_s = compute_s + memory_s
         pipelined_s = max(compute_s, memory_s)
         rows.append(csv_row(
             f"roofline/kernel/{name}", 0.0,
-            f"flops={flops};hbm_bytes={hbm};"
+            f"flops={cost.flops};hbm_bytes={cost.hbm_bytes};"
             f"compute_s={compute_s:.3e};memory_s={memory_s:.3e};"
             f"serial_s={serial_s:.3e};pipelined_s={pipelined_s:.3e};"
             f"pipeline_gain={serial_s / pipelined_s:.3f};"
@@ -37,21 +36,18 @@ def _kernel_rows(rows):
     k, rank, b = 128, 2, 8
     dims = (256, 16, 16)             # the perf/pipeline/sweep bench shape
     for family in ("tt", "cp"):
-        plan = plan_contraction(family, "project", k, b, dims, rank,
-                                pipeline="double")
-        fl = b * (theory.flops_project_dense_tt(k, dims, rank)
-                  if family == "tt"
-                  else theory.flops_project_dense_cp(k, dims, rank))
-        bound(f"sweep/{family}", fl, sweep_hbm_bytes(plan),
+        ep = rp.plan_execution(
+            rp.ProjectorSpec(family=family, k=k, dims=dims, rank=rank),
+            rp.StructureSig(batch=b), backend="pallas", pipeline="double")
+        bound(f"sweep/{family}", ep.cost,
               f";dims={'x'.join(map(str, dims))};B={b}")
     bc, r_in, cdims = 64, 4, (16, 16, 16)
     for family in ("tt", "cp"):
-        cplan = plan_carry_sweep(family, "tt", k, bc, cdims, rank, r_in,
-                                 pipeline="double")
-        fl = bc * theory.flops_project_struct(family, "tt", k, cdims,
-                                              rank, r_in)
-        bound(f"carry/{family}x tt".replace(" ", ""), fl,
-              struct_hbm_bytes(cplan),
+        ep = rp.plan_execution(
+            rp.ProjectorSpec(family=family, k=k, dims=cdims, rank=rank),
+            rp.StructureSig(structure="tt", batch=bc, in_rank=r_in),
+            backend="pallas", pipeline="double")
+        bound(f"carry/{family}x tt".replace(" ", ""), ep.cost,
               f";dims={'x'.join(map(str, cdims))};B={bc};r_in={r_in}")
 
 

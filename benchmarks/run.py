@@ -57,18 +57,19 @@ def main(argv=None) -> None:
                     help="one tiny config per registered rp family (CI)")
     ap.add_argument("--only", default=None,
                     help="comma list: distortion,timing,pairwise,memory,"
-                         "variance,gradcomp,rooflines,smoke,serve,ckpt,obs")
+                         "variance,gradcomp,rooflines,smoke,serve,ckpt,obs,"
+                         "plan")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write a structured perf record (BENCH_rp.json)")
     args = ap.parse_args(argv)
     fast = not args.full
-    from . import (ckpt, distortion, gradcomp, memory, obs, pairwise,
+    from . import (ckpt, distortion, gradcomp, memory, obs, pairwise, plan,
                    rooflines, serve, smoke, timing, variance)
     mods = {
         "memory": memory, "variance": variance, "distortion": distortion,
         "timing": timing, "pairwise": pairwise, "gradcomp": gradcomp,
         "rooflines": rooflines, "smoke": smoke, "serve": serve,
-        "ckpt": ckpt, "obs": obs,
+        "ckpt": ckpt, "obs": obs, "plan": plan,
     }
     if args.smoke:
         wanted = ["smoke"]
@@ -89,6 +90,12 @@ def main(argv=None) -> None:
     if args.json:
         import jax
         record = {
+            # v9: execution plans — the plan/* section (plan-cache builds /
+            # hits with `plan_builds` gated like a launch count and the
+            # hit rate asserted in the bench, plus the cost-ledger
+            # cross-checks: declared one-pass HBM bytes vs the compiled
+            # executable's bytes accessed, and the wire ledger vs measured
+            # HLO all-reduce bytes — exact for fp32 sketch-mean).
             # v8: observability — the obs/* section (the telemetry layer's
             # disabled-fast-path cost vs the perf reference dispatch as a
             # numeric `overhead_frac`, capped ABSOLUTELY at 0.05 by
@@ -111,7 +118,7 @@ def main(argv=None) -> None:
             # launch counts so the 1- and 8-device CI jobs diff against one
             # baseline). v3 added the struct/{tt,cp}x{tt,cp}/N={3,4}
             # carry-sweep rows; v2 the time/order/{tt,cp}/N={2..5} frontier.
-            "schema": "bench_rp/v8",
+            "schema": "bench_rp/v9",
             "unix_time": time.time(),
             "backend": jax.default_backend(),
             "fast": fast,

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 
 from repro import rp
 from repro.core import (BatchedCPTensor, BatchedTTTensor, random_cp,
-                        random_tt, theory)
+                        random_tt)
 
 from ._util import csv_row, time_call
 
@@ -27,17 +27,27 @@ def _compiled_with_dispatch_count(fn, *args):
     return compiled, rp.kernel_call_count() - c0
 
 
-def _analytic_hbm_bytes(direction, family, k, b, dims, rank):
-    """Grid-accurate analytic HBM traffic of ONE batched launch, any order.
+def _kernel_plan(direction, family, k, b, dims, rank, *, pipeline="serial"):
+    """The pinned-kernel-route `ExecutionPlan` of ONE batched launch.
 
-    Routed through the planner's own accounting (`kernels.sweep_hbm_bytes`
-    over the `plan_contraction` the launch would actually use) so these
-    rows, the rooflines, and the fused-update ledger can never disagree on
-    what a schedule streams.
+    All analytic values in these rows (hbm bytes, flops, params, variance
+    factors, grid shapes) are read from `plan.cost` / the plan's tiles —
+    the SAME resolver every dispatch goes through — so the bench rows, the
+    rooflines, and the kernels' own schedules can never disagree on what a
+    launch streams.
     """
-    from repro.kernels import plan_contraction, sweep_hbm_bytes
-    return sweep_hbm_bytes(plan_contraction(family, direction, k, b, dims,
-                                            rank))
+    sig = rp.StructureSig(
+        structure="sketch" if direction == "reconstruct" else "dense",
+        batch=b)
+    return rp.plan_execution(
+        rp.ProjectorSpec(family=family, k=k, dims=dims, rank=rank), sig,
+        kind=direction, backend="pallas", pipeline=pipeline)
+
+
+def _analytic_hbm_bytes(direction, family, k, b, dims, rank):
+    """Grid-accurate analytic HBM traffic of ONE batched launch, any order
+    (the plan ledger of the schedule the launch would actually use)."""
+    return _kernel_plan(direction, family, k, b, dims, rank).cost.hbm_bytes
 
 
 def _order_frontier(rows, fast=True):
@@ -59,6 +69,11 @@ def _order_frontier(rows, fast=True):
     key = jax.random.PRNGKey(7)
     for n, dims in dims_by_n.items():
         xb = jax.random.normal(jax.random.fold_in(key, n), (b,) + dims)
+        # the Thm-1 CP/TT ratio is the quotient of the two plans' ledgers
+        eplans = {fam: _kernel_plan("project", fam, k, b, dims, rank)
+                  for fam in ("tt", "cp")}
+        var_ratio = (eplans["cp"].cost.var_factor
+                     / eplans["tt"].cost.var_factor)
         for family in ("tt", "cp"):
             op = rp.make_projector(
                 rp.ProjectorSpec(family=family, k=k, dims=dims, rank=rank),
@@ -75,15 +90,16 @@ def _order_frontier(rows, fast=True):
             yb = f_p(xb)
             f_r, launches_r = _compiled_with_dispatch_count(reconstruct, yb)
             us_r = time_call(f_r, yb)
+            cost = eplans[family].cost
             rows.append(csv_row(
                 f"time/order/{family}/N={n}", us_p,
                 f"dims={'x'.join(map(str, dims))};k={k};rank={rank};B={b};"
                 f"launches_project={launches_p};"
                 f"launches_reconstruct={launches_r};"
                 f"us_reconstruct={us_r:.1f};"
-                f"params={theory.params_rp(family, k, dims, rank)};"
-                f"var_factor={theory.variance_factor(family, N=n, R=rank):.2f};"
-                f"var_ratio_cp_tt={theory.variance_ratio_cp_to_tt(n, rank):.2f}"))
+                f"params={cost.params};"
+                f"var_factor={cost.var_factor:.2f};"
+                f"var_ratio_cp_tt={var_ratio:.2f}"))
 
 
 def _struct_frontier(rows, fast=True):
@@ -124,18 +140,22 @@ def _struct_frontier(rows, fast=True):
 
                 f, launches = _compiled_with_dispatch_count(project, xb)
                 us = time_call(f, xb)
-                fl = theory.flops_project_struct(op_family, in_family, k,
-                                                 dims, r_op, r_in)
-                speedup = theory.struct_speedup(op_family, in_family, k,
-                                                dims, r_op, r_in)
+                # the plan the dispatch above resolved (a cache hit here);
+                # analytic_speedup is its dense counterpart's flops over its
+                # own — the same quotient theory.struct_speedup charts
+                ep = rp.plan_execution(
+                    op, rp.StructureSig(structure=in_family, batch=b,
+                                        in_rank=r_in), backend="pallas")
+                speedup = (_kernel_plan("project", op_family, k, b, dims,
+                                        r_op).cost.flops / ep.cost.flops)
                 rows.append(csv_row(
                     f"struct/{op_family}x{in_family}/N={n}", us,
                     f"dims={'x'.join(map(str, dims))};k={k};B={b};"
                     f"r_op={r_op};r_in={r_in};"
                     f"launches_project={launches};"
-                    f"carry_bytes={theory.mem_carry_struct(k, r_op, r_in, batch=b)};"
-                    f"params={theory.params_rp(op_family, k, dims, r_op)};"
-                    f"flops_struct={fl};"
+                    f"carry_bytes={ep.carry_bytes};"
+                    f"params={ep.cost.params};"
+                    f"flops_struct={ep.cost.flops // b};"
                     f"analytic_speedup={speedup:.1f}x"))
 
 
@@ -181,8 +201,7 @@ def _shard_rows(rows, fast=True):
         us = time_call(f, g, state, 0)
         ar = parse_collectives(f.as_text())["per_type"].get(
             "all-reduce", {"count": 0, "bytes": 0.0})
-        wire = (sk.sketch_bytes() if sync == "sketch-mean"
-                else sk.dense_bytes())
+        wire = comp.wire_bytes(sk)      # the plan layer's wire ledger
         rows.append(csv_row(
             f"shard/collective/sync={sync}", us,
             f"npod={ndev};n_buckets={sk.n_buckets};k={cfg.k};"
@@ -322,10 +341,6 @@ def _perf_rows(rows, fast=True):
       the measured and declared ledgers sit side by side.
     """
     del fast
-    from repro.kernels import (fused_hbm_bytes, plan_carry_sweep,
-                               plan_contraction, plan_fused_update,
-                               struct_hbm_bytes, sweep_hbm_bytes,
-                               unfused_hbm_bytes)
     key = jax.random.PRNGKey(31)
 
     # --- double-buffered dense sweep vs serial --------------------------
@@ -346,15 +361,15 @@ def _perf_rows(rows, fast=True):
         f_s, _ = _compiled_with_dispatch_count(serial, xb)
         f_d, launches_d = _compiled_with_dispatch_count(double, xb)
         us_s, us_d = time_call(f_s, xb), time_call(f_d, xb)
-        plan = plan_contraction(family, "project", k, b, dims, rank,
-                                pipeline="double")
+        ep = _kernel_plan("project", family, k, b, dims, rank,
+                          pipeline="double")
         rows.append(csv_row(
             f"perf/pipeline/sweep/{family}", us_d,
             f"dims={'x'.join(map(str, dims))};k={k};B={b};"
             f"launches_project={launches_d};us_serial={us_s:.1f};"
             f"speedup={us_s / us_d:.3f};"
-            f"hbm_bytes={sweep_hbm_bytes(plan)};"
-            f"grid_steps={-(-dims[0] // plan.ba)}"))
+            f"hbm_bytes={ep.cost.hbm_bytes};"
+            f"grid_steps={-(-dims[0] // ep.tiles[2])}"))
 
     # --- double-buffered carry sweep vs serial --------------------------
     bc, r_in, cdims = 64, 4, (16, 16, 16)  # b/tb > 1: steps to overlap
@@ -375,15 +390,16 @@ def _perf_rows(rows, fast=True):
         f_s, _ = _compiled_with_dispatch_count(serial, xc)
         f_d, launches_d = _compiled_with_dispatch_count(double, xc)
         us_s, us_d = time_call(f_s, xc), time_call(f_d, xc)
-        cplan = plan_carry_sweep(family, "tt", k, bc, cdims, rank, r_in,
-                                 pipeline="double")
+        ep = rp.plan_execution(
+            op, rp.StructureSig(structure="tt", batch=bc, in_rank=r_in),
+            backend="pallas", pipeline="double")
         rows.append(csv_row(
             f"perf/pipeline/carry/{family}", us_d,
             f"dims={'x'.join(map(str, cdims))};k={k};B={bc};r_in={r_in};"
             f"launches_project={launches_d};us_serial={us_s:.1f};"
             f"speedup={us_s / us_d:.3f};"
-            f"hbm_bytes={struct_hbm_bytes(cplan)};"
-            f"grid_steps={-(-bc // cplan.tb)}"))
+            f"hbm_bytes={ep.cost.hbm_bytes};"
+            f"grid_steps={-(-bc // ep.tiles[1])}"))
 
     # --- fused unsketch+EF+AdamW vs the unfused chain -------------------
     from repro.kernels import fused_update_buckets
@@ -420,15 +436,16 @@ def _perf_rows(rows, fast=True):
         us_f, us_u = time_call(f_f, *argv), time_call(f_u, *argv)
         fus_f = _dense_entry_fusions(f_f.as_text(), (nb,) + fdims)
         fus_u = _dense_entry_fusions(f_u.as_text(), (nb,) + fdims)
-        fplan = plan_fused_update(family, k, nb, fdims, rank)
+        hbm_f = rp.plan_update(op, nb, fused=True).cost.hbm_bytes
+        hbm_u = rp.plan_update(op, nb, fused=False).cost.hbm_bytes
         rows.append(csv_row(
             f"perf/fused/update/{family}", us_f,
             f"dims={'x'.join(map(str, fdims))};k={k};B={nb};"
             f"launches_project={launches_f};launches_unfused={launches_u};"
             f"us_unfused={us_u:.1f};speedup={us_u / us_f:.3f};"
-            f"hbm_ratio={fused_hbm_bytes(fplan) / unfused_hbm_bytes(fplan):.3f};"
-            f"hbm_bytes_fused={fused_hbm_bytes(fplan)};"
-            f"hbm_bytes_unfused={unfused_hbm_bytes(fplan)};"
+            f"hbm_ratio={hbm_f / hbm_u:.3f};"
+            f"hbm_bytes_fused={hbm_f};"
+            f"hbm_bytes_unfused={hbm_u};"
             f"dense_kernels_fused={fus_f};dense_kernels_unfused={fus_u}"))
 
     # --- int8 sketches on the wire --------------------------------------

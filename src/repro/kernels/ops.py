@@ -60,6 +60,16 @@ _KINDS = ("project", "reconstruct")
 PIPELINES = ("serial", "double")
 
 
+def validate_pipeline(pipeline: str) -> str:
+    """The single `pipeline=` check (every layer — planners, dispatch,
+    `rp.plan_execution` — delegates here): returns it, or raises the one
+    typed ValueError naming the accepted set. Survives `python -O`."""
+    if pipeline not in PIPELINES:
+        raise ValueError(f"unknown pipeline {pipeline!r}; expected "
+                         f"{PIPELINES}")
+    return pipeline
+
+
 def _pad_axis(a: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
     n = a.shape[axis]
     pad = (-n) % mult
@@ -214,9 +224,7 @@ def plan_contraction(family: str, kind: str, k: int, b: int,
         raise ValueError(f"unknown kind {kind!r}; expected {_KINDS}")
     if family not in _FAMILIES:
         raise ValueError(f"unknown family {family!r}; expected {_FAMILIES}")
-    if pipeline not in PIPELINES:
-        raise ValueError(f"unknown pipeline {pipeline!r}; expected "
-                         f"{PIPELINES}")
+    validate_pipeline(pipeline)
     if pipeline == "double" and kind != "project":
         raise ValueError(
             "pipeline='double' is implemented for kind='project' only: the "
@@ -458,4 +466,5 @@ def cp_reconstruct(op: CPRP, y: jnp.ndarray, *, interpret: bool = True,
 __all__ = ["ContractionPlan", "MAX_ORDER", "PIPELINES", "VMEM_BUDGET_BYTES",
            "cp_project", "cp_reconstruct", "kernel_order_supported",
            "pick_tiles", "plan_contraction", "ref", "sweep_hbm_bytes",
-           "tt_cores_squeezed", "tt_project", "tt_reconstruct"]
+           "tt_cores_squeezed", "tt_project", "tt_reconstruct",
+           "validate_pipeline"]

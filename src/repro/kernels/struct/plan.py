@@ -33,8 +33,8 @@ from __future__ import annotations
 
 import dataclasses
 
-from ..ops import (MAX_ORDER, PIPELINES, VMEM_BUDGET_BYTES, _lane_tile,
-                   _pow2_at_most)
+from ..ops import (MAX_ORDER, VMEM_BUDGET_BYTES, _lane_tile, _pow2_at_most,
+                   validate_pipeline)
 
 _FAMILIES = ("tt", "cp")
 
@@ -169,9 +169,7 @@ def plan_carry_sweep(op_family: str, in_family: str, k: int, b: int,
     """
     dims = tuple(int(d) for d in dims)
     program = _carry_program(op_family, in_family, len(dims))  # validates
-    if pipeline not in PIPELINES:
-        raise ValueError(f"unknown pipeline {pipeline!r}; expected "
-                         f"{PIPELINES}")
+    validate_pipeline(pipeline)
     r_op, r_in = max(1, int(r_op)), max(1, int(r_in))
     tk = _lane_tile(k)
     tb = _pow2_at_most(max(1, b), 8)

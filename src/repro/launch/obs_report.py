@@ -6,9 +6,27 @@ tables a PR or dashboard wants: span durations aggregated by name, queue
 histogram percentiles, counters/gauges, and the event log (stragglers,
 resume/fallback, distortion alerts). Either input may be omitted.
 
+`--explain SPEC` additionally (or instead) renders the `ExecutionPlan` the
+dispatch layer would resolve for a projection described by SPEC — the
+chosen route/kernel/tiles, the unified cost ledger, and every rejected
+alternative with its reason (see `repro/rp/plan.py`'s module docstring for
+the full dispatch matrix; `rp.explain(op, x)` is the in-process form).
+SPEC is comma-separated key=value pairs:
+
+    family=tt,k=256,dims=8x16x16,rank=2,structure=dense,batch=8,\
+backend=auto,pipeline=serial,kind=project
+
+`family` (tt/cp/gaussian/sparse), `k` and `dims` (x-separated) are
+required; `rank` (default 2), `structure` (dense/tt/cp/sketch),
+`batch`, `in_rank`, `chunk`, `backend`, `pipeline`, `kind`
+(project/reconstruct) are optional. Span rows in the trace carry the
+matching `plan` id attribute, so a hot span can be looked up here.
+
 Usage:
 PYTHONPATH=src python -m repro.launch.obs_report \
     --trace trace.json --metrics metrics.jsonl
+PYTHONPATH=src python -m repro.launch.obs_report \
+    --explain family=tt,k=128,dims=8x16x16,rank=2,batch=8
 """
 from __future__ import annotations
 
@@ -88,6 +106,38 @@ def metrics_tables(lines: list[dict]) -> str:
     return "\n\n".join(blocks) if blocks else "(no metrics recorded)"
 
 
+def explain_plan(spec: str) -> str:
+    """Resolve SPEC (see module docstring) to its plan's describe() block."""
+    kv = {}
+    for part in spec.split(","):
+        key, eq, val = part.partition("=")
+        if not eq or not key:
+            raise ValueError(
+                f"--explain spec entry {part!r} is not key=value; expected "
+                "e.g. family=tt,k=128,dims=8x16x16,rank=2,batch=8")
+        kv[key.strip()] = val.strip()
+    missing = [k for k in ("family", "k", "dims") if k not in kv]
+    if missing:
+        raise ValueError(f"--explain spec is missing required key(s) "
+                         f"{missing}; got {sorted(kv)}")
+    from repro import rp
+    pspec = rp.ProjectorSpec(
+        family=kv["family"], k=int(kv["k"]),
+        dims=tuple(int(d) for d in kv["dims"].split("x")),
+        rank=int(kv.get("rank", 2)))
+    sig = rp.StructureSig(
+        structure=kv.get("structure",
+                         "sketch" if kv.get("kind") == "reconstruct"
+                         else "dense"),
+        batch=int(kv.get("batch", 1)),
+        in_rank=int(kv.get("in_rank", 0)),
+        chunk=int(kv["chunk"]) if kv.get("chunk") else None)
+    plan = rp.plan_execution(pspec, sig, kind=kv.get("kind", "project"),
+                             backend=kv.get("backend", "auto"),
+                             pipeline=kv.get("pipeline", "serial"))
+    return plan.describe()
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--trace", default=None,
@@ -96,9 +146,15 @@ def main(argv=None) -> int:
     ap.add_argument("--metrics", default=None,
                     help="metrics JSONL from obs.MetricsRegistry.write_jsonl"
                          " / --metrics-out")
+    ap.add_argument("--explain", default=None, metavar="SPEC",
+                    help="render the ExecutionPlan for a projection spec, "
+                         "e.g. family=tt,k=128,dims=8x16x16,rank=2,batch=8,"
+                         "backend=auto,pipeline=serial,kind=project")
     args = ap.parse_args(argv)
-    if not args.trace and not args.metrics:
-        ap.error("pass --trace and/or --metrics")
+    if not args.trace and not args.metrics and not args.explain:
+        ap.error("pass --trace, --metrics and/or --explain")
+    if args.explain:
+        print(explain_plan(args.explain))
     if args.trace:
         events = load_trace(args.trace)
         print(f"### Spans ({args.trace})\n")

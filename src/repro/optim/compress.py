@@ -407,16 +407,14 @@ class SketchCompressor:
 
     def wire_bytes(self, sk: PytreeSketcher) -> int:
         """Analytic per-step pod-link payload of `compress_collective` for
-        the active (sync, wire) mode. int8 payloads carry their float32
-        scales: one per bucket row under 'sketch-mean', one per leaf under
-        'local-mean'."""
-        payload = (sk.sketch_bytes() if self.sync == "sketch-mean"
-                   else sk.dense_bytes())
-        if self.wire == "fp32":
-            return payload
-        scales = (sk.n_buckets if self.sync == "sketch-mean"
-                  else len(sk._shapes))
-        return payload // 4 + 4 * scales
+        the active (sync, wire) mode — read from the plan layer's wire
+        ledger (`rp.collective_wire_bytes`), the single accounting the
+        `perf/wire` bench rows and HLO byte checks gate against."""
+        from repro.rp.plan import collective_wire_bytes
+        return collective_wire_bytes(
+            sync=self.sync, wire=self.wire,
+            sketch_bytes=sk.sketch_bytes(), dense_bytes=sk.dense_bytes(),
+            n_buckets=sk.n_buckets, n_leaves=len(sk._shapes))
 
     def _metrics(self, sk: PytreeSketcher, residual) -> dict:
         return {

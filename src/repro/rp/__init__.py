@@ -6,8 +6,12 @@ functional entry point (`project` / `reconstruct`) with backend routing
 ('auto' | 'pallas' | 'xla') to the order-N mode-sweep Pallas TPU kernels.
 `project_many` fans a heterogeneous list of payloads (dense / TT / CP,
 rank-ragged) out to those paths in one dispatch per structure group — the
-serving engine's batch entry. Dispatch instrumentation is context-local
-(`DispatchStats` /
+serving engine's batch entry. Every execution resolves through a
+cached, frozen `ExecutionPlan` (`repro.rp.plan`: route + kernel +
+tiles/grid + pipeline + the unified flops/hbm/vmem/wire/variance cost
+ledger); `rp.explain(op, x)` returns the plan that would run, with its
+rejected alternatives and reasons. Dispatch instrumentation is
+context-local (`DispatchStats` /
 `dispatch_stats()` / `kernel_call_count()`). Mesh-aware sharded entry
 points (`project_sharded` / `reconstruct_sharded` / `sketch_tree_sharded`
 / `bucket_pspec`) lay the bucket axis out over a `jax.sharding.Mesh` with
@@ -41,6 +45,11 @@ from .dispatch import (DispatchStats, count_kernel_dispatch, current_stats,
                        dispatch_breakdown, dispatch_stats, force_pallas,
                        kernel_call_count, project, reconstruct)
 from .many import project_many
+from .plan import (BACKENDS, CostLedger, ExecutionPlan, PlanCacheStats,
+                   StructureSig, clear_plan_cache, collective_wire_bytes,
+                   execute_plan, explain, group_signature, plan_cache_stats,
+                   plan_execution, plan_update, pow2ceil, structure_tag,
+                   validate_backend, validate_pipeline)
 from .protocol import FormatMismatchError, ProjectorSpec, RPOperator
 from .registry import (get_family, list_families, make_projector,
                        register_family)
@@ -49,11 +58,16 @@ from .shard import (bucket_pspec, dequantize_psum, project_sharded,
                     sketch_tree_sharded)
 
 __all__ = [
-    "DispatchStats", "FormatMismatchError", "ProjectorSpec", "RPOperator",
-    "bucket_pspec", "count_kernel_dispatch", "current_stats",
+    "BACKENDS", "CostLedger", "DispatchStats", "ExecutionPlan",
+    "FormatMismatchError", "PlanCacheStats", "ProjectorSpec", "RPOperator",
+    "StructureSig", "bucket_pspec", "clear_plan_cache",
+    "collective_wire_bytes", "count_kernel_dispatch", "current_stats",
     "dispatch_breakdown", "dispatch_stats", "force_pallas",
-    "dequantize_psum", "get_family", "kernel_call_count", "list_families",
-    "make_projector", "project", "project_many", "project_sharded",
+    "dequantize_psum", "execute_plan", "explain", "get_family",
+    "group_signature", "kernel_call_count", "list_families",
+    "make_projector", "plan_cache_stats", "plan_execution", "plan_update",
+    "pow2ceil", "project", "project_many", "project_sharded",
     "quantize_for_psum", "reconstruct", "reconstruct_sharded",
-    "register_family", "sketch_tree_sharded",
+    "register_family", "sketch_tree_sharded", "structure_tag",
+    "validate_backend", "validate_pipeline",
 ]

@@ -1,45 +1,16 @@
-"""Structure-dispatched projection with backend routing.
+"""Structure-dispatched projection: plan lookup -> record -> execute.
 
 `project(op, x)` is the single entry point replacing the old
 `project` / `project_tt` / `project_cp` method zoo: it inspects the input's
 structure (dense tensor, flat vector, `TTTensor` / `CPTensor`, or the
-batched `BatchedTTTensor` / `BatchedCPTensor` containers) and the
-operator's family, and routes to the cheapest contraction path, raising a
-typed `FormatMismatchError` on incompatible shapes.
-
-Dispatch matrix (input format x operator family -> route):
-
-  dense/flat x tt/cp (2<=N<=MAX_ORDER)  mode-sweep kernel | einsum
-  (*batch, k) sketch x tt/cp            mode-sweep adjoint kernel | einsum
-  (Batched)TT/CP x tt/cp (2<=N)         carry-sweep kernel
-                                        (`kernels.struct.struct_project`,
-                                        all four pairings, ONE launch per
-                                        batched call) | batched einsum refs
-  (Batched)TT/CP x gaussian/sparse      densified (`x.full()`) flat einsum
-  order outside [2, MAX_ORDER] x any    einsum, even under 'pallas'
-
-Backend policy (`backend='auto' | 'pallas' | 'xla'`)
----------------------------------------------------
-Dense-input projections of the TT/CP families at any kernel-supported
-order (2 <= N <= `repro.kernels.MAX_ORDER`) have batched mode-sweep Pallas
-kernels (`repro.kernels.tt_project` / `cp_project` — `(*batch, *dims)`
-inputs run in ONE launch with a native batch grid axis, never vmap); the
-adjoints route the same way through `tt_reconstruct` / `cp_reconstruct`
-for `(*batch, k)` sketches; structured (TT/CP-format) inputs — single or
-batched, any pairing with a TT/CP operator — route to the carry-sweep
-kernels in `repro.kernels.struct` (compressed-domain projection,
-O(k N d R R~ (R + R~)), never densifying). Routing:
-
-* 'xla'    — always the einsum path.
-* 'pallas' — always the kernel (operators outside the supported order
-             range — order-1 classical Gaussian, order > MAX_ORDER — take
-             the einsum path); interpret mode off-TPU.
-* 'auto'   — the kernel iff the shapes are MXU-aligned (k a multiple of the
-             128 lane width, every mode a multiple of the 8 sublanes, order
-             >= 2) AND we are on real TPU hardware. Off-TPU the kernels
-             only run in interpret mode — a validation device, not a fast
-             path — so 'auto' stays on XLA there unless `force_pallas()` is
-             active (which tests use to prove the routing).
+batched `BatchedTTTensor` / `BatchedCPTensor` containers), raising a typed
+`FormatMismatchError` on incompatible shapes — and then EVERY execution
+resolves through a cached `repro.rp.plan.ExecutionPlan`: the dispatch
+matrix, backend policy, kernel/tile/pipeline selection and the unified
+cost ledger all live in `plan.py` (see its module docstring — or run
+`rp.explain(op, x)`, which returns the resolved plan with its rejected
+alternatives). This module keeps only input normalization and the
+context-local instrumentation.
 
 Instrumentation is CONTEXT-LOCAL: a `DispatchStats` object held in a
 `contextvars.ContextVar` carries the kernel-dispatch counter, the
@@ -52,29 +23,26 @@ parallel tests and nested contexts can't corrupt each other's counts, and
 
 Every dispatch additionally opens a `repro.obs` span (`rp.project` /
 `rp.reconstruct`, tagged family/structure/order/backend/pipeline with the
-RESOLVED route) — a shared no-op when telemetry is disabled, so the hot
-path pays one module-global read (gated by the obs/overhead bench row).
+RESOLVED route plus the `plan` id, so traces join to exact routes) — a
+shared no-op when telemetry is disabled, so the hot path pays one
+module-global read (gated by the obs/overhead bench row).
 """
 from __future__ import annotations
 
 import contextlib
 import contextvars
 import dataclasses
-import warnings
 
-import jax
 import jax.numpy as jnp
 
 from repro import obs
-from repro.core.baselines import GaussianRP, VerySparseRP
 from repro.core.cp_rp import CPRP
 from repro.core.formats import (STRUCT_TYPES, BatchedCPTensor,
-                                BatchedTTTensor, TTTensor, _prod)
+                                BatchedTTTensor, _prod)
 from repro.core.tt_rp import TTRP
 
+from . import plan as _plan
 from .protocol import FormatMismatchError, RPOperator
-
-_BACKENDS = ("auto", "pallas", "xla")
 
 
 @dataclasses.dataclass
@@ -179,30 +147,6 @@ def dispatch_breakdown() -> dict:
     return dict(_STATS.get().breakdown)
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
-# operator class -> family tag for the breakdown/span instrumentation;
-# third-party registered families fall back to their lowercased class name
-_FAMILY_BY_TYPE = {TTRP: "tt", CPRP: "cp", GaussianRP: "gaussian",
-                   VerySparseRP: "sparse"}
-
-
-def _family_tag(op) -> str:
-    for cls, name in _FAMILY_BY_TYPE.items():
-        if isinstance(op, cls):
-            return name
-    return type(op).__name__.lower()
-
-
-def _order_tag(op) -> int:
-    try:
-        return int(op.order)
-    except (AttributeError, TypeError):
-        return len(tuple(op.in_dims))
-
-
 def count_kernel_dispatch(family: str = "extern", structure: str = "extern",
                           order: int = 0) -> None:
     """Record one Pallas kernel dispatch on the context-local stats.
@@ -217,25 +161,6 @@ def count_kernel_dispatch(family: str = "extern", structure: str = "extern",
     'pallas', 0), keeping the kernel_calls == sum-of-pallas-rows invariant.
     """
     _STATS.get().record(family, structure, "pallas", int(order))
-
-
-def _mxu_aligned(op) -> bool:
-    dims = op.in_dims
-    return (op.k % 128 == 0 and len(dims) >= 2
-            and all(d % 8 == 0 for d in dims))
-
-
-def _use_kernel(backend: str, *, supported: bool, aligned: bool) -> bool:
-    if backend not in _BACKENDS:
-        raise ValueError(f"unknown backend {backend!r}; expected {_BACKENDS}")
-    if not supported:
-        # even for backend='pallas': unsupported operators take einsum
-        return False
-    if backend == "pallas":
-        return True
-    if backend == "xla":
-        return False
-    return aligned and (_on_tpu() or _STATS.get().force_pallas)
 
 
 def _coerce_dense(op: RPOperator, x: jnp.ndarray) -> jnp.ndarray:
@@ -294,44 +219,22 @@ def _check_struct_dims(op: RPOperator, x) -> None:
             f"in_dims {tuple(op.in_dims)}")
 
 
-def _kernel_order_ok(n: int) -> bool:
-    # local import: repro.kernels is deliberately not a module-level dep
-    from repro.kernels import kernel_order_supported
-    return kernel_order_supported(n)
-
-
-def _check_pipeline(pipeline: str) -> None:
-    # local import: repro.kernels is deliberately not a module-level dep
-    from repro.kernels import PIPELINES
-    if pipeline not in PIPELINES:
-        raise ValueError(f"unknown pipeline {pipeline!r}; expected "
-                         f"{PIPELINES}")
+def _run_planned(span_name: str, eplan, op, x) -> jnp.ndarray:
+    """Record one dispatch on the context stats and execute the plan."""
+    _STATS.get().record(eplan.family, eplan.structure, eplan.route,
+                        eplan.order)
+    with obs.span(span_name, family=eplan.family, structure=eplan.structure,
+                  order=eplan.order, backend=eplan.route,
+                  pipeline=eplan.pipeline, plan=eplan.plan_id):
+        return _plan.execute_plan(eplan, op, x)
 
 
 def _project_dense(op: RPOperator, x: jnp.ndarray, backend: str,
                    pipeline: str = "serial") -> jnp.ndarray:
     xt = _coerce_dense(op, x)
-    is_tn = isinstance(op, (TTRP, CPRP))
-    n = op.order if is_tn else 0
-    supported = is_tn and _kernel_order_ok(n) and xt.ndim >= n
-    use = _use_kernel(backend, supported=supported, aligned=_mxu_aligned(op))
-    route = "pallas" if use else "xla"
-    order = _order_tag(op)
-    _STATS.get().record(_family_tag(op), "dense", route, order)
-    with obs.span("rp.project", family=_family_tag(op), structure="dense",
-                  order=order, backend=route, pipeline=pipeline):
-        if use:
-            from repro.kernels import ops as kops  # local: avoids cycle
-            interpret = not _on_tpu()
-            kern = (kops.tt_project if isinstance(op, TTRP)
-                    else kops.cp_project)
-            if xt.ndim <= n + 1:  # single input/1-D batch: native batch axis
-                return kern(op, xt, interpret=interpret, pipeline=pipeline)
-            batch = xt.shape[:-n]
-            flat = xt.reshape((-1,) + xt.shape[-n:])
-            return kern(op, flat, interpret=interpret,
-                        pipeline=pipeline).reshape(batch + (op.k,))
-        return op.project(xt)
+    eplan = _plan.plan_execution(op, _plan.dense_signature(op, xt),
+                                 backend=backend, pipeline=pipeline)
+    return _run_planned("rp.project", eplan, op, xt)
 
 
 def _project_struct(op: RPOperator, x, backend: str,
@@ -352,20 +255,9 @@ def _project_struct(op: RPOperator, x, backend: str,
                                   backend, pipeline)
         return _project_dense(op, full.reshape(-1), backend, pipeline)
     _check_struct_dims(op, x)
-    # local import: repro.kernels is deliberately not a module-level dep
-    from repro.kernels import struct as kstruct
-    supported = _kernel_order_ok(op.order)
-    use = _use_kernel(backend, supported=supported, aligned=_mxu_aligned(op))
-    route = "pallas" if use else "xla"
-    structure = ("tt" if isinstance(x, (TTTensor, BatchedTTTensor))
-                 else "cp")
-    _STATS.get().record(_family_tag(op), structure, route, op.order)
-    with obs.span("rp.project", family=_family_tag(op), structure=structure,
-                  order=op.order, backend=route, pipeline=pipeline):
-        if use:
-            return kstruct.struct_project(op, x, interpret=not _on_tpu(),
-                                          pipeline=pipeline)
-        return kstruct.struct_project(op, x, use_kernel=False)
+    eplan = _plan.plan_execution(op, _plan.struct_signature(op, x),
+                                 backend=backend, pipeline=pipeline)
+    return _run_planned("rp.project", eplan, op, x)
 
 
 def project(op: RPOperator, x, *, backend: str = "auto",
@@ -392,7 +284,7 @@ def project(op: RPOperator, x, *, backend: str = "auto",
     Returns the `(*batch, k)` sketch ((k,) for single structured inputs,
     (B, k) for batched containers).
     """
-    _check_pipeline(pipeline)
+    _plan.validate_pipeline(pipeline)
     if isinstance(x, STRUCT_TYPES):
         return _project_struct(op, x, backend, pipeline)
     return _project_dense(op, x, backend, pipeline)
@@ -409,47 +301,19 @@ def reconstruct(op: RPOperator, y: jnp.ndarray, *, chunk: int | None = None,
     whole batch, no vmap — and otherwise fall back to a vmap of the
     operator's einsum adjoint.
 
-    `chunk` precedence: `chunk` bounds the k-sized intermediate on the
-    EINSUM path only. The kernel route tiles k internally (the planner's
-    VMEM budget already bounds the intermediate), so when backend policy
-    selects a kernel, a user-supplied `chunk` is ignored — with a
-    `UserWarning`, since the caller asked for a memory bound the kernel
-    honors by different means. Pass `backend='xla'` to make `chunk`
-    authoritative.
+    `chunk` is part of the resolved plan, not a warning: the einsum route
+    honors it as the bound on the k-sized intermediate
+    (`plan.chunk_policy == 'honored'`); the kernel route records
+    `'folded'` — the planner's VMEM budget already tiles k, so the
+    requested bound is honored by the kernel's own k-tiling and no dense
+    (D, k) intermediate ever exists. Pass `backend='xla'` to make a
+    specific chunk value authoritative; `rp.explain(op, y,
+    kind='reconstruct', chunk=...)` shows the recorded policy.
     """
     y = jnp.asarray(y)
     if y.ndim < 1 or y.shape[-1] != op.k:
         raise FormatMismatchError(
             f"sketch shape {tuple(y.shape)} does not end in k = {op.k}")
-    is_tn = isinstance(op, (TTRP, CPRP))
-    supported = is_tn and _kernel_order_ok(op.order)
-    use = _use_kernel(backend, supported=supported, aligned=_mxu_aligned(op))
-    route = "pallas" if use else "xla"
-    order = _order_tag(op)
-    _STATS.get().record(_family_tag(op), "sketch", route, order)
-    with obs.span("rp.reconstruct", family=_family_tag(op),
-                  structure="sketch", order=order, backend=route,
-                  pipeline="serial"):
-        if use:
-            from repro.kernels import ops as kops  # local: avoids cycle
-            if chunk is not None:
-                warnings.warn(
-                    f"reconstruct(chunk={chunk}) routed to a Pallas kernel, "
-                    "which tiles k internally under its own VMEM budget; the "
-                    "chunk argument is ignored on this route. Pass "
-                    "backend='xla' to honor it on the einsum path.",
-                    UserWarning, stacklevel=2)
-            interpret = not _on_tpu()
-            kern = (kops.tt_reconstruct if isinstance(op, TTRP)
-                    else kops.cp_reconstruct)
-            if y.ndim <= 2:
-                return kern(op, y, interpret=interpret)
-            batch = y.shape[:-1]
-            out = kern(op, y.reshape(-1, op.k), interpret=interpret)
-            return out.reshape(batch + tuple(op.in_dims))
-        if y.ndim == 1:
-            return op.reconstruct(y, chunk=chunk)
-        batch = y.shape[:-1]
-        out = jax.vmap(lambda yy: op.reconstruct(yy, chunk=chunk))(
-            y.reshape(-1, op.k))
-        return out.reshape(batch + tuple(op.in_dims))
+    eplan = _plan.plan_execution(op, _plan.sketch_signature(op, y, chunk),
+                                 kind="reconstruct", backend=backend)
+    return _run_planned("rp.reconstruct", eplan, op, y)

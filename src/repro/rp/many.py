@@ -27,20 +27,18 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core.formats import (BatchedCPTensor, BatchedTTTensor, CPTensor,
-                                TTTensor, _prod, stack_ragged_cp,
-                                stack_ragged_tt)
+from repro.core.formats import (BatchedCPTensor, BatchedTTTensor, _prod,
+                                stack_ragged_cp, stack_ragged_tt)
 
 from .dispatch import project
+from .plan import pow2ceil as _pow2ceil
+from .plan import structure_tag
 from .protocol import FormatMismatchError, RPOperator
 
-
-def _pow2ceil(n: int, floor: int = 1) -> int:
-    """Smallest power of two >= max(n, floor)."""
-    out = 1
-    while out < max(int(n), floor):
-        out *= 2
-    return out
+# The bucketed shapes this module produces are EXACTLY what
+# `rp.plan.group_signature` predicts without materializing the batch: the
+# coalesced group key IS the plan-cache key, so the serve engine's
+# pre-planned ticks and this fan-out resolve the same cached ExecutionPlan.
 
 
 def _pad_batch_tt(xb: BatchedTTTensor, b_pad: int) -> BatchedTTTensor:
@@ -112,8 +110,7 @@ def project_many(op: RPOperator, inputs, *, backend: str = "auto",
             raise FormatMismatchError(
                 f"project_many got a {type(x).__name__}; batched containers "
                 "are already one dispatch — call rp.project directly")
-        tag = ("tt" if isinstance(x, TTTensor)
-               else "cp" if isinstance(x, CPTensor) else "dense")
+        tag = structure_tag(x)
         idxs, xs = groups.setdefault(tag, ([], []))
         idxs.append(i)
         xs.append(x)

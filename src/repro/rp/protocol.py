@@ -85,8 +85,9 @@ class ProjectorSpec:
         object.__setattr__(self, "dims", tuple(int(d) for d in self.dims))
         if self.k <= 0:
             raise ValueError(f"k must be positive, got {self.k}")
-        if self.backend not in ("auto", "pallas", "xla"):
-            raise ValueError(f"unknown backend {self.backend!r}")
+        # local import: plan.py imports ProjectorSpec from this module
+        from .plan import validate_backend
+        validate_backend(self.backend)
 
     @property
     def input_size(self) -> int:

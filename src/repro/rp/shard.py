@@ -110,6 +110,13 @@ def project_sharded(op, x, *, mesh, spec: P | None = None,
             f"bucket count {x.shape[0]} is not divisible by mesh axes "
             f"{axes} (size {size}); pass a spec that divides it "
             "(bucket_pspec picks the largest valid prefix)")
+    # per-shard plan reuse: every shard body dispatches the SAME local
+    # shape, so resolving the plan for one shard here means every traced
+    # body (and every re-trace at this shape) is a plan-cache hit
+    from .plan import StructureSig, plan_execution
+    plan_execution(op, StructureSig(structure="dense",
+                                    batch=x.shape[0] // size),
+                   backend=backend)
 
     def body(o, xl):
         return project(o, xl, backend=backend)
@@ -134,6 +141,11 @@ def reconstruct_sharded(op, y, *, mesh, spec: P | None = None,
         raise ValueError(
             f"bucket count {y.shape[0]} is not divisible by mesh axes "
             f"{axes} (size {size}); pass a spec that divides it")
+    # per-shard plan reuse (see project_sharded): one resolve, N shard hits
+    from .plan import StructureSig, plan_execution
+    plan_execution(op, StructureSig(structure="sketch",
+                                    batch=y.shape[0] // size),
+                   kind="reconstruct", backend=backend)
 
     def body(o, yl):
         return reconstruct(o, yl, backend=backend)

@@ -26,19 +26,10 @@ import dataclasses
 from collections import deque
 from typing import Any
 
-from repro.core.formats import CPTensor, TTTensor
 from repro.rp import ProjectorSpec
+from repro.rp.plan import structure_tag  # noqa: F401  (lane key = plan tag)
 
 from .config import ServeConfig
-
-
-def structure_tag(payload) -> str:
-    """'tt' | 'cp' | 'dense' — the lane-splitting structure of a payload."""
-    if isinstance(payload, TTTensor):
-        return "tt"
-    if isinstance(payload, CPTensor):
-        return "cp"
-    return "dense"
 
 
 @dataclasses.dataclass

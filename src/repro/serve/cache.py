@@ -9,6 +9,13 @@ needs: no weights on disk, no versioned artifacts, just specs.
 
 `CacheStats` records hits / misses / evictions and the cumulative
 regeneration time so the serving report can show what the cache saved.
+
+Plans ride along: `plan_for(op, payloads)` resolves the `ExecutionPlan` a
+coalesced tick will dispatch (via `rp.group_signature` — the same bucketed
+shape `project_many` produces) and pins it next to the operator, so a
+serve tick executes pre-planned and the engine can tag its span with the
+`plan_id`. The plan itself lives in the rp layer's global plan cache;
+pinning here only keeps it warm for the cached operators' lifetime.
 """
 from __future__ import annotations
 
@@ -58,6 +65,7 @@ class OperatorCache:
         self.capacity = capacity
         self.stats = CacheStats()
         self._entries: "OrderedDict[tuple, RPOperator]" = OrderedDict()
+        self._plans: dict = {}   # plan_id -> ExecutionPlan, pinned warm
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -92,6 +100,27 @@ class OperatorCache:
     def keys(self) -> list[tuple]:
         """Cached (spec, seed) keys, least-recently-used first."""
         return list(self._entries)
+
+    def plan_for(self, op: RPOperator, payloads, *, backend: str = "auto"):
+        """The `ExecutionPlan` a coalesced dispatch of `payloads` resolves.
+
+        Takes the ALREADY-FETCHED operator (never calls `get` — planning
+        must not perturb the hit/miss stats the serve report gates) and
+        the raw lane payloads; `rp.group_signature` computes the exact
+        bucketed shape `project_many` will dispatch, so the returned plan
+        is the one the tick's execution hits in the rp plan cache. Pinned
+        in `plans` by id so repeat lanes stay warm.
+        """
+        from repro import rp
+        eplan = rp.plan_execution(
+            op, rp.group_signature(op, payloads), backend=backend)
+        self._plans[eplan.plan_id] = eplan
+        return eplan
+
+    @property
+    def plans(self) -> dict:
+        """plan_id -> pinned `ExecutionPlan` (see `plan_for`)."""
+        return dict(self._plans)
 
     # -- restart warm-up: the cache's contents as a manifest of specs -----
     def manifest(self) -> list[dict]:

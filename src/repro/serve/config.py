@@ -12,8 +12,6 @@ from __future__ import annotations
 
 import dataclasses
 
-_BACKENDS = ("auto", "pallas", "xla")
-
 
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
@@ -63,9 +61,11 @@ class ServeConfig:
         if self.cache_capacity < 1:
             raise ValueError(f"cache_capacity must be >= 1, got "
                              f"{self.cache_capacity}")
-        if self.backend not in _BACKENDS:
-            raise ValueError(f"unknown backend {self.backend!r}; expected "
-                             f"{_BACKENDS}")
+        # the one backend check lives in the plan layer (local import:
+        # serve must stay importable without pulling rp eagerly at
+        # class-definition time)
+        from repro.rp.plan import validate_backend
+        validate_backend(self.backend)
         if self.query_tile < 1:
             raise ValueError(f"query_tile must be >= 1, got "
                              f"{self.query_tile}")

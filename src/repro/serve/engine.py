@@ -77,8 +77,14 @@ class SketchServer:
         with obs.span("serve.tick", batch=len(batch),
                       family=key.spec.family, k=key.spec.k,
                       structure=key.structure, seed=key.seed,
-                      tick=self.ticks):
+                      tick=self.ticks) as sp:
             op = self.cache.get(key.spec, key.seed)
+            # pre-plan the coalesced dispatch: same group signature
+            # project_many buckets on, so the tick executes pre-planned
+            # (a plan-cache hit) and the trace joins to the exact route
+            eplan = self.cache.plan_for(op, [r.payload for r in batch],
+                                        backend=self.cfg.backend)
+            sp.set(plan=eplan.plan_id, route=eplan.route)
             mon = obs.get_distortion()
             x_norm2 = None
             if mon is not None:

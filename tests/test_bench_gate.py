@@ -9,7 +9,7 @@ from benchmarks.check_regression import check, main
 
 def _record():
     return {
-        "schema": "bench_rp/v8",
+        "schema": "bench_rp/v9",
         "sections": {
             "timing": [
                 {"name": "time/batched/tt/project/B=16", "us_per_call": 10.0,
@@ -42,6 +42,12 @@ def _record():
                 {"name": "obs/overhead", "us_per_call": 1.0,
                  "derived": {"overhead_frac": 0.00003, "disabled_ns": 800,
                              "ref_us": 30000.0, "budget": 0.05}},
+                {"name": "plan/cache", "us_per_call": 500.0,
+                 "derived": {"plan_builds": 7, "plan_hits": 21,
+                             "hit_rate": 0.75}},
+                {"name": "plan/ledger/wire", "us_per_call": 0.0,
+                 "derived": {"declared_wire_bytes": 8192,
+                             "hlo_allreduce_bytes": 8192}},
             ],
             "smoke": [
                 {"name": "smoke/tt", "us_per_call": 1.0, "derived": {"k": 64}},
@@ -62,7 +68,7 @@ def test_wall_clock_noise_is_not_gated():
 
 def test_schema_drift_fails():
     new = _record()
-    new["schema"] = "bench_rp/v9"
+    new["schema"] = "bench_rp/v10"
     assert any("schema drift" in e for e in check(new, _record()))
 
 
@@ -74,7 +80,7 @@ def test_required_row_prefixes_cover_struct_subsystem():
     telemetry obs/ rows — fails even if the baseline ALSO lost them
     (row-by-row diffing alone can't see that)."""
     for prefix in ("struct/", "time/order/", "shard/", "serve/", "ckpt/",
-                   "perf/", "obs/"):
+                   "perf/", "obs/", "plan/"):
         new = _record()
         new["sections"]["timing"] = [
             r for r in new["sections"]["timing"]
@@ -83,7 +89,7 @@ def test_required_row_prefixes_cover_struct_subsystem():
         assert any("required prefix" in e and prefix in e
                    for e in check(new, base))
     # records without a timing section (e.g. --only smoke) are not gated
-    smoke_only = {"schema": "bench_rp/v8",
+    smoke_only = {"schema": "bench_rp/v9",
                   "sections": {"smoke": _record()["sections"]["smoke"]}}
     assert not any("required prefix" in e
                    for e in check(smoke_only, copy.deepcopy(smoke_only)))
@@ -123,6 +129,21 @@ def test_launch_count_regression_fails_only_past_2x():
     worse["sections"]["timing"][0]["derived"]["launches_batched"] = 3
     errors = check(worse, base)
     assert any("launches_batched regressed 1 -> 3" in e for e in errors)
+
+
+def test_plan_builds_rides_the_launch_gate():
+    """plan_builds is gated like a launch count: a plan signature going
+    jit-unstable (every retrace re-planning) more than doubles builds and
+    must fail the diff; its vanishing must not evade the gate either."""
+    base = _record()
+    worse = copy.deepcopy(base)
+    worse["sections"]["timing"][10]["derived"]["plan_builds"] = 15
+    assert any("plan_builds regressed 7 -> 15" in e
+               for e in check(worse, base))
+    vanished = copy.deepcopy(base)
+    del vanished["sections"]["timing"][10]["derived"]["plan_builds"]
+    assert any("plan_builds" in e and "missing" in e
+               for e in check(vanished, base))
 
 
 def test_perf_speedup_band():

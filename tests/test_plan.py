@@ -1,0 +1,261 @@
+"""The plan/compile layer: `rp.plan_execution` and its LRU cache.
+
+Pins the PR's behavior bar from four sides:
+
+* cache identity — the same (spec, structure-sig, backend, pipeline)
+  resolves to exactly ONE built plan across eager calls, jit retraces, and
+  the project / project_many / serve-group paths; rank or dims drift is a
+  MISS that re-validates (a new plan, not a stale hit).
+* routing parity — `rp.explain` returns the plan the dispatch actually
+  runs: same route/ledger under force_pallas, rejected alternatives named
+  with reasons, chunk disposition recorded per route.
+* layering — `repro.rp.dispatch` no longer imports the kernels packages;
+  every kernel decision lives behind `plan_execution`/`execute_plan`.
+* `-O` safety — the centralized backend/pipeline/kind validation raises
+  typed ValueErrors (not asserts), so misuse still fails under `python -O`.
+"""
+import os
+import pathlib
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro import rp
+from repro.core import theory
+
+KEY = jax.random.PRNGKey(0)
+DIMS = (8, 16, 16)
+
+
+def _op(family="tt", k=128, dims=DIMS, rank=2, seed=0):
+    return rp.make_projector(
+        rp.ProjectorSpec(family=family, k=k, dims=dims, rank=rank),
+        jax.random.fold_in(KEY, seed))
+
+
+# ---------------------------------------------------------------------------
+# cache identity
+# ---------------------------------------------------------------------------
+
+def test_one_build_across_eager_jit_and_retrace():
+    op = _op()
+    xb = jax.random.normal(jax.random.fold_in(KEY, 1), (8,) + DIMS)
+    rp.clear_plan_cache()
+    stats = rp.plan_cache_stats()
+    rp.project(op, xb)                              # eager: the one build
+    assert stats.builds == 1 and stats.hits == 0
+    jax.jit(lambda a: rp.project(op, a))(xb)        # first trace
+    jax.jit(lambda a: rp.project(op, a))(xb)        # fresh jit: RE-trace
+    rp.project(op, xb)
+    assert stats.builds == 1, "a jit retrace rebuilt an identical plan"
+    assert stats.hits >= 3
+
+
+def test_one_build_across_project_many_and_serve_group():
+    """The serve path (`group_signature` + `plan_execution`, what
+    `OperatorCache.plan_for` runs) and the `project_many` bucketed dispatch
+    key on the SAME padded signature — one build serves both."""
+    op = _op(seed=2)
+    xs = [jax.random.normal(jax.random.fold_in(KEY, 10 + i), DIMS)
+          for i in range(4)]
+    rp.clear_plan_cache()
+    stats = rp.plan_cache_stats()
+    eplan = rp.plan_execution(op, rp.group_signature(op, xs))
+    assert stats.builds == 1
+    rp.project_many(op, xs)
+    assert stats.builds == 1, (
+        "project_many rebuilt the plan the serve group already resolved")
+    assert stats.hits >= 1
+    # and the many-path really did run THAT plan's shape: pow2-bucketed
+    assert eplan.batch == 8     # 4 payloads pad to the batch floor
+
+
+def test_rank_and_dims_drift_miss_and_revalidate():
+    spec = rp.ProjectorSpec(family="tt", k=128, dims=DIMS, rank=2)
+    sig = rp.StructureSig(batch=8)
+    rp.clear_plan_cache()
+    stats = rp.plan_cache_stats()
+    p0 = rp.plan_execution(spec, sig)
+    assert stats.builds == 1
+    p_rank = rp.plan_execution(
+        rp.ProjectorSpec(family="tt", k=128, dims=DIMS, rank=4), sig)
+    assert stats.builds == 2 and p_rank.plan_id != p0.plan_id
+    p_dims = rp.plan_execution(
+        rp.ProjectorSpec(family="tt", k=128, dims=(16, 16, 16), rank=2), sig)
+    assert stats.builds == 3 and p_dims.plan_id != p0.plan_id
+    # the original key still hits — drift added entries, it did not evict
+    assert rp.plan_execution(spec, sig) is p0
+    assert stats.hits == 1
+
+
+def test_routing_environment_is_part_of_the_key():
+    """force_pallas() flips the auto route, so it must flip the cache key —
+    a plan cached under one routing environment never leaks into another."""
+    op = _op(k=128, dims=(8, 128, 64), seed=3)     # MXU-aligned
+    x = jax.random.normal(jax.random.fold_in(KEY, 4), (8, 128, 64))
+    rp.clear_plan_cache()
+    plain = rp.explain(op, x)
+    with rp.force_pallas():
+        forced = rp.explain(op, x)
+    assert (plain.route, forced.route) == ("xla", "pallas")
+    assert plain.plan_id != forced.plan_id
+    assert rp.plan_cache_stats().builds == 2
+
+
+# ---------------------------------------------------------------------------
+# routing parity + ledger
+# ---------------------------------------------------------------------------
+
+def test_explain_matches_dispatch_and_names_rejections():
+    op = _op(k=128, dims=(8, 128, 64), seed=5)
+    x = jax.random.normal(jax.random.fold_in(KEY, 6), (8, 128, 64))
+    ep = rp.explain(op, x)                          # auto, off-TPU -> xla
+    assert ep.route == "xla" and ep.kernel == "einsum"
+    assert any(route == "pallas" and "force_pallas" in reason
+               for route, reason in ep.rejected)
+    before = rp.kernel_call_count()
+    with rp.force_pallas():
+        ep_k = rp.explain(op, x)
+        rp.project(op, x)                           # the dispatch itself
+    assert ep_k.route == "pallas" and ep_k.tiles is not None
+    assert rp.kernel_call_count() == before + 1     # explain ran nothing
+    text = ep.describe()
+    assert ep.plan_id in text and "rejected alternatives:" in text
+
+
+def test_cost_ledger_is_the_theory_module():
+    """plan.cost reads `repro.core.theory` — bit-identical, so benchmark
+    ratios built from plan costs equal the paper formulas exactly."""
+    b = 8
+    ep = rp.plan_execution(
+        rp.ProjectorSpec(family="tt", k=128, dims=DIMS, rank=2),
+        rp.StructureSig(batch=b))
+    assert ep.cost.flops == b * theory.flops_project_dense_tt(128, DIMS, 2)
+    assert ep.cost.params == theory.params_tt_rp(128, DIMS, 2)
+    assert ep.cost.var_factor == theory.variance_factor_tt(len(DIMS), 2)
+    es = rp.plan_execution(
+        rp.ProjectorSpec(family="tt", k=128, dims=DIMS, rank=2),
+        rp.StructureSig(structure="cp", batch=b, in_rank=3))
+    assert es.cost.flops == b * theory.flops_project_struct(
+        "tt", "cp", 128, DIMS, 2, 3)
+    assert es.carry_bytes == theory.mem_carry_struct(128, 2, 3, batch=b)
+
+
+def test_struct_plan_requires_tn_operator():
+    spec = rp.ProjectorSpec(family="gaussian", k=64, dims=DIMS)
+    with pytest.raises(ValueError, match="tt/cp operators only"):
+        rp.plan_execution(spec, rp.StructureSig(structure="tt", batch=2,
+                                                in_rank=2))
+
+
+def test_reconstruct_chunk_policy_per_route():
+    op = _op(seed=7)
+    y = jax.random.normal(jax.random.fold_in(KEY, 8), (128,))
+    pk = rp.explain(op, y, kind="reconstruct", backend="pallas", chunk=16)
+    px = rp.explain(op, y, kind="reconstruct", backend="xla", chunk=16)
+    assert (pk.chunk_policy, px.chunk_policy) == ("folded", "honored")
+    assert pk.chunk == px.chunk == 16
+    # project plans carry no chunk disposition
+    assert rp.explain(op, jax.random.normal(KEY, DIMS)).chunk_policy == "n/a"
+
+
+def test_obs_report_explain_cli():
+    from repro.launch.obs_report import explain_plan, main
+    text = explain_plan("family=tt,k=128,dims=8x16x16,rank=2,batch=8")
+    assert "rejected alternatives:" in text and "route" in text
+    assert main(["--explain",
+                 "family=cp,k=128,dims=8x16x16,rank=2,batch=8,"
+                 "backend=pallas,pipeline=double"]) == 0
+    with pytest.raises(ValueError, match="missing required key"):
+        explain_plan("family=tt,k=128")
+    with pytest.raises(ValueError, match="key=value"):
+        explain_plan("family")
+
+
+# ---------------------------------------------------------------------------
+# layering
+# ---------------------------------------------------------------------------
+
+def test_dispatch_no_longer_imports_kernels():
+    """The PR's layering bar: every kernels.* decision is behind the plan
+    layer — `repro.rp.dispatch` contains NO import of the kernels
+    packages (`kernels.ops`, `kernels.struct`, or `repro.kernels`)."""
+    import repro.rp.dispatch as dispatch
+    src = pathlib.Path(dispatch.__file__.replace(".pyc", ".py")).read_text()
+    offending = [
+        line for line in src.splitlines()
+        if line.lstrip().startswith(("import ", "from "))
+        and "kernels" in line.split("#")[0]
+    ]
+    assert not offending, f"dispatch imports kernels again: {offending}"
+
+
+def test_project_numerics_unchanged_across_routes():
+    """The refactor moved the route decision, not the math: both routes
+    still agree (the old dispatch acceptance bar, re-pinned on the plan
+    path)."""
+    op = _op(seed=9)
+    xb = jax.random.normal(jax.random.fold_in(KEY, 11), (4,) + DIMS)
+    y_x = rp.project(op, xb, backend="xla")
+    y_p = rp.project(op, xb, backend="pallas")
+    np.testing.assert_allclose(np.asarray(y_x), np.asarray(y_p),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# -O safety of the centralized validation
+# ---------------------------------------------------------------------------
+
+def test_plan_validation_survives_python_O():
+    code = """
+import jax, jax.numpy as jnp
+from repro import rp
+for bad, msg in (("cuda", "unknown backend"),):
+    try:
+        rp.validate_backend(bad)
+    except ValueError as e:
+        assert msg in str(e), e
+    else:
+        raise SystemExit("validate_backend not caught under -O")
+try:
+    rp.validate_pipeline("triple")
+except ValueError as e:
+    assert "unknown pipeline" in str(e), e
+else:
+    raise SystemExit("validate_pipeline not caught under -O")
+op = rp.make_projector(
+    rp.ProjectorSpec(family="tt", k=64, dims=(4, 8), rank=2),
+    jax.random.PRNGKey(0))
+x = jnp.ones((4, 8))
+try:
+    rp.project(op, x, pipeline="doble")
+except ValueError as e:
+    assert "unknown pipeline" in str(e), e
+else:
+    raise SystemExit("project pipeline typo not caught under -O")
+try:
+    rp.plan_execution(op, kind="estimate")
+except ValueError as e:
+    assert "unknown kind" in str(e), e
+else:
+    raise SystemExit("plan kind typo not caught under -O")
+try:
+    rp.plan_execution(op, rp.StructureSig(structure="dense"),
+                      kind="reconstruct")
+except ValueError as e:
+    assert "structure='sketch'" in str(e), e
+else:
+    raise SystemExit("reconstruct sig mismatch not caught under -O")
+print("O_SAFE_OK")
+"""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(repo, "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    res = subprocess.run([sys.executable, "-O", "-c", code], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert res.returncode == 0 and "O_SAFE_OK" in res.stdout, (
+        res.stdout, res.stderr)

@@ -297,31 +297,28 @@ def test_auto_routes_through_pallas_kernel_when_aligned():
                                rtol=2e-4, atol=2e-4)
 
 
-def test_reconstruct_chunk_warns_on_kernel_route():
-    """`chunk=` bounds the einsum path's intermediate; when backend policy
-    picks a kernel (which tiles k internally) the argument is ignored WITH
-    a UserWarning, and the result still matches the chunked einsum path."""
+def test_reconstruct_chunk_is_planned_not_warned():
+    """`chunk=` bounds the einsum path's intermediate; the plan RECORDS how
+    each route handles it — the kernel route tiles k internally so chunk is
+    FOLDED into the tiling (plan.chunk_policy='folded'), the einsum route
+    honors it ('honored') — and no route warns: chunk handling is part of
+    the plan, not a dispatch-time surprise."""
     dims = (8, 128, 64)
     op = _op("tt", k=128, dims=dims)
     y = jax.random.normal(jax.random.PRNGKey(30), (128,))
     with warnings.catch_warnings(record=True) as w:
         warnings.simplefilter("always")
         r_kern = rp.reconstruct(op, y, chunk=32, backend="pallas")
-    assert any("chunk" in str(x.message) and "ignored" in str(x.message)
-               for x in w if issubclass(x.category, UserWarning))
-    r_xla = rp.reconstruct(op, y, chunk=32, backend="xla")
-    np.testing.assert_allclose(np.asarray(r_kern), np.asarray(r_xla),
-                               rtol=2e-4, atol=2e-4)
-    # the einsum route honors chunk silently
-    with warnings.catch_warnings(record=True) as w:
-        warnings.simplefilter("always")
-        rp.reconstruct(op, y, chunk=32, backend="xla")
-    assert not any(issubclass(x.category, UserWarning) for x in w)
-    # no chunk, kernel route: no warning
-    with warnings.catch_warnings(record=True) as w:
-        warnings.simplefilter("always")
+        r_xla = rp.reconstruct(op, y, chunk=32, backend="xla")
         rp.reconstruct(op, y, backend="pallas")
     assert not any(issubclass(x.category, UserWarning) for x in w)
+    np.testing.assert_allclose(np.asarray(r_kern), np.asarray(r_xla),
+                               rtol=2e-4, atol=2e-4)
+    # the plan records the chunk disposition per route
+    pk = rp.explain(op, y, kind="reconstruct", backend="pallas", chunk=32)
+    assert (pk.route, pk.chunk, pk.chunk_policy) == ("pallas", 32, "folded")
+    px = rp.explain(op, y, kind="reconstruct", backend="xla", chunk=32)
+    assert (px.route, px.chunk, px.chunk_policy) == ("xla", 32, "honored")
 
 
 def test_auto_skips_kernel_when_unaligned():
